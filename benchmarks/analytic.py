@@ -1,0 +1,200 @@
+"""Analytic cost model for the roofline terms.
+
+Why analytic: XLA's ``compiled.cost_analysis()`` counts while-loop (scan)
+bodies ONCE — with scan-over-layers every per-layer FLOP/byte is undercounted
+by the trip count (verified experimentally; see EXPERIMENTS.md §Dry-run
+caveats).  The FLOP formulas here are the paper's own accounting (App. A),
+which this repo reproduces against Table 4 to the cent, extended to the other
+mixer families.  Bytes are a standard HBM-traffic model (params + optimizer
++ activations + caches).  Collective bytes stay HLO-derived (with trip-count
+correction) in repro.launch.dryrun.
+
+All numbers are GLOBAL (divide by chips for per-device).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeCfg
+
+
+def _attn_flops(cfg, B, T, Tkv, window=0):
+    a = cfg.attention
+    h = cfg.d_model
+    eff_kv = min(Tkv, window) if window else Tkv
+    if a.kind == "mla":
+        m = a.mla
+        qd = m.nope_head_dim + m.rope_head_dim
+        f = 2 * B * T * h * (a.n_heads * qd)                      # q proj
+        f += 2 * B * T * h * (m.kv_lora_rank + m.rope_head_dim)   # down kv
+        f += 2 * B * Tkv * m.kv_lora_rank * a.n_heads * (
+            m.nope_head_dim + m.v_head_dim)                        # up k/v
+        f += 2 * B * a.n_heads * T * eff_kv * (qd + m.v_head_dim)  # attn
+        f += 2 * B * T * (a.n_heads * m.v_head_dim) * h            # out
+        return f
+    d = a.d_head
+    f = 2 * B * T * h * (2 * a.n_heads * d + 2 * a.n_kv_heads * d)  # QKVO
+    f += 4 * B * a.n_heads * T * eff_kv * d                         # attn
+    return f
+
+
+def _mosa_flops(cfg, B, T, Tkv):
+    """Hybrid layer: paper's per-head formula + the dense/local side."""
+    m = cfg.mosa
+    h = cfg.d_model
+    d = m.d_head
+    k = min(m.k_fixed or max(T // m.sparsity, m.min_k), Tkv)
+    f = m.n_mosa_heads * B * (8 * h * d * k + 4 * d * k * k +
+                              2 * h * T + d * k)
+    if m.n_dense_heads:
+        eff = min(Tkv, m.local_window) if m.local_window else Tkv
+        f += 2 * B * T * h * (4 * m.n_dense_heads * d)
+        f += 4 * B * m.n_dense_heads * T * eff * d
+    return f
+
+
+def _ffn_flops(cfg, B, T, kind):
+    h = cfg.d_model
+    if kind == "dense":
+        mult = 6 if cfg.ffn_act == "swiglu" else 4
+        return mult * B * T * h * cfg.d_ff
+    if kind == "moe":
+        c = cfg.moe
+        f = 2 * B * T * h * c.n_experts                     # router
+        f += 6 * B * T * c.top_k * h * c.d_expert           # active experts
+        if c.n_shared_experts:
+            d_sh = (c.d_shared or c.d_expert) * c.n_shared_experts
+            f += 6 * B * T * h * d_sh
+        return f
+    return 0
+
+
+def _mamba_flops(cfg, B, T):
+    c = cfg.mamba
+    h = cfg.d_model
+    di = c.expand * h
+    dr = c.dt_rank or -(-h // 16)
+    ds = c.d_state
+    f = 2 * B * T * h * 2 * di                 # in_proj
+    f += 2 * B * T * di * c.d_conv             # conv
+    f += 2 * B * T * di * (dr + 2 * ds)        # x_proj
+    f += 2 * B * T * dr * di                   # dt_proj
+    f += 6 * B * T * di * ds                   # selective scan
+    f += 2 * B * T * di * h                    # out_proj
+    return f
+
+
+def _xlstm_flops(cfg, B, T, kind):
+    x = cfg.xlstm
+    h = cfg.d_model
+    H = cfg.attention.n_heads
+    if kind == "mlstm":
+        di = int(x.proj_factor_mlstm * h)
+        dh = di // H
+        f = 2 * B * T * h * 2 * di             # up
+        f += 2 * B * T * di * x.conv1d_kernel
+        f += 3 * 2 * B * T * di * di           # q k v
+        f += 6 * B * T * H * dh * dh           # matrix memory update + read
+        f += 2 * B * T * di * h                # down
+        return f
+    d_up = int(x.proj_factor_slstm * h)
+    dh = h // H
+    f = 2 * B * T * h * 4 * h                  # input gates
+    f += 2 * B * T * 4 * H * dh * dh           # recurrent gates
+    f += 2 * B * T * h * d_up + 2 * B * T * (d_up // 2) * h
+    return f
+
+
+def model_flops(cfg: ModelConfig, B: int, T: int, Tkv: Optional[int] = None,
+                train: bool = False) -> float:
+    """Forward FLOPs of one step (multiply externally for bwd/remat)."""
+    Tkv = Tkv if Tkv is not None else T
+    total = 0.0
+    for spec in cfg.resolved_pattern():
+        if spec.mixer == "attn":
+            total += _attn_flops(cfg, B, T, Tkv)
+        elif spec.mixer == "attn_local":
+            total += _attn_flops(cfg, B, T, Tkv,
+                                 window=cfg.attention.window or 1024)
+        elif spec.mixer == "mosa":
+            total += _mosa_flops(cfg, B, T, Tkv)
+        elif spec.mixer == "mamba":
+            total += _mamba_flops(cfg, B, T)
+        elif spec.mixer in ("mlstm", "slstm"):
+            total += _xlstm_flops(cfg, B, T, spec.mixer)
+        total += _ffn_flops(cfg, B, T, spec.ffn)
+    total += 2 * B * T * cfg.d_model * cfg.vocab       # unembed
+    if train:
+        mult = 3 + (1 if cfg.remat != "none" else 0)   # fwd + 2x bwd (+remat)
+        total *= mult
+    return total
+
+
+def param_counts(cfg: ModelConfig):
+    """(total_params, active_params) — active scales experts by top_k/E."""
+    import jax
+    from repro.nn.module import init_shapes
+    from repro.nn.transformer import TransformerLM
+    shapes = init_shapes(TransformerLM(cfg))
+    total = active = 0.0
+    scale = (cfg.moe.top_k / cfg.moe.n_experts) if cfg.moe else 1.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        is_expert = (cfg.moe is not None and leaf.ndim >= 3 and
+                     any(k in ("w_gate", "w_up", "w_down") for k in keys))
+        active += n * (scale if is_expert else 1.0)
+    return total, active
+
+
+def cache_bytes(cfg: ModelConfig, B: int, S: int) -> float:
+    """Total serving-cache bytes at context length S (analytic)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.nn.transformer import TransformerLM
+    model = TransformerLM(cfg)
+    shapes = jax.eval_shape(lambda: model.init_cache(B, S, jnp.bfloat16))
+    return float(sum(l.size * l.dtype.itemsize
+                     for l in jax.tree.leaves(shapes)))
+
+
+@dataclasses.dataclass
+class CellCost:
+    flops_global: float
+    bytes_global: float
+    model_flops: float       # 6·N_active·D (2·N_active·D inference)
+    n_params: float
+    n_active: float
+
+
+def cell_cost(cfg: ModelConfig, shape: ShapeCfg) -> CellCost:
+    B, T = shape.global_batch, shape.seq_len
+    n_total, n_active = param_counts(cfg)
+    pbytes = n_total * (2 if cfg.param_dtype == "bfloat16" else 4)
+    abytes = 2 if cfg.compute_dtype == "bfloat16" else 4
+
+    if shape.kind == "train":
+        flops = model_flops(cfg, B, T, train=True)
+        # params: read fwd + read bwd + read remat-fwd; grads w+r;
+        # adam: m,v read+write fp32 + param write
+        bytes_ = pbytes * 3 + n_total * (4 + 4) + n_total * (16 + 16 + 2)
+        # activations: ~8 residual-sized r/w per layer (norms, mixer, ffn)
+        bytes_ += cfg.n_layers * 8 * B * T * cfg.d_model * abytes
+        mflops = 6 * n_active * B * T
+    elif shape.kind == "prefill":
+        flops = model_flops(cfg, B, T)
+        bytes_ = pbytes + cache_bytes(cfg, B, T)
+        bytes_ += cfg.n_layers * 6 * B * T * cfg.d_model * abytes
+        mflops = 2 * n_active * B * T
+    else:  # decode: one token against a T-long cache
+        flops = model_flops(cfg, B, 1, Tkv=T)
+        cb = cache_bytes(cfg, B, T)
+        bytes_ = pbytes + cb          # read all params + touch the cache
+        mflops = 2 * n_active * B
+    return CellCost(flops, bytes_, mflops, n_total, n_active)

@@ -1,0 +1,38 @@
+"""Shared benchmark utilities: timed jit calls + short-training runs."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def time_jit(fn, *args, iters: int = 5, warmup: int = 2):
+    """Median wall time (us) of a jitted call on this host."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def short_train(model_cfg, steps: int = 40, seq: int = 128, batch: int = 8,
+                lr: float = 3e-3, seed: int = 0):
+    """Run a short training; returns (final_loss, final_ppl, s_per_step)."""
+    from repro.launch.train import TrainConfig, Trainer
+    cfg = TrainConfig(arch="-", seq_len=seq, global_batch=batch, steps=steps,
+                      lr=lr, warmup=max(steps // 8, 1), seed=seed,
+                      log_every=max(steps - 1, 1))
+    tr = Trainer(cfg, model_cfg=model_cfg)
+    t0 = time.perf_counter()
+    _, _, hist = tr.run(install_signals=False)
+    wall = time.perf_counter() - t0
+    last = hist[-1]
+    return last["loss"], last["ppl"], wall / steps

@@ -1,0 +1,94 @@
+"""Assemble EXPERIMENTS.md §Dry-run and §Roofline from dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report \
+        --single experiments/dryrun/16x16 --multi experiments/dryrun/2x16x16
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.roofline import analyze_cell, load_dir
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt_b(b):
+    for unit, div in (("GiB", 2**30), ("MiB", 2**20), ("KiB", 2**10)):
+        if b >= div:
+            return f"{b / div:.1f} {unit}"
+    return f"{b:.0f} B"
+
+
+def dryrun_table(recs):
+    lines = [
+        "| arch | shape | kind | compile (s) | mem/dev | HLO coll ops "
+        "| coll bytes/dev (corrected) | top collective | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"],
+                                         SHAPE_ORDER.index(r["shape"]))):
+        coll = r["collective_bytes_per_device"]
+        kinds = {k: v for k, v in coll.items()
+                 if not k.startswith("_") and k != "total"}
+        top = max(kinds, key=kinds.get) if kinds else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r['compile_s']:.1f} "
+            f"| {_fmt_b(r['memory'].get('total_per_device', 0))} "
+            f"| {coll.get('_ops', 0)} | {_fmt_b(coll['total'])} "
+            f"| {top} | {r.get('note', '')[:40]} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs):
+    rows = [analyze_cell(r) for r in recs]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    lines = [
+        "| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant "
+        "| MODEL_FLOPS | useful ratio | roofline frac | next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} "
+            f"| {r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} "
+            f"| **{r['dominant']}** "
+            f"| {r.get('model_flops', 0):.2e} "
+            f"| {r.get('useful_ratio', float('nan')):.2f} "
+            f"| {r.get('roofline_frac', float('nan')):.3f} "
+            f"| {r['advice'].split(':')[0]} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--single", default="experiments/dryrun/16x16")
+    p.add_argument("--multi", default="experiments/dryrun/2x16x16")
+    p.add_argument("--out", default=None)
+    args = p.parse_args(argv)
+
+    parts = []
+    single = load_dir(args.single) if os.path.isdir(args.single) else []
+    multi = load_dir(args.multi) if os.path.isdir(args.multi) else []
+
+    parts.append("### Dry-run — single pod 16x16 (256 chips)\n")
+    parts.append(dryrun_table(single))
+    if multi:
+        parts.append("\n### Dry-run — multi-pod 2x16x16 (512 chips)\n")
+        parts.append(dryrun_table(multi))
+        ok = {(r["arch"], r["shape"]) for r in multi}
+        parts.append(f"\nmulti-pod cells compiled: {len(ok)}/40\n")
+    parts.append("\n### Roofline — single pod (the scored table)\n")
+    parts.append(roofline_table(single))
+    text = "\n".join(parts)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

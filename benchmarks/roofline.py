@@ -1,0 +1,163 @@
+"""Roofline analysis over the dry-run artifacts.
+
+Reads ``experiments/dryrun/<mesh>/<arch>__<shape>.json`` (written by
+repro.launch.dryrun) and derives, per cell:
+
+    t_compute = FLOPs_per_device / PEAK_FLOPS
+    t_memory  = bytes_per_device / HBM_BW
+    t_coll    = collective_bytes_per_device / LINK_BW
+
+(the per-device values come from the partitioned HLO, so dividing the global
+quantities by `chips` per the spec formula gives exactly these), plus the
+dominant term, MODEL_FLOPS = 6·N_active·D (2·N_active·D for inference), the
+usefulness ratio MODEL_FLOPS / HLO_FLOPs_global, and a one-line "what to do"
+note per bottleneck.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun/16x16]
+      [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # B/s
+LINK_BW = 50e9            # B/s per ICI link
+
+ADVICE = {
+    "compute": "raise arithmetic intensity: fuse, bigger per-chip batch, "
+               "bf16 everywhere — or accept (compute-bound is the goal)",
+    "memory": "cut HLO bytes: remat policy, fused attention (no logits "
+              "materialization), smaller fp32 surfaces, layout",
+    "collective": "reshard: fewer all-gathers (check fsdp prefetch), "
+                  "reduce-scatter grads, overlap collectives with compute, "
+                  "compress cross-pod grads",
+}
+
+
+def active_params(arch: str, shape_kind: str, model_name: str = "") -> float:
+    """6·N·D convention: N counts each MoE expert tensor at top_k/n_experts
+    of its size (active experts only) and includes everything else."""
+    import jax
+    from repro.configs.base import get_config
+    from repro.launch.dryrun import build_cfg
+    from repro.nn.module import init_shapes
+    from repro.nn.transformer import TransformerLM
+
+    shape_name = {"train": "train_4k", "prefill": "prefill_32k",
+                  "decode": "decode_32k"}[shape_kind]
+    cfg, _, _ = build_cfg(arch, shape_name)
+    model = TransformerLM(cfg)
+    shapes = init_shapes(model)
+    scale = (cfg.moe.top_k / cfg.moe.n_experts) if cfg.moe else 1.0
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        if any(k in ("w_gate", "w_up", "w_down") for k in keys) and \
+                leaf.ndim >= 3 and cfg.moe is not None:
+            total += n * scale
+        else:
+            total += n
+    return total
+
+
+def analyze_cell(rec: dict, with_model_flops: bool = True) -> dict:
+    n = rec["n_devices"]
+    an = rec.get("analytic")
+    coll = rec["collective_bytes_per_device"]["total"]
+    if an is not None:
+        t_c = an["flops_global"] / n / PEAK_FLOPS
+        t_m = an["bytes_global"] / n / HBM_BW
+    else:  # legacy record: raw HLO numbers (scan bodies counted once)
+        t_c = rec.get("per_device_flops_hlo_raw",
+                      rec.get("per_device_flops", 0)) / PEAK_FLOPS
+        t_m = rec.get("per_device_bytes_hlo_raw",
+                      rec.get("per_device_bytes", 0)) / HBM_BW
+    t_l = coll / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_l}
+    dom = max(terms, key=terms.get)
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_l,
+        "dominant": dom,
+        "bound_s": terms[dom],
+        "mem_gib": rec["memory"].get("total_per_device", 0) / 2**30,
+        "advice": ADVICE[dom],
+    }
+    if an is not None:
+        out["model_flops"] = an["model_flops"]
+        out["useful_ratio"] = an["model_flops"] / max(an["flops_global"], 1)
+        # roofline fraction: time the chips MUST spend on useful math vs the
+        # time the compiled program is bounded by (dominant term)
+        t_useful = an["model_flops"] / n / PEAK_FLOPS
+        out["roofline_frac"] = t_useful / max(terms[dom], 1e-12)
+    elif with_model_flops:
+        try:
+            n_act = active_params(rec["arch"], rec["kind"])
+            tokens = rec["global_batch"] * (
+                rec["seq_len"] if rec["kind"] in ("train", "prefill") else 1)
+            mult = 6 if rec["kind"] == "train" else 2
+            model_flops = mult * n_act * tokens
+            out["model_flops"] = model_flops
+            out["useful_ratio"] = model_flops / max(
+                rec.get("global_flops", 1), 1)
+            t_useful = model_flops / n / PEAK_FLOPS
+            out["roofline_frac"] = t_useful / max(terms[dom], 1e-12)
+        except Exception as e:  # pragma: no cover
+            out["model_flops_error"] = repr(e)
+    return out
+
+
+def load_dir(d: str):
+    recs = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                recs.append(json.load(fh))
+    return recs
+
+
+def markdown_table(rows):
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant "
+           "| mem/dev GiB | MODEL/HLO | roofline frac |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} "
+            f"| {r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} "
+            f"| **{r['dominant']}** | {r['mem_gib']:.1f} "
+            f"| {r.get('useful_ratio', float('nan')):.2f} "
+            f"| {r.get('roofline_frac', float('nan')):.2f} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="experiments/dryrun/16x16")
+    p.add_argument("--markdown", action="store_true")
+    p.add_argument("--no-model-flops", action="store_true")
+    p.add_argument("--out", default=None)
+    args = p.parse_args(argv)
+    rows = [analyze_cell(r, not args.no_model_flops)
+            for r in load_dir(args.dir)]
+    if args.markdown:
+        text = markdown_table(rows)
+    else:
+        text = json.dumps(rows, indent=1)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

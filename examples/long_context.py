@@ -1,0 +1,53 @@
+"""Long-sequence MoSA (paper §3.4): constant k + local attention.
+
+Trains the MoSA+local hybrid at growing sequence lengths with k fixed, and
+prints the per-head FLOP cost — flat in T for attention, versus quadratic for
+dense.  This is the configuration the long_500k dry-run cells use.
+
+    PYTHONPATH=src python examples/long_context.py
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs.base import MoSAConfig
+from repro.configs.mosa_paper import paper_config
+from repro.core.flops import flops_dense_head, flops_mosa_head
+from repro.launch.train import TrainConfig, Trainer
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--seqs", type=int, nargs="+", default=[256, 512, 1024])
+    p.add_argument("--k", type=int, default=64)
+    p.add_argument("--steps", type=int, default=20)
+    args = p.parse_args()
+
+    h, hp = 512, 64
+    print(f"{'T':>6} {'mosa head GF':>14} {'dense head GF':>14} {'ratio':>8}")
+    for T in [args.seqs[-1], 4 * args.seqs[-1], 16 * args.seqs[-1], 524288]:
+        fm = flops_mosa_head(T, args.k, h, hp)
+        fd = flops_dense_head(T, h, hp)
+        print(f"{T:>6} {fm/1e9:>14.3f} {fd/1e9:>14.3f} {fd/fm:>8.1f}x")
+
+    for T in args.seqs:
+        cfg = paper_config("tiny", "mosa", sparsity=max(T // args.k, 1),
+                           seq_len=T, n_mosa_heads=8, local_window=64)
+        cfg = dataclasses.replace(
+            cfg, n_layers=2, vocab=1024, pattern=cfg.pattern[:2],
+            mosa=dataclasses.replace(cfg.mosa, k_fixed=args.k))
+        tcfg = TrainConfig(arch="-", seq_len=T, global_batch=2,
+                           steps=args.steps, lr=1e-3, warmup=5, log_every=100)
+        tr = Trainer(tcfg, model_cfg=cfg)
+        t0 = time.perf_counter()
+        _, _, hist = tr.run(install_signals=False)
+        dt = (time.perf_counter() - t0) / args.steps
+        print(f"T={T:5d} k={args.k}: loss {hist[-1]['loss']:.3f}  "
+              f"{dt*1e3:.0f} ms/step (local window 64 + 8 MoSA heads)")
+
+
+if __name__ == "__main__":
+    main()

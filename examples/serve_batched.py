@@ -1,0 +1,62 @@
+"""Batched serving with MoSA streaming KV caches.
+
+Shows the paper's KV-cache claim live: the MoSA heads keep only their top-k
+tokens, so the cache footprint is a fraction of dense attention's at the same
+context length.
+
+    PYTHONPATH=src python examples/serve_batched.py --gen 24
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.launch.serve import RequestPool, Server
+
+
+def cache_nbytes(tree):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="mosa-paper")
+    p.add_argument("--variant", default="mosa")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--max-len", type=int, default=256)
+    p.add_argument("--gen", type=int, default=16)
+    args = p.parse_args()
+
+    akw = {"variant": args.variant} if args.arch == "mosa-paper" else {}
+    cfg = get_config(args.arch, preset="smoke", **akw)
+    server = Server(cfg, batch=args.batch, max_len=args.max_len)
+
+    # continuous-batching-lite: submit more requests than slots
+    pool = RequestPool(server)
+    key = jax.random.PRNGKey(0)
+    for i in range(args.batch * 2):
+        plen = 8 + 4 * (i % 3)
+        prompt = jax.random.randint(jax.random.fold_in(key, i), (plen,), 2,
+                                    cfg.vocab)
+        pool.submit(prompt, max_new=args.gen)
+    results = pool.run()
+    print(f"served {len(results)} requests x {args.gen} tokens")
+
+    # KV accounting
+    caches = server.new_cache()
+    total = cache_nbytes(caches)
+    print(f"cache footprint @T={args.max_len}: {total/2**20:.2f} MiB")
+    if cfg.mosa is not None:
+        from repro.core.hybrid import HybridAttention
+        hy = HybridAttention(cfg.d_model, cfg.mosa)
+        kv = hy.kv_total(args.max_len)
+        dense_kv = args.max_len * (cfg.mosa.n_dense_heads +
+                                   cfg.mosa.n_mosa_heads)
+        print(f"KV entries/layer: {kv} vs dense {dense_kv} "
+              f"({100 * (1 - kv / dense_kv):.0f}% smaller — paper Table 2)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,217 @@
+"""Model configuration dataclasses + the architecture registry.
+
+Every assigned architecture is a ``ModelConfig`` built in its own module under
+``repro.configs``; ``get_config(name)`` resolves them, and
+``get_config(name, preset="smoke")`` returns the reduced config used by the
+CPU smoke tests.
+
+The layer structure is expressed as a *pattern*: a list of ``BlockSpec``
+(mixer kind + ffn kind), one per layer.  ``repro.nn.transformer`` detects the
+smallest period of the pattern and scans over super-blocks, so an 80-layer
+uniform model compiles a single layer body and Jamba compiles one 8-layer
+super-block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # hidden dim of each expert FFN
+    n_shared_experts: int = 0     # DeepSeek-style always-on shared experts
+    d_shared: int = 0             # hidden dim of the shared expert (0 = same as d_expert)
+    router_aux_loss: float = 0.01
+    capacity_factor: float = 1.25  # set to n_experts/top_k for lossless dispatch
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0          # 0 = dense q projection (v2-lite uses dense q)
+    rope_head_dim: int = 64       # decoupled RoPE key dim
+    v_head_dim: int = 128
+    nope_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MoSAConfig:
+    """The paper's technique as a first-class feature.
+
+    ``n_mosa_heads`` sparse heads with expert-choice routing (k = T/sparsity
+    tokens per head) ride alongside ``n_dense_heads`` dense heads (the paper's
+    hybrid; App. B shows 4 dense heads is optimal and sparsity-agnostic).
+    """
+
+    n_mosa_heads: int
+    sparsity: int = 32            # rho = T / k
+    n_dense_heads: int = 4
+    d_head: int = 64
+    force_first_token: bool = True
+    min_k: int = 2                # downstream-eval floor (paper §3.5)
+    local_window: int = 0         # >0: dense heads become sliding-window (paper §3.4)
+    k_fixed: int = 0              # >0: constant k regardless of T (paper §3.4 long-seq)
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0              # 0 = ceil(d_model/16)
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    # which layer indices are sLSTM (rest mLSTM), following xLSTM [a:b] notation
+    slstm_layers: tuple = ()
+    proj_factor_mlstm: float = 2.0
+    proj_factor_slstm: float = 1.333
+    conv1d_kernel: int = 4
+    qkv_block_size: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    kind: str = "gqa"             # "gqa" | "mla" | "none"
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    d_head: int = 64
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    window: int = 0               # sliding-window size for local layers (0 = global)
+    mrope_sections: tuple = ()    # qwen2-vl M-RoPE (t, h, w) dim split; () = standard RoPE
+    softmax_scale: Optional[float] = None
+    mla: Optional[MLAConfig] = None
+
+
+# ---------------------------------------------------------------------------
+# Block / model
+# ---------------------------------------------------------------------------
+
+# mixer kinds: attn | attn_local | mosa | mamba | slstm | mlstm
+# ffn kinds:   dense | moe | none
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    mixer: str
+    ffn: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    attention: AttentionConfig
+    pattern: tuple = ()           # tuple[BlockSpec]; () = uniform (attn, dense/moe)
+    moe: Optional[MoEConfig] = None
+    mosa: Optional[MoSAConfig] = None
+    mamba: Optional[MambaConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    norm: str = "rmsnorm"
+    ffn_act: str = "swiglu"       # swiglu | gelu
+    tie_embeddings: bool = False
+    max_seq_len: int = 4096
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    frontend: str = "none"        # none | audio_stub | vision_stub
+    remat: str = "none"           # none | full | dots_saveable
+    scan_layers: bool = True
+    sparse_variant: str = "mosa"  # mosa | fixed | routing (hybrid sparse side)
+    notes: str = ""
+
+    def resolved_pattern(self) -> tuple:
+        if self.pattern:
+            assert len(self.pattern) == self.n_layers, (
+                f"{self.name}: pattern length {len(self.pattern)} != n_layers {self.n_layers}")
+            return self.pattern
+        ffn = "moe" if self.moe is not None else "dense"
+        mixer = "mosa" if self.mosa is not None else "attn"
+        return tuple(BlockSpec(mixer, ffn) for _ in range(self.n_layers))
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def with_mosa(self, sparsity: int = 32, n_mosa_heads: int | None = None,
+                  local_window: int = 0, k_fixed: int = 0) -> "ModelConfig":
+        """Return a MoSA-hybrid variant of this config (paper's technique).
+
+        Replaces every softmax-attention mixer with a ``mosa`` hybrid mixer
+        (4 dense + N sparse heads).  Attention-free mixers (mamba/slstm/
+        mlstm) are untouched; raises if the config has no attention at all.
+        """
+        pat = self.resolved_pattern()
+        kinds = {b.mixer for b in pat}
+        if not (kinds & {"attn", "attn_local"}):
+            raise ValueError(f"{self.name}: MoSA inapplicable (attention-free)")
+        if n_mosa_heads is None:
+            # FLOP-matched default: solved properly in repro.core.hybrid
+            n_mosa_heads = max(1, self.attention.n_heads - 4) * sparsity // 2
+        mosa = MoSAConfig(n_mosa_heads=n_mosa_heads, sparsity=sparsity,
+                          n_dense_heads=4, d_head=self.attention.d_head,
+                          local_window=local_window, k_fixed=k_fixed)
+        new_pat = tuple(
+            dataclasses.replace(b, mixer="mosa") if b.mixer in ("attn", "attn_local") else b
+            for b in pat)
+        return dataclasses.replace(
+            self, name=self.name + f"-mosa{sparsity}", pattern=new_pat, mosa=mosa)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register(name: str, fn: Callable[..., ModelConfig]):
+    _REGISTRY[name] = fn
+    return fn
+
+
+def config_names():
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+def get_config(name: str, preset: str = "full", **kw) -> ModelConfig:
+    _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name](preset=preset, **kw)
+
+
+_LOADED = False
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    # Import every config module so they register themselves.
+    from repro.configs import (  # noqa: F401
+        granite_moe_1b_a400m, deepseek_v2_lite_16b, jamba_v0_1_52b,
+        musicgen_large, yi_34b, yi_9b, gemma3_4b, qwen2_1_5b,
+        xlstm_125m, qwen2_vl_72b, mosa_paper,
+    )

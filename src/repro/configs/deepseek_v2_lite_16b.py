@@ -1,0 +1,49 @@
+"""deepseek-v2-lite-16b [arXiv:2405.04434; hf].
+
+27L d_model=2048 16H (MLA, kv_lora=512) vocab=102400; MoE 64 routed experts
+top-6 + 2 shared, expert hidden 1408; layer 0 uses a dense FFN (10944).
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import (AttentionConfig, BlockSpec, MLAConfig,
+                                ModelConfig, MoEConfig, register)
+
+
+def _full():
+    pattern = (BlockSpec("attn", "dense"),) + \
+        tuple(BlockSpec("attn", "moe") for _ in range(26))
+    return ModelConfig(
+        name="deepseek-v2-lite-16b", family="moe",
+        n_layers=27, d_model=2048, d_ff=10944, vocab=102400,
+        pattern=pattern,
+        attention=AttentionConfig(
+            kind="mla", n_heads=16, n_kv_heads=16, d_head=192,
+            rope_theta=10000.0,
+            mla=MLAConfig(kv_lora_rank=512, q_lora_rank=0, rope_head_dim=64,
+                          v_head_dim=128, nope_head_dim=128)),
+        moe=MoEConfig(n_experts=64, top_k=6, d_expert=1408,
+                      n_shared_experts=2),
+        max_seq_len=32768,
+        notes="MLA latent cache 512+64/token; first layer dense FFN.")
+
+
+def _smoke():
+    pattern = (BlockSpec("attn", "dense"), BlockSpec("attn", "moe"))
+    return ModelConfig(
+        name="deepseek-v2-lite-smoke", family="moe",
+        n_layers=2, d_model=64, d_ff=128, vocab=512, pattern=pattern,
+        attention=AttentionConfig(
+            kind="mla", n_heads=4, n_kv_heads=4, d_head=24,
+            mla=MLAConfig(kv_lora_rank=32, rope_head_dim=8, v_head_dim=16,
+                          nope_head_dim=16)),
+        moe=MoEConfig(n_experts=4, top_k=2, d_expert=32, n_shared_experts=1,
+                      capacity_factor=2.0),
+        max_seq_len=256, param_dtype="float32", compute_dtype="float32")
+
+
+def config(preset: str = "full", **kw):
+    return _full() if preset == "full" else _smoke()
+
+
+register("deepseek-v2-lite-16b", config)

@@ -1,0 +1,38 @@
+"""granite-moe-1b-a400m [hf:ibm-granite/granite-3.0-1b-a400m-base; hf].
+
+24L d_model=1024 16H (GQA kv=8) vocab=49155; MoE 32 experts top-8,
+expert hidden 512.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import (AttentionConfig, ModelConfig, MoEConfig,
+                                register)
+
+
+def _full():
+    return ModelConfig(
+        name="granite-moe-1b-a400m", family="moe",
+        n_layers=24, d_model=1024, d_ff=512, vocab=49155,
+        attention=AttentionConfig(kind="gqa", n_heads=16, n_kv_heads=8,
+                                  d_head=64, rope_theta=10000.0),
+        moe=MoEConfig(n_experts=32, top_k=8, d_expert=512),
+        tie_embeddings=True, max_seq_len=4096,
+        notes="MoE every layer; GQA 16q/8kv; d_ff is the per-expert hidden.")
+
+
+def _smoke():
+    return ModelConfig(
+        name="granite-moe-smoke", family="moe",
+        n_layers=2, d_model=64, d_ff=32, vocab=512,
+        attention=AttentionConfig(kind="gqa", n_heads=4, n_kv_heads=2, d_head=16),
+        moe=MoEConfig(n_experts=4, top_k=2, d_expert=32, capacity_factor=2.0),
+        tie_embeddings=True, max_seq_len=256,
+        param_dtype="float32", compute_dtype="float32")
+
+
+def config(preset: str = "full", **kw):
+    return _full() if preset == "full" else _smoke()
+
+
+register("granite-moe-1b-a400m", config)

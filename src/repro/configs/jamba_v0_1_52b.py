@@ -1,0 +1,52 @@
+"""jamba-v0.1-52b [arXiv:2403.19887; hf].
+
+32L d_model=4096 32H (GQA kv=8) d_ff(expert)=14336 vocab=65536; Mamba:attn
+interleave 1:7 (one attention layer per 8-layer Jamba block, at in-block
+index 4); MoE 16 experts top-2 on every other layer (e=2).
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import (AttentionConfig, BlockSpec, MambaConfig,
+                                ModelConfig, MoEConfig, register)
+
+
+def _pattern(n_layers, attn_at=4, period=8, moe_every=2):
+    out = []
+    for i in range(n_layers):
+        mixer = "attn" if (i % period) == attn_at else "mamba"
+        ffn = "moe" if (i % moe_every) == 1 else "dense"
+        out.append(BlockSpec(mixer, ffn))
+    return tuple(out)
+
+
+def _full():
+    return ModelConfig(
+        name="jamba-v0.1-52b", family="hybrid",
+        n_layers=32, d_model=4096, d_ff=14336, vocab=65536,
+        pattern=_pattern(32),
+        attention=AttentionConfig(kind="gqa", n_heads=32, n_kv_heads=8,
+                                  d_head=128, rope_theta=10000.0),
+        moe=MoEConfig(n_experts=16, top_k=2, d_expert=14336),
+        mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+        max_seq_len=524288,
+        notes="8-layer Jamba block scanned as one super-block; "
+              "long_500k runs natively (Mamba state + 4 attn layers).")
+
+
+def _smoke():
+    return ModelConfig(
+        name="jamba-smoke", family="hybrid",
+        n_layers=8, d_model=64, d_ff=128, vocab=512,
+        pattern=_pattern(8),
+        attention=AttentionConfig(kind="gqa", n_heads=4, n_kv_heads=2, d_head=16),
+        moe=MoEConfig(n_experts=4, top_k=2, d_expert=32, capacity_factor=2.0),
+        mamba=MambaConfig(d_state=4, d_conv=4, expand=2),
+        max_seq_len=256, param_dtype="float32", compute_dtype="float32")
+
+
+def config(preset: str = "full", **kw):
+    return _full() if preset == "full" else _smoke()
+
+
+register("jamba-v0.1-52b", config)

@@ -1,0 +1,42 @@
+"""qwen2-vl-72b [arXiv:2409.12191; hf] — VLM backbone with M-RoPE.
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064.  The vision frontend
+(dynamic-resolution ViT) is a STUB per the assignment: ``input_specs``
+supplies precomputed patch embeddings (B, T, d_model); M-RoPE (t,h,w) runs in
+the backbone with text positions lifted to 3 components.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import AttentionConfig, ModelConfig, register
+
+
+def _full():
+    return ModelConfig(
+        name="qwen2-vl-72b", family="vlm",
+        n_layers=80, d_model=8192, d_ff=29568, vocab=152064,
+        attention=AttentionConfig(kind="gqa", n_heads=64, n_kv_heads=8,
+                                  d_head=128, qkv_bias=True,
+                                  rope_theta=1000000.0,
+                                  mrope_sections=(16, 24, 24)),
+        max_seq_len=32768, frontend="vision_stub",
+        notes="M-RoPE sections (16,24,24) over d_head/2=64 freq pairs; "
+              "vision frontend stubbed. long_500k in mosa_hybrid mode.")
+
+
+def _smoke():
+    return ModelConfig(
+        name="qwen2-vl-smoke", family="vlm",
+        n_layers=2, d_model=64, d_ff=128, vocab=512,
+        attention=AttentionConfig(kind="gqa", n_heads=4, n_kv_heads=2,
+                                  d_head=16, qkv_bias=True,
+                                  mrope_sections=(2, 3, 3)),
+        max_seq_len=256, frontend="vision_stub",
+        param_dtype="float32", compute_dtype="float32")
+
+
+def config(preset: str = "full", **kw):
+    return _full() if preset == "full" else _smoke()
+
+
+register("qwen2-vl-72b", config)

@@ -1,0 +1,50 @@
+"""Assigned input shapes (one set for all LM-family archs) + input specs.
+
+``train_*`` lowers ``train_step``; ``prefill_*`` lowers the prefill forward;
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a KV
+cache of ``seq_len``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+
+def input_specs(cfg, shape: ShapeCfg):
+    """ShapeDtypeStruct stand-ins for the model inputs of one cell.
+
+    For train/prefill:
+      * token archs: {"tokens": (B,T) i32, "labels": (B,T) i32}
+      * stub-frontend archs (audio/vlm): {"embeds": (B,T,h) bf16, "labels"}
+        — the modality frontend supplies precomputed frame/patch embeddings.
+    For decode: {"token": (B,1) i32} (the cache is threaded separately).
+    """
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+    specs = {"labels": jax.ShapeDtypeStruct((B, T), i32)}
+    if cfg.frontend in ("audio_stub", "vision_stub"):
+        specs["embeds"] = jax.ShapeDtypeStruct((B, T, cfg.d_model), cfg.cdtype)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, T), i32)
+    return specs

@@ -1,0 +1,53 @@
+"""xlstm-125m [arXiv:2405.04517; unverified].
+
+12L d_model=768 4H vocab=50304; sLSTM + mLSTM blocks.  The assignment tier is
+"unverified"; we use an xLSTM[5:1]-style layout (period 6: five mLSTM then
+one sLSTM) so the pattern is periodic and scans as one super-block — noted in
+DESIGN.md as an adaptation of the paper's [7:1] ratio to 12 layers.
+
+MoSA is INAPPLICABLE here (attention-free) — see DESIGN §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import (AttentionConfig, BlockSpec, ModelConfig,
+                                XLSTMConfig, register)
+
+
+def _pattern(n_layers, period=6):
+    return tuple(
+        BlockSpec("slstm" if (i % period) == period - 1 else "mlstm", "none")
+        for i in range(n_layers))
+
+
+def _full():
+    return ModelConfig(
+        name="xlstm-125m", family="ssm",
+        n_layers=12, d_model=768, d_ff=0, vocab=50304,
+        pattern=_pattern(12),
+        attention=AttentionConfig(kind="none", n_heads=4, n_kv_heads=4,
+                                  d_head=192),
+        xlstm=XLSTMConfig(proj_factor_mlstm=2.0, proj_factor_slstm=1.333,
+                          conv1d_kernel=4),
+        tie_embeddings=True, max_seq_len=524288,
+        notes="attention-free; long_500k native (O(1) recurrent state). "
+              "MoSA inapplicable.")
+
+
+def _smoke():
+    return ModelConfig(
+        name="xlstm-smoke", family="ssm",
+        n_layers=6, d_model=64, d_ff=0, vocab=512,
+        pattern=_pattern(6),
+        attention=AttentionConfig(kind="none", n_heads=4, n_kv_heads=4,
+                                  d_head=16),
+        xlstm=XLSTMConfig(),
+        tie_embeddings=True, max_seq_len=256,
+        param_dtype="float32", compute_dtype="float32")
+
+
+def config(preset: str = "full", **kw):
+    return _full() if preset == "full" else _smoke()
+
+
+register("xlstm-125m", config)

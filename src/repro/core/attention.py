@@ -1,0 +1,491 @@
+"""Dense attention family: GQA (with optional sliding window) and MLA.
+
+Three implementations, selected by ``impl``:
+  * ``naive``   — materializes the full (Tq, Tk) logits; test/tiny use.
+  * ``chunked`` — pure-JAX flash: lax.scan over KV chunks carrying running
+                  (max, denom, acc).  O(Tq·chunk) memory; this is what the
+                  dry-run compiles (the Pallas kernel cannot lower on the CPU
+                  backend) and it exhibits the same HLO roofline structure.
+  * ``pallas``  — the TPU kernel from ``repro.kernels`` (validated in
+                  interpret mode on CPU).
+
+All softmax statistics are fp32 regardless of compute dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.core import rope as rope_lib
+from repro.dist import hints
+from repro.core.kv_cache import DenseKVCache, MLAKVCache, WindowKVCache
+from repro.nn.layers import _trunc_normal
+from repro.nn.module import logical
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos, k_pos, window: int = 0, k_valid=None):
+    """fp32 additive mask: causal (+ sliding window) from explicit positions.
+
+    q_pos: (..., Tq), k_pos: (..., Tk) -> (..., Tq, Tk).
+    """
+    ok = q_pos[..., :, None] >= k_pos[..., None, :]
+    if window > 0:
+        ok &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    if k_valid is not None:
+        ok &= k_valid[..., None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def naive_attention(q, k, v, bias, scale):
+    """q: (B,H,Tq,d), k/v: (B,H,Tk,d), bias: broadcastable (B,H,Tq,Tk)."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = s + bias
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(v.dtype)
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, scale, window: int = 0,
+                      k_valid=None, chunk: int = 512):
+    """Flash-style GQA attention via lax.scan over KV chunks.
+
+    q: (B, Hq, Tq, d); k, v: (B, Hkv, Tk, d) with Hq % Hkv == 0 — the KV
+    repeat is expressed inside the einsum (q reshaped to a (Hkv, n_rep)
+    grouped head axis), never materialized.  q_pos: (B?, Tq) or (Tq,);
+    k_pos: same for Tk.  Returns (B, Hq, Tq, dv) in v.dtype.
+    """
+    B, Hq, Tq, d = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    R = Hq // Hkv
+    dv = v.shape[-1]
+    chunk = min(chunk, Tk)
+    n_chunks = -(-Tk // chunk)
+    pad = n_chunks * chunk - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kp = jnp.pad(jnp.broadcast_to(k_pos, (B, Tk)), ((0, 0), (0, pad)),
+                     constant_values=jnp.iinfo(jnp.int32).max)
+        kv_valid = jnp.pad(
+            jnp.broadcast_to(k_valid if k_valid is not None
+                             else jnp.ones((B, Tk), bool), (B, Tk)),
+            ((0, 0), (0, pad)), constant_values=False)
+    else:
+        kp = jnp.broadcast_to(k_pos, (B, Tk))
+        kv_valid = jnp.broadcast_to(
+            k_valid if k_valid is not None else jnp.ones((B, Tk), bool), (B, Tk))
+
+    qp = jnp.broadcast_to(q_pos, (B, Tq))
+    kc = k.reshape(B, Hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, Hkv, n_chunks, chunk, dv).transpose(2, 0, 1, 3, 4)
+    kpc = kp.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    kvc = kv_valid.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    qf = q.reshape(B, Hkv, R, Tq, d).astype(jnp.float32)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, kpb, kvb = inp
+        s = jnp.einsum("bgrqd,bgkd->bgrqk", qf, kb.astype(jnp.float32),
+                       preferred_element_type=jnp.float32) * scale
+        bias = _mask_bias(qp[:, None, None], kpb[:, None, None], window,
+                          kvb[:, None, None])
+        s = s + bias
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bgrqk,bgkd->bgrqd", p, vb.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, R, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, R, Tq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, R, Tq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, kpc, kvc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Hq, Tq, dv).astype(v.dtype)
+
+
+def gqa_attention(q, k, v, q_pos, k_pos, scale, window: int = 0,
+                  k_valid=None):
+    """Direct (unchunked) GQA attention — decode-friendly: the (Tq, Tk)
+    logits materialize once, so a sequence-sharded KV cache shards them too.
+    q: (B, Hq, Tq, d); k, v: (B, Hkv, Tk, d).
+    """
+    B, Hq, Tq, d = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    R = Hq // Hkv
+    dv = v.shape[-1]
+    qf = q.reshape(B, Hkv, R, Tq, d).astype(jnp.float32)
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", qf, k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    qp = jnp.broadcast_to(q_pos, (B, Tq))
+    kp = jnp.broadcast_to(k_pos, (B, Tk))
+    s = s + _mask_bias(qp[:, None, None], kp[:, None, None], window,
+                       None if k_valid is None
+                       else jnp.broadcast_to(k_valid, (B, Tk))[:, None, None])
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    out = jnp.einsum("bgrqk,bgkd->bgrqd", p, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(p.sum(-1), 1e-30)[..., None]
+    return out.reshape(B, Hq, Tq, dv).astype(v.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiHeadAttention:
+    """GQA attention with RoPE/M-RoPE, optional sliding window."""
+
+    d_model: int
+    cfg: AttentionConfig
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    impl: str = "chunked"         # naive | chunked | pallas
+    rotary_frac: float = 1.0
+    chunk: int = 512
+
+    @property
+    def _scale(self):
+        return self.cfg.softmax_scale or self.cfg.d_head ** -0.5
+
+    def init(self, key):
+        c = self.cfg
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        std = self.d_model ** -0.5
+        p = {
+            "wq": _trunc_normal(k1, (self.d_model, c.n_heads * c.d_head), std, self.param_dtype),
+            "wk": _trunc_normal(k2, (self.d_model, c.n_kv_heads * c.d_head), std, self.param_dtype),
+            "wv": _trunc_normal(k3, (self.d_model, c.n_kv_heads * c.d_head), std, self.param_dtype),
+            "wo": _trunc_normal(k4, (c.n_heads * c.d_head, self.d_model),
+                                (c.n_heads * c.d_head) ** -0.5, self.param_dtype),
+        }
+        if c.qkv_bias:
+            p["bq"] = jnp.zeros((c.n_heads * c.d_head,), self.param_dtype)
+            p["bk"] = jnp.zeros((c.n_kv_heads * c.d_head,), self.param_dtype)
+            p["bv"] = jnp.zeros((c.n_kv_heads * c.d_head,), self.param_dtype)
+        return p
+
+    def specs(self):
+        s = {"wq": logical("embed", "heads"), "wk": logical("embed", "kv_heads"),
+             "wv": logical("embed", "kv_heads"), "wo": logical("heads", "embed")}
+        if self.cfg.qkv_bias:
+            s.update(bq=logical("heads"), bk=logical("kv_heads"), bv=logical("kv_heads"))
+        return s
+
+    def _qkv(self, params, x):
+        c, cd = self.cfg, self.compute_dtype
+        B, T, _ = x.shape
+        x = x.astype(cd)
+        q = jnp.dot(x, params["wq"].astype(cd), preferred_element_type=jnp.float32)
+        k = jnp.dot(x, params["wk"].astype(cd), preferred_element_type=jnp.float32)
+        v = jnp.dot(x, params["wv"].astype(cd), preferred_element_type=jnp.float32)
+        if c.qkv_bias:
+            q = q + params["bq"].astype(jnp.float32)
+            k = k + params["bk"].astype(jnp.float32)
+            v = v + params["bv"].astype(jnp.float32)
+        q = q.astype(cd).reshape(B, T, c.n_heads, c.d_head).transpose(0, 2, 1, 3)
+        k = k.astype(cd).reshape(B, T, c.n_kv_heads, c.d_head).transpose(0, 2, 1, 3)
+        v = v.astype(cd).reshape(B, T, c.n_kv_heads, c.d_head).transpose(0, 2, 1, 3)
+        # Megatron-SP layout inside attention: heads sharded (tp), sequence
+        # WHOLE — one gather here instead of one per KV chunk in the scan
+        # (EXPERIMENTS.md §Perf it.5).  Skipped for decode (T == 1): a
+        # heads-sharded single-token q conflicts with the seq-sharded cache
+        # and forces a per-layer cache re-layout (§Perf cell-3 it.17).
+        if T > 1:
+            q = hints.constrain(q, ("dp", "tp", None, None))
+            k = hints.constrain(k, ("dp", "tp", None, None))
+            v = hints.constrain(v, ("dp", "tp", None, None))
+        return q, k, v
+
+    def _rope(self, t, positions):
+        c = self.cfg
+        if c.mrope_sections:
+            if positions.shape[0] != 3:
+                positions = rope_lib.text_mrope_positions(positions)
+            pos = positions[:, :, None]  # (3, B, 1, T) broadcast over heads
+            return rope_lib.apply_rope(t, pos, c.rope_theta, self.rotary_frac,
+                                       c.mrope_sections)
+        return rope_lib.apply_rope(t, positions[:, None], c.rope_theta,
+                                   self.rotary_frac)
+
+    def __call__(self, params, x, positions=None):
+        """Training / prefill-style full forward.  x: (B, T, h)."""
+        c = self.cfg
+        B, T, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+        q, k, v = self._qkv(params, x)
+        base_pos = positions if positions.ndim == 2 else positions[0]
+        q = self._rope(q, positions)
+        k = self._rope(k, positions)
+        if self.impl == "naive":
+            out = gqa_attention(q, k, v, base_pos, base_pos, self._scale,
+                                window=c.window)
+        elif self.impl == "pallas":
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(q, k, v, window=c.window)
+        else:
+            out = chunked_attention(q, k, v, base_pos, base_pos, self._scale,
+                                    window=c.window, chunk=self.chunk)
+        out = out.transpose(0, 2, 1, 3).reshape(B, T, c.n_heads * c.d_head)
+        cd = self.compute_dtype
+        return jnp.dot(out.astype(cd), params["wo"].astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd)
+
+    # ---- serving ----
+    def prefill(self, params, x, cache, positions=None):
+        if isinstance(cache, WindowKVCache):
+            return self._prefill_window(params, x, cache, positions)
+        c = self.cfg
+        B, T, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+        q, k, v = self._qkv(params, x)
+        q = self._rope(q, positions)
+        k = self._rope(k, positions)
+        cache = cache.append(k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+        base_pos = positions if positions.ndim == 2 else positions[0]
+        out = chunked_attention(q, k, v, base_pos, base_pos,
+                                self._scale, window=c.window, chunk=self.chunk)
+        B_, H, T_, d = out.shape
+        out = out.transpose(0, 2, 1, 3).reshape(B, T, H * d)
+        cd = self.compute_dtype
+        y = jnp.dot(out.astype(cd), params["wo"].astype(cd),
+                    preferred_element_type=jnp.float32).astype(cd)
+        return y, cache
+
+    def _prefill_window(self, params, x, cache: "WindowKVCache", positions=None):
+        """Window prefill: run the full forward, keep the last W tokens' KV."""
+        c = self.cfg
+        B, T, _ = x.shape
+        pos = positions if positions is not None else \
+            jnp.broadcast_to(jnp.arange(T), (B, T))
+        y = self(params, x, pos)
+        q, k, v = self._qkv(params, x)
+        k = self._rope(k, pos).transpose(0, 2, 1, 3)          # (B,T,Hkv,d)
+        v = v.transpose(0, 2, 1, 3)
+        W = cache.k.shape[1]
+        take = min(W, T)
+        sl = slice(T - take, T)
+        base_pos = pos if pos.ndim == 2 else pos[0]
+        kw = jnp.zeros_like(cache.k).at[:, :take].set(k[:, sl].astype(cache.k.dtype))
+        vw = jnp.zeros_like(cache.v).at[:, :take].set(v[:, sl].astype(cache.v.dtype))
+        posw = jnp.full_like(cache.positions, -1).at[:, :take].set(
+            jnp.broadcast_to(base_pos[:, sl], (B, take)).astype(jnp.int32))
+        return y, WindowKVCache(kw, vw, posw, cache.length + T)
+
+    def _decode_window(self, params, x, cache: "WindowKVCache", positions=None):
+        c = self.cfg
+        B = x.shape[0]
+        pos = cache.length[:, None] if positions is None else positions
+        q, k, v = self._qkv(params, x)                        # (B,H,1,d)
+        q = self._rope(q, pos)
+        k = self._rope(k, pos)
+        cache = cache.append_one(k[:, :, 0], v[:, :, 0])
+        kk = cache.k.transpose(0, 2, 1, 3).astype(q.dtype)    # (B,Hkv,W,d)
+        vv = cache.v.transpose(0, 2, 1, 3).astype(q.dtype)
+        kpos = cache.positions                                # (B, W)
+        W = kk.shape[2]
+        Hkv, R = c.n_kv_heads, c.n_heads // c.n_kv_heads
+        qg = q.reshape(B, Hkv, R, 1, c.d_head).astype(jnp.float32)
+        s = jnp.einsum("bgrqd,bgkd->bgrqk", qg,
+                       kk.astype(jnp.float32)) * self._scale
+        ok = (kpos >= 0)[:, None, None, None, :] & \
+            (kpos[:, None, None, None, :] <= pos[:, None, None, :, None])
+        s = jnp.where(ok, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(vv.dtype), vv)
+        out = out.reshape(B, c.n_heads, 1, c.d_head)
+        out = out.transpose(0, 2, 1, 3).reshape(B, 1, c.n_heads * c.d_head)
+        cd = self.compute_dtype
+        y = jnp.dot(out.astype(cd), params["wo"].astype(cd),
+                    preferred_element_type=jnp.float32).astype(cd)
+        return y, cache
+
+    def decode_step(self, params, x, cache, positions=None):
+        """x: (B, 1, h); attends over the cache + itself."""
+        if isinstance(cache, WindowKVCache):
+            return self._decode_window(params, x, cache, positions)
+        c = self.cfg
+        B = x.shape[0]
+        pos = cache.length[:, None] if positions is None else positions
+        q, k, v = self._qkv(params, x)                     # (B, H, 1, d)
+        q = self._rope(q, pos)
+        k = self._rope(k, pos)
+        cache = cache.append(k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+        S = cache.k.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        k_valid = k_pos < cache.length[:, None]
+        # attention in the CACHE's native (B, S, Hkv, d) layout: transposing a
+        # sequence-sharded cache forces a per-layer all-gather (§Perf cell-3
+        # it.16), while einsum contracts any layout for free.
+        Hkv = c.n_kv_heads
+        R = c.n_heads // Hkv
+        qg = q.reshape(B, Hkv, R, 1, c.d_head).astype(jnp.float32)
+        s = jnp.einsum("bgrqd,bsgd->bgrqs", qg,
+                       cache.k.astype(jnp.float32),
+                       preferred_element_type=jnp.float32) * self._scale
+        ok = (pos[:, None, None, :, None] >= k_pos[:, None, None, None, :]) \
+            & k_valid[:, None, None, None, :]
+        if c.window:
+            ok &= (pos[:, None, None, :, None] -
+                   k_pos[:, None, None, None, :]) < c.window
+        s = jnp.where(ok, s, NEG_INF)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        out = jnp.einsum("bgrqs,bsgd->bgrqd", p,
+                         cache.v.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+        out = out / jnp.maximum(p.sum(-1), 1e-30)[..., None]
+        out = out.astype(self.compute_dtype)
+        out = out.reshape(B, c.n_heads, 1, c.d_head)
+        out = out.transpose(0, 2, 1, 3).reshape(B, 1, c.n_heads * c.d_head)
+        cd = self.compute_dtype
+        y = jnp.dot(out.astype(cd), params["wo"].astype(cd),
+                    preferred_element_type=jnp.float32).astype(cd)
+        return y, cache
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAAttention:
+    """DeepSeek-V2 Multi-head Latent Attention (v2-lite flavor: dense q)."""
+
+    d_model: int
+    cfg: AttentionConfig
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    impl: str = "chunked"
+    chunk: int = 512
+
+    def init(self, key):
+        c, m = self.cfg, self.cfg.mla
+        ks = jax.random.split(key, 6)
+        std = self.d_model ** -0.5
+        H = c.n_heads
+        qd = m.nope_head_dim + m.rope_head_dim
+        return {
+            "wq": _trunc_normal(ks[0], (self.d_model, H * qd), std, self.param_dtype),
+            "w_dkv": _trunc_normal(ks[1], (self.d_model, m.kv_lora_rank + m.rope_head_dim),
+                                   std, self.param_dtype),
+            "kv_norm": jnp.ones((m.kv_lora_rank,), self.param_dtype),
+            "w_uk": _trunc_normal(ks[2], (m.kv_lora_rank, H * m.nope_head_dim),
+                                  m.kv_lora_rank ** -0.5, self.param_dtype),
+            "w_uv": _trunc_normal(ks[3], (m.kv_lora_rank, H * m.v_head_dim),
+                                  m.kv_lora_rank ** -0.5, self.param_dtype),
+            "wo": _trunc_normal(ks[4], (H * m.v_head_dim, self.d_model),
+                                (H * m.v_head_dim) ** -0.5, self.param_dtype),
+        }
+
+    def specs(self):
+        return {"wq": logical("embed", "heads"),
+                "w_dkv": logical("embed", None),
+                "kv_norm": logical(None),
+                "w_uk": logical(None, "heads"),
+                "w_uv": logical(None, "heads"),
+                "wo": logical("heads", "embed")}
+
+    def _latent(self, params, x):
+        """x -> (latent (B,T,r) rms-normed, k_rope (B,T,rope_dim) unrotated)."""
+        m = self.cfg.mla
+        cd = self.compute_dtype
+        dkv = jnp.dot(x.astype(cd), params["w_dkv"].astype(cd),
+                      preferred_element_type=jnp.float32)
+        lat, k_rope = dkv[..., :m.kv_lora_rank], dkv[..., m.kv_lora_rank:]
+        latf = lat.astype(jnp.float32)
+        lat = latf * jax.lax.rsqrt(jnp.mean(latf ** 2, -1, keepdims=True) + 1e-6)
+        lat = (lat * params["kv_norm"].astype(jnp.float32)).astype(cd)
+        return lat, k_rope.astype(cd)
+
+    def __call__(self, params, x, positions=None):
+        c, m = self.cfg, self.cfg.mla
+        cd = self.compute_dtype
+        B, T, _ = x.shape
+        H = c.n_heads
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+        qd = m.nope_head_dim + m.rope_head_dim
+        q = jnp.dot(x.astype(cd), params["wq"].astype(cd),
+                    preferred_element_type=jnp.float32).astype(cd)
+        q = q.reshape(B, T, H, qd).transpose(0, 2, 1, 3)
+        q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+        q_rope = rope_lib.apply_rope(q_rope, positions[:, None], c.rope_theta)
+
+        lat, k_rope = self._latent(params, x)
+        k_rope = rope_lib.apply_rope(k_rope[:, None], positions[:, None],
+                                     c.rope_theta)                   # (B,1,T,rd)
+        k_nope = jnp.dot(lat, params["w_uk"].astype(cd),
+                         preferred_element_type=jnp.float32).astype(cd)
+        k_nope = k_nope.reshape(B, T, H, m.nope_head_dim).transpose(0, 2, 1, 3)
+        v = jnp.dot(lat, params["w_uv"].astype(cd),
+                    preferred_element_type=jnp.float32).astype(cd)
+        v = v.reshape(B, T, H, m.v_head_dim).transpose(0, 2, 1, 3)
+
+        # Assemble full q/k with the shared rotary part broadcast to all heads.
+        qk_scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, H, T, m.rope_head_dim))], axis=-1)
+        out = chunked_attention(q_full, k_full, v, positions, positions,
+                                qk_scale, chunk=self.chunk)
+        out = out.transpose(0, 2, 1, 3).reshape(B, T, H * m.v_head_dim)
+        return jnp.dot(out.astype(cd), params["wo"].astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd)
+
+    def prefill(self, params, x, cache: MLAKVCache, positions=None):
+        m = self.cfg.mla
+        B, T, _ = x.shape
+        lat, k_rope_raw = self._latent(params, x)
+        cache = cache.append(lat, k_rope_raw)   # store *unrotated* k_rope
+        y = self(params, x, positions)
+        return y, cache
+
+    def decode_step(self, params, x, cache: MLAKVCache, positions=None):
+        c, m = self.cfg, self.cfg.mla
+        cd = self.compute_dtype
+        B = x.shape[0]
+        H = c.n_heads
+        pos = cache.length[:, None] if positions is None else positions
+        lat_new, k_rope_new = self._latent(params, x)
+        cache = cache.append(lat_new, k_rope_new)
+        S = cache.latent.shape[1]
+
+        qd = m.nope_head_dim + m.rope_head_dim
+        q = jnp.dot(x.astype(cd), params["wq"].astype(cd),
+                    preferred_element_type=jnp.float32).astype(cd)
+        q = q.reshape(B, 1, H, qd).transpose(0, 2, 1, 3)
+        q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+        q_rope = rope_lib.apply_rope(q_rope, pos[:, None], c.rope_theta)
+
+        k_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        k_valid = k_pos < cache.length[:, None]
+        k_rope = rope_lib.apply_rope(cache.k_rope[:, None].astype(cd),
+                                     k_pos[:, None], c.rope_theta)
+        lat = cache.latent.astype(cd)
+        k_nope = jnp.dot(lat, params["w_uk"].astype(cd),
+                         preferred_element_type=jnp.float32).astype(cd)
+        k_nope = k_nope.reshape(B, S, H, m.nope_head_dim).transpose(0, 2, 1, 3)
+        v = jnp.dot(lat, params["w_uv"].astype(cd),
+                    preferred_element_type=jnp.float32).astype(cd)
+        v = v.reshape(B, S, H, m.v_head_dim).transpose(0, 2, 1, 3)
+
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, H, S, m.rope_head_dim))], axis=-1)
+        out = gqa_attention(q_full, k_full, v, pos, k_pos,
+                            (m.nope_head_dim + m.rope_head_dim) ** -0.5,
+                            k_valid=k_valid)
+        out = out.transpose(0, 2, 1, 3).reshape(B, 1, H * m.v_head_dim)
+        y = jnp.dot(out.astype(cd), params["wo"].astype(cd),
+                    preferred_element_type=jnp.float32).astype(cd)
+        return y, cache

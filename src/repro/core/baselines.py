@@ -1,0 +1,179 @@
+"""The paper's sparse-attention baselines: Fixed and Routing Attention.
+
+Fixed sparse attention (Child et al.): the special case of MoSA with
+``I = [0, rho, 2*rho, ...]`` and ``r = 1`` — same strided indices for every
+head, no router.
+
+Routing Attention (Routing Transformer): tokens clustered per head into
+``rho`` clusters of size k by online k-means in a *tied* Q=K space; attention
+runs within each cluster (causal on original indices); cluster centroids are
+updated by an EMA toward their members (not by gradients).  We implement the
+clusters as "virtual heads" so the gather/attend/scatter machinery is shared
+with MoSA.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rope as rope_lib
+from repro.core.router import selection_mask
+from repro.nn.layers import _trunc_normal
+from repro.nn.module import logical
+
+NEG_INF = -1e30
+
+
+def fixed_indices(T: int, k: int, batch_shape=()):
+    """Strided selection I = [0, rho, 2rho, ...] of length k."""
+    rho = max(T // k, 1)
+    idx = jnp.minimum(jnp.arange(k) * rho, T - 1).astype(jnp.int32)
+    return jnp.broadcast_to(idx, batch_shape + (k,))
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedSparseAttention:
+    d_model: int
+    n_heads: int
+    d_head: int = 64
+    sparsity: int = 32
+    rope_theta: float = 10000.0
+    rotary_frac: float = 0.5
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        H, h, d = self.n_heads, self.d_model, self.d_head
+        kq, kk, kv, ko = jax.random.split(key, 4)
+        std = h ** -0.5
+        return {"wq": _trunc_normal(kq, (H, h, d), std, self.param_dtype),
+                "wk": _trunc_normal(kk, (H, h, d), std, self.param_dtype),
+                "wv": _trunc_normal(kv, (H, h, d), std, self.param_dtype),
+                "wo": _trunc_normal(ko, (H, d, h), d ** -0.5, self.param_dtype)}
+
+    def specs(self):
+        return {"wq": logical("mosa_heads", "embed", None),
+                "wk": logical("mosa_heads", "embed", None),
+                "wv": logical("mosa_heads", "embed", None),
+                "wo": logical("mosa_heads", None, "embed")}
+
+    def __call__(self, params, x, positions=None):
+        cd = self.compute_dtype
+        B, T, h = x.shape
+        H, d = self.n_heads, self.d_head
+        k = max(T // self.sparsity, 2)
+        idx = fixed_indices(T, k, (B, H))                       # (B,H,k)
+
+        xs = jax.vmap(lambda xb, ib: xb[ib])(x.astype(cd), idx)
+        q = jnp.einsum("bnkh,nhd->bnkd", xs, params["wq"].astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd)
+        kk = jnp.einsum("bnkh,nhd->bnkd", xs, params["wk"].astype(cd),
+                        preferred_element_type=jnp.float32).astype(cd)
+        v = jnp.einsum("bnkh,nhd->bnkd", xs, params["wv"].astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd)
+        q = rope_lib.apply_rope(q, idx, self.rope_theta, self.rotary_frac)
+        kk = rope_lib.apply_rope(kk, idx, self.rope_theta, self.rotary_frac)
+
+        s = jnp.einsum("bnqd,bnkd->bnqk", q, kk,
+                       preferred_element_type=jnp.float32) * (d ** -0.5)
+        s = jnp.where(selection_mask(idx, idx), s, NEG_INF)
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+        att = jnp.einsum("bnqk,bnkd->bnqd", p.astype(cd), v,
+                         preferred_element_type=jnp.float32).astype(cd)
+        y_heads = jnp.einsum("bnkd,ndh->bnkh", att, params["wo"].astype(cd),
+                             preferred_element_type=jnp.float32).astype(cd)
+        return jax.vmap(lambda yh, ib: jnp.zeros((T, h), cd).at[
+            ib.reshape(-1)].add(yh.reshape(-1, h)))(y_heads, idx)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingAttention:
+    """Routing Transformer attention head(s) with online k-means clusters."""
+
+    d_model: int
+    n_heads: int
+    d_head: int = 64
+    sparsity: int = 32              # rho = number of clusters; cluster size k=T/rho
+    rope_theta: float = 10000.0
+    rotary_frac: float = 0.5
+    ema_decay: float = 0.999
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        H, h, d = self.n_heads, self.d_model, self.d_head
+        kqk, kv, ko, kc = jax.random.split(key, 4)
+        std = h ** -0.5
+        return {"wqk": _trunc_normal(kqk, (H, h, d), std, self.param_dtype),
+                "wv": _trunc_normal(kv, (H, h, d), std, self.param_dtype),
+                "wo": _trunc_normal(ko, (H, d, h), d ** -0.5, self.param_dtype),
+                # k-means state (EMA-updated, not gradient-trained)
+                "centroids": _trunc_normal(kc, (H, self.sparsity, d), 1.0, jnp.float32)}
+
+    def specs(self):
+        return {"wqk": logical("mosa_heads", "embed", None),
+                "wv": logical("mosa_heads", "embed", None),
+                "wo": logical("mosa_heads", None, "embed"),
+                "centroids": logical("mosa_heads", None, None)}
+
+    def _cluster_select(self, qk, centroids, k):
+        """qk: (B,H,T,d) normalized; -> idx (B,H,rho,k) member indices/cluster."""
+        sim = jnp.einsum("bntd,ncd->bnct", qk, centroids.astype(qk.dtype),
+                         preferred_element_type=jnp.float32)     # (B,H,rho,T)
+        _, idx = jax.lax.top_k(sim, k)                           # (B,H,rho,k)
+        return jnp.sort(idx, axis=-1)
+
+    def __call__(self, params, x, positions=None, update_state: bool = False):
+        cd = self.compute_dtype
+        B, T, h = x.shape
+        H, d, rho = self.n_heads, self.d_head, self.sparsity
+        k = max(T // rho, 2)
+
+        qk = jnp.einsum("bth,nhd->bntd", x.astype(cd), params["wqk"].astype(cd),
+                        preferred_element_type=jnp.float32)
+        qk = qk / (jnp.linalg.norm(qk, axis=-1, keepdims=True) + 1e-6)
+        qk = qk.astype(cd)
+        cent = params["centroids"]
+        idx = self._cluster_select(qk.astype(jnp.float32), cent, k)  # (B,H,rho,k)
+
+        # Flatten clusters into virtual heads: (B, H*rho, k)
+        idxf = idx.reshape(B, H * rho, k)
+        xs = jax.vmap(lambda xb, ib: xb[ib])(x.astype(cd), idxf)
+        xs = xs.reshape(B, H, rho, k, h)
+        qkv_sel = jnp.einsum("bnckh,nhd->bnckd", xs, params["wqk"].astype(cd),
+                             preferred_element_type=jnp.float32).astype(cd)
+        v = jnp.einsum("bnckh,nhd->bnckd", xs, params["wv"].astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd)
+        qr = rope_lib.apply_rope(qkv_sel, idx, self.rope_theta, self.rotary_frac)
+
+        s = jnp.einsum("bncqd,bnckd->bncqk", qr, qr,
+                       preferred_element_type=jnp.float32) * (d ** -0.5)
+        s = jnp.where(selection_mask(idx, idx), s, NEG_INF)
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+        att = jnp.einsum("bncqk,bnckd->bncqd", p.astype(cd), v,
+                         preferred_element_type=jnp.float32).astype(cd)
+        y_heads = jnp.einsum("bnckd,ndh->bnckh", att, params["wo"].astype(cd),
+                             preferred_element_type=jnp.float32).astype(cd)
+        y = jax.vmap(lambda yh, ib: jnp.zeros((T, h), cd).at[
+            ib.reshape(-1)].add(yh.reshape(-1, h)))(
+                y_heads.reshape(B, H * rho * k, h).reshape(B, -1, h),
+                idx.reshape(B, -1))
+        if not update_state:
+            return y
+        return y, self.ema_centroids(params, qk, idx)
+
+    def ema_centroids(self, params, qk, idx):
+        """Online k-means EMA toward assigned members (stop-gradient)."""
+        B, H, T, d = qk.shape
+        rho, k = idx.shape[2], idx.shape[3]
+        qk = jax.lax.stop_gradient(qk.astype(jnp.float32))
+        members = jnp.take_along_axis(
+            qk[:, :, None].reshape(B, H, 1, T, d).repeat(rho, 2),
+            idx[..., None], axis=3)                              # (B,H,rho,k,d)
+        mean = members.mean(axis=(0, 3))                         # (H,rho,d)
+        cent = params["centroids"]
+        new = self.ema_decay * cent + (1 - self.ema_decay) * mean
+        return new / (jnp.linalg.norm(new, axis=-1, keepdims=True) + 1e-6)

@@ -1,0 +1,136 @@
+"""Hybrid attention layer: a few dense (or local) heads + many sparse heads.
+
+The paper's main configuration (App. B: 4 dense heads is the sparsity-
+agnostic optimum; §3.4 swaps dense for sliding-window local heads on long
+sequences).  ``variant`` selects the sparse side: the paper's MoSA, or its
+two baselines (fixed / routing) for the IsoFLOP comparisons.
+
+Head contributions are summed (each side carries its own output projection,
+eq. 2/3 of the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig, MoSAConfig
+from repro.core.attention import MultiHeadAttention
+from repro.core.baselines import FixedSparseAttention, RoutingAttention
+from repro.core.kv_cache import DenseKVCache, MoSAKVCache, WindowKVCache
+from repro.core.mosa import MoSAAttention
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridAttention:
+    d_model: int
+    cfg: MoSAConfig
+    rope_theta: float = 10000.0
+    rotary_frac: float = 0.5
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    variant: str = "mosa"            # mosa | fixed | routing
+    impl: str = "einsum"             # inner attention impl for the sparse side
+    dense_impl: str = "chunked"
+
+    def _dense(self):
+        c = self.cfg
+        acfg = AttentionConfig(
+            kind="gqa", n_heads=c.n_dense_heads, n_kv_heads=c.n_dense_heads,
+            d_head=c.d_head, rope_theta=self.rope_theta,
+            window=c.local_window)
+        return MultiHeadAttention(self.d_model, acfg, self.param_dtype,
+                                  self.compute_dtype, impl=self.dense_impl,
+                                  rotary_frac=self.rotary_frac)
+
+    def _sparse(self):
+        c = self.cfg
+        if self.variant == "mosa":
+            return MoSAAttention(self.d_model, c, self.rope_theta,
+                                 self.rotary_frac, self.param_dtype,
+                                 self.compute_dtype, impl=self.impl)
+        if self.variant == "fixed":
+            return FixedSparseAttention(self.d_model, c.n_mosa_heads, c.d_head,
+                                        c.sparsity, self.rope_theta,
+                                        self.rotary_frac, self.param_dtype,
+                                        self.compute_dtype)
+        if self.variant == "routing":
+            # FLOP-wise one routing head ~ rho MoSA heads (paper §3.2).
+            n = max(1, c.n_mosa_heads // c.sparsity)
+            return RoutingAttention(self.d_model, n, c.d_head, c.sparsity,
+                                    self.rope_theta, self.rotary_frac,
+                                    param_dtype=self.param_dtype,
+                                    compute_dtype=self.compute_dtype)
+        raise ValueError(self.variant)
+
+    def init(self, key):
+        kd, ks = jax.random.split(key)
+        p = {"sparse": self._sparse().init(ks)}
+        if self.cfg.n_dense_heads > 0:
+            p["dense"] = self._dense().init(kd)
+        return p
+
+    def specs(self):
+        s = {"sparse": self._sparse().specs()}
+        if self.cfg.n_dense_heads > 0:
+            s["dense"] = self._dense().specs()
+        return s
+
+    def __call__(self, params, x, positions=None):
+        y = self._sparse()(params["sparse"], x, positions)
+        if self.cfg.n_dense_heads > 0:
+            y = y + self._dense()(params["dense"], x, positions)
+        return y
+
+    # ---------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        c = self.cfg
+        k = self._sparse_k(max_len)
+        caches = {"sparse": MoSAKVCache.create(batch, c.n_mosa_heads,
+                                               min(k, max_len), c.d_head, dtype)}
+        if c.n_dense_heads > 0:
+            if c.local_window > 0:
+                caches["dense"] = WindowKVCache.create(
+                    batch, c.local_window, c.n_dense_heads, c.d_head, dtype)
+            else:
+                caches["dense"] = DenseKVCache.create(
+                    batch, max_len, c.n_dense_heads, c.d_head, dtype)
+        return caches
+
+    def prefill(self, params, x, caches, positions=None):
+        assert self.variant == "mosa", "serving path implemented for MoSA"
+        y, sc = self._sparse().prefill(params["sparse"], x, caches["sparse"],
+                                       positions)
+        out = dict(caches, sparse=sc)
+        if self.cfg.n_dense_heads > 0:
+            yd, dc = self._dense().prefill(params["dense"], x, caches["dense"],
+                                           positions)
+            y = y + yd
+            out["dense"] = dc
+        return y, out
+
+    def decode_step(self, params, x, caches, positions=None):
+        assert self.variant == "mosa"
+        y, sc = self._sparse().decode_step(params["sparse"], x,
+                                           caches["sparse"], positions)
+        out = dict(caches, sparse=sc)
+        if self.cfg.n_dense_heads > 0:
+            yd, dc = self._dense().decode_step(params["dense"], x,
+                                               caches["dense"], positions)
+            y = y + yd
+            out["dense"] = dc
+        return y, out
+
+    def kv_total(self, T: int) -> int:
+        """Paper Table 2 metric: KV = T*H_dense + k*H_mosa (window caps dense)."""
+        c = self.cfg
+        dense_T = min(T, c.local_window) if c.local_window > 0 else T
+        return dense_T * c.n_dense_heads + self._sparse_k(T) * c.n_mosa_heads
+
+    def _sparse_k(self, T: int) -> int:
+        if self.cfg.k_fixed > 0:
+            return min(self.cfg.k_fixed, T)
+        return max(T // self.cfg.sparsity, self.cfg.min_k)

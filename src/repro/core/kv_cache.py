@@ -1,0 +1,136 @@
+"""KV cache structures for serving.
+
+Four cache families, all fixed-shape pytrees (jit/pjit friendly):
+
+  * ``DenseKVCache``     — classic (B, S, Hkv, d) append cache.
+  * ``WindowKVCache``    — ring buffer of the last ``window`` tokens.
+  * ``MLAKVCache``       — DeepSeek latent cache: (B, S, kv_lora + rope_dim);
+                           the per-head K/V are re-expanded from the latent.
+  * ``MoSAKVCache``      — the paper's payoff: each MoSA head keeps only its
+                           running top-k selected tokens (streaming
+                           expert-choice; evict-min).  KV memory per head is
+                           O(k), independent of context length.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DenseKVCache(NamedTuple):
+    k: jnp.ndarray        # (B, S, Hkv, d)
+    v: jnp.ndarray        # (B, S, Hkv, d)
+    length: jnp.ndarray   # (B,) int32 — tokens filled
+
+    @classmethod
+    def create(cls, batch, max_len, n_kv_heads, d_head, dtype=jnp.bfloat16):
+        z = jnp.zeros((batch, max_len, n_kv_heads, d_head), dtype)
+        return cls(z, z, jnp.zeros((batch,), jnp.int32))
+
+    def append(self, k_new, v_new):
+        """k_new/v_new: (B, Tnew, Hkv, d).  Returns updated cache.
+
+        Tnew == 1 (decode) uses a masked elementwise update — a
+        dynamic-update-slice at a traced offset on the (sequence-sharded)
+        cache dim would force GSPMD to all-gather the cache (measured
+        ~17 GB/dev on musicgen decode_32k; §Perf it.3).  Prefill (length==0)
+        writes with a static offset, which partitions cleanly.
+        """
+        B, Tnew = k_new.shape[:2]
+        if Tnew == 1:
+            S = self.k.shape[1]
+            slot = jax.lax.broadcasted_iota(jnp.int32, (B, S), 1) == \
+                self.length[:, None]                       # (B, S)
+            m = slot[..., None, None]
+            k = jnp.where(m, k_new.astype(self.k.dtype), self.k)
+            v = jnp.where(m, v_new.astype(self.v.dtype), self.v)
+            return DenseKVCache(k, v, self.length + 1)
+        # All batch rows share the same length in our serving batches.
+        k = jax.lax.dynamic_update_slice(self.k, k_new.astype(self.k.dtype),
+                                         (0, self.length[0], 0, 0))
+        v = jax.lax.dynamic_update_slice(self.v, v_new.astype(self.v.dtype),
+                                         (0, self.length[0], 0, 0))
+        return DenseKVCache(k, v, self.length + Tnew)
+
+
+class WindowKVCache(NamedTuple):
+    k: jnp.ndarray        # (B, W, Hkv, d) ring buffer
+    v: jnp.ndarray
+    positions: jnp.ndarray  # (B, W) int32 original positions (-1 = empty)
+    length: jnp.ndarray   # (B,) total tokens seen
+
+    @classmethod
+    def create(cls, batch, window, n_kv_heads, d_head, dtype=jnp.bfloat16):
+        z = jnp.zeros((batch, window, n_kv_heads, d_head), dtype)
+        pos = jnp.full((batch, window), -1, jnp.int32)
+        return cls(z, z, pos, jnp.zeros((batch,), jnp.int32))
+
+    def append_one(self, k_new, v_new):
+        """k_new/v_new: (B, Hkv, d) — single decode step."""
+        W = self.k.shape[1]
+        slot = self.length[0] % W
+        k = jax.lax.dynamic_update_slice(
+            self.k, k_new[:, None].astype(self.k.dtype), (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            self.v, v_new[:, None].astype(self.v.dtype), (0, slot, 0, 0))
+        pos = jax.lax.dynamic_update_slice(
+            self.positions, jnp.broadcast_to(
+                self.length[:, None], (self.positions.shape[0], 1)).astype(jnp.int32),
+            (0, slot))
+        return WindowKVCache(k, v, pos, self.length + 1)
+
+
+class MLAKVCache(NamedTuple):
+    latent: jnp.ndarray   # (B, S, kv_lora) compressed KV
+    k_rope: jnp.ndarray   # (B, S, rope_dim) shared rotary key
+    length: jnp.ndarray
+
+    @classmethod
+    def create(cls, batch, max_len, kv_lora, rope_dim, dtype=jnp.bfloat16):
+        return cls(jnp.zeros((batch, max_len, kv_lora), dtype),
+                   jnp.zeros((batch, max_len, rope_dim), dtype),
+                   jnp.zeros((batch,), jnp.int32))
+
+    def append(self, latent_new, k_rope_new):
+        B, Tnew = latent_new.shape[:2]
+        if Tnew == 1:  # masked update — see DenseKVCache.append
+            S = self.latent.shape[1]
+            slot = jax.lax.broadcasted_iota(jnp.int32, (B, S), 1) == \
+                self.length[:, None]
+            lat = jnp.where(slot[..., None],
+                            latent_new.astype(self.latent.dtype), self.latent)
+            kr = jnp.where(slot[..., None],
+                           k_rope_new.astype(self.k_rope.dtype), self.k_rope)
+            return MLAKVCache(lat, kr, self.length + 1)
+        start = self.length[0]
+        lat = jax.lax.dynamic_update_slice(
+            self.latent, latent_new.astype(self.latent.dtype), (0, start, 0))
+        kr = jax.lax.dynamic_update_slice(
+            self.k_rope, k_rope_new.astype(self.k_rope.dtype), (0, start, 0))
+        return MLAKVCache(lat, kr, self.length + latent_new.shape[1])
+
+
+class MoSAKVCache(NamedTuple):
+    """Streaming expert-choice cache: one top-k set per (batch, head)."""
+
+    k: jnp.ndarray        # (B, H, k, d) selected keys
+    v: jnp.ndarray        # (B, H, k, d) selected values
+    scores: jnp.ndarray   # (B, H, k) fp32 router scores; -inf = empty slot
+    idx: jnp.ndarray      # (B, H, k) original positions; -1 = empty
+    length: jnp.ndarray   # (B,) tokens seen
+
+    @classmethod
+    def create(cls, batch, n_heads, k, d_head, dtype=jnp.bfloat16):
+        return cls(
+            jnp.zeros((batch, n_heads, k, d_head), dtype),
+            jnp.zeros((batch, n_heads, k, d_head), dtype),
+            jnp.full((batch, n_heads, k), -jnp.inf, jnp.float32),
+            jnp.full((batch, n_heads, k), -1, jnp.int32),
+            jnp.zeros((batch,), jnp.int32))
+
+    @property
+    def kv_entries(self):
+        return self.k.shape[1] * self.k.shape[2]  # H * k — the paper's KV metric

@@ -1,0 +1,243 @@
+"""Mixture of Sparse Attention — the paper's core layer.
+
+Per head: router scores r = sigmoid(X W^r); expert-choice top-k token
+selection; Q/K/V/O computed *only* for the selected tokens; attention over the
+k x k submatrix with the index-derived causal mask (I_i >= I_j) and RoPE at
+the original positions; outputs scaled by the router score (this carries the
+router's gradient) and scatter-added back to the full sequence.
+
+Complexity per head: O(k^2 + T) versus O(T^2) dense.
+
+Implementation notes (TPU adaptation — see DESIGN.md §3):
+  * all shapes static (expert-choice: exactly k per head);
+  * indices sorted ascending → the mask is effectively lower-triangular and
+    the scatter-add back to the sequence touches memory in order;
+  * heads are batched into single einsums over an explicit head axis, which
+    shards over the `model` mesh axis (head-parallel TP);
+  * the inner attention can run through the Pallas kernel (`impl="pallas"`)
+    or the fused-XLA reference path (`impl="einsum"`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoSAConfig
+from repro.core import rope as rope_lib
+from repro.dist import hints
+from repro.core.kv_cache import MoSAKVCache
+from repro.core.router import (ExpertChoiceRouter, select_topk, selection_mask,
+                               streaming_topk_update)
+from repro.nn.layers import _trunc_normal
+from repro.nn.module import logical
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class MoSAAttention:
+    d_model: int
+    cfg: MoSAConfig
+    rope_theta: float = 10000.0
+    rotary_frac: float = 0.5        # paper rotates half the dims
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    impl: str = "einsum"            # einsum | pallas
+
+    @property
+    def router(self):
+        return ExpertChoiceRouter(self.d_model, self.cfg.n_mosa_heads,
+                                  self.param_dtype)
+
+    def init(self, key):
+        c = self.cfg
+        kr, kq, kk, kv, ko = jax.random.split(key, 5)
+        H, h, d = c.n_mosa_heads, self.d_model, c.d_head
+        std = h ** -0.5
+        return {
+            "router": self.router.init(kr),
+            "wq": _trunc_normal(kq, (H, h, d), std, self.param_dtype),
+            "wk": _trunc_normal(kk, (H, h, d), std, self.param_dtype),
+            "wv": _trunc_normal(kv, (H, h, d), std, self.param_dtype),
+            "wo": _trunc_normal(ko, (H, d, h), d ** -0.5, self.param_dtype),
+        }
+
+    def specs(self):
+        return {
+            "router": self.router.specs(),
+            "wq": logical("mosa_heads", "embed", None),
+            "wk": logical("mosa_heads", "embed", None),
+            "wv": logical("mosa_heads", "embed", None),
+            "wo": logical("mosa_heads", None, "embed"),
+        }
+
+    def k_for(self, T: int) -> int:
+        """Paper §3.5: k = max(floor(T / rho), min_k), capped at T.
+        With k_fixed > 0 (paper §3.4 long-sequence mode): constant k."""
+        if self.cfg.k_fixed > 0:
+            return min(self.cfg.k_fixed, T)
+        return max(min(T // self.cfg.sparsity, T), min(self.cfg.min_k, T))
+
+    # ------------------------------------------------------------------ train
+    def __call__(self, params, x, positions=None):
+        """x: (B, T, h) -> (B, T, h).  Full MoSA layer (all heads)."""
+        c, cd = self.cfg, self.compute_dtype
+        B, T, h = x.shape
+        H, d = c.n_mosa_heads, c.d_head
+        k = self.k_for(T)
+
+        scores = self.router.scores(params["router"], x)          # (B,H,T) fp32
+        r, idx = select_topk(scores, k, c.force_first_token)      # (B,H,k)
+
+        if positions is None:
+            pos_sel = idx
+        else:
+            base = positions if positions.ndim == 2 else positions[0]
+            pos_sel = jnp.take_along_axis(base[:, None], idx, axis=-1)
+
+        # Gather selected tokens: (B, H, k, h).  vmap over the batch keeps B
+        # a scatter/gather *batching* dim for GSPMD — explicit batch indices
+        # made it replicate B and all-reduce 16 GiB buffers per layer
+        # (§Perf cell-2 it.8).
+        xs = jax.vmap(lambda xb, ib: xb[ib])(x.astype(cd), idx)
+
+        q = jnp.einsum("bnkh,nhd->bnkd", xs, params["wq"].astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd)
+        kk = jnp.einsum("bnkh,nhd->bnkd", xs, params["wk"].astype(cd),
+                        preferred_element_type=jnp.float32).astype(cd)
+        v = jnp.einsum("bnkh,nhd->bnkd", xs, params["wv"].astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd)
+        q = rope_lib.apply_rope(q, pos_sel, self.rope_theta, self.rotary_frac)
+        kk = rope_lib.apply_rope(kk, pos_sel, self.rope_theta, self.rotary_frac)
+
+        if self.impl == "pallas":
+            from repro.kernels import ops as kops
+            att = kops.mosa_attention(q, kk, v, idx, r.astype(jnp.float32))
+        else:
+            att = self._einsum_attention(q, kk, v, idx, r)
+
+        # Per-head output projection, then scatter-add to original positions
+        # (vmap'd over batch — see gather note above).
+        y_heads = jnp.einsum("bnkd,ndh->bnkh", att.astype(cd),
+                             params["wo"].astype(cd),
+                             preferred_element_type=jnp.float32).astype(cd)
+
+        def scatter_one(yh, ib):
+            return jnp.zeros((T, h), cd).at[ib.reshape(-1)].add(
+                yh.reshape(-1, h))
+
+        y = jax.vmap(scatter_one)(y_heads, idx)
+        # partial head-contributions combine into the seq-sharded residual:
+        # constraining here lets GSPMD emit a reduce-scatter, not all-reduce
+        y = hints.constrain(y, ("dp", "tp", None))
+        return y
+
+    def _einsum_attention(self, q, k, v, idx, r):
+        """Reference attention over selected tokens.  All inputs (B,H,k,*)."""
+        scale = self.cfg.d_head ** -0.5
+        s = jnp.einsum("bnqd,bnkd->bnqk", q, k,
+                       preferred_element_type=jnp.float32) * scale
+        mask = selection_mask(idx, idx)                            # (B,H,k,k)
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+        att = jnp.einsum("bnqk,bnkd->bnqd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        # Router scaling — the router's gradient path.
+        return att * r[..., None]
+
+    def routing_stats(self, params, x):
+        """Diagnostics: score stats + head-overlap (for logging)."""
+        B, T, _ = x.shape
+        k = self.k_for(T)
+        scores = self.router.scores(params["router"], x)
+        r, idx = select_topk(scores, k, self.cfg.force_first_token)
+        sel = jax.nn.one_hot(idx, T, dtype=jnp.float32).sum(2)      # (B,H,T)
+        coverage = (sel.sum(1) > 0).mean()       # fraction of tokens any head picks
+        load = sel.sum(1).mean() / k             # avg #heads per token / k
+        return {"score_mean": scores.mean(), "score_std": scores.std(),
+                "coverage": coverage, "load": load}
+
+    # ---------------------------------------------------------------- serving
+    def prefill(self, params, x, cache: MoSAKVCache, positions=None):
+        """Run the prompt through training-style selection and fill the cache
+        with each head's top-k K/V (the prompt is fully known, so
+        non-autoregressive selection is exact here)."""
+        c, cd = self.cfg, self.compute_dtype
+        B, T, h = x.shape
+        k_cache = cache.k.shape[2]
+        k = min(self.k_for(T), k_cache)
+
+        y = self(params, x, positions)
+
+        scores = self.router.scores(params["router"], x)
+        r, idx = select_topk(scores, k, c.force_first_token)
+        xs = jax.vmap(lambda xb, ib: xb[ib])(x.astype(cd), idx)
+        kk = jnp.einsum("bnkh,nhd->bnkd", xs, params["wk"].astype(cd),
+                        preferred_element_type=jnp.float32).astype(cd)
+        kk = rope_lib.apply_rope(kk, idx, self.rope_theta, self.rotary_frac)
+        v = jnp.einsum("bnkh,nhd->bnkd", xs, params["wv"].astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd)
+        pad = k_cache - k
+        if pad:
+            kk = jnp.pad(kk, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            r = jnp.pad(r, ((0, 0), (0, 0), (0, pad)), constant_values=-jnp.inf)
+            idx = jnp.pad(idx, ((0, 0), (0, 0), (0, pad)), constant_values=-1)
+        cache = MoSAKVCache(kk, v, r.astype(jnp.float32), idx,
+                            cache.length + T)
+        return y, cache
+
+    def decode_step(self, params, x, cache: MoSAKVCache, positions=None):
+        """Streaming expert-choice decode (MoD-style adaptation, DESIGN §5).
+
+        x: (B, 1, h).  The new token enters a head's top-k set iff its router
+        score beats the current minimum (or it is the forced first token);
+        only then does that head compute its output for this position.
+        KV memory stays at k entries per head forever.
+        """
+        c, cd = self.cfg, self.compute_dtype
+        B, _, h = x.shape
+        H, d = c.n_mosa_heads, c.d_head
+        t = cache.length[0] if positions is None else positions[0, 0]
+
+        x0 = x[:, 0]                                              # (B, h)
+        score = self.router.scores(params["router"], x)[..., 0]   # (B, H)
+        is_forced = jnp.logical_and(jnp.asarray(c.force_first_token), t == 0)
+
+        q = jnp.einsum("bh,nhd->bnd", x0.astype(cd), params["wq"].astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd)
+        kk = jnp.einsum("bh,nhd->bnd", x0.astype(cd), params["wk"].astype(cd),
+                        preferred_element_type=jnp.float32).astype(cd)
+        v = jnp.einsum("bh,nhd->bnd", x0.astype(cd), params["wv"].astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd)
+        pos_t = jnp.full((B, H, 1), t, jnp.int32)
+        q = rope_lib.apply_rope(q[:, :, None], pos_t, self.rope_theta,
+                                self.rotary_frac)[:, :, 0]
+        kk = rope_lib.apply_rope(kk[:, :, None], pos_t, self.rope_theta,
+                                 self.rotary_frac)[:, :, 0]
+
+        selected, slot, new_scores, new_idx = streaming_topk_update(
+            cache.scores, cache.idx, score, t, is_forced)
+
+        onehot = jax.nn.one_hot(slot, cache.k.shape[2], dtype=cd)  # (B,H,k)
+        upd = (onehot * selected[..., None].astype(cd))[..., None]
+        new_k = cache.k * (1 - upd) + upd * kk[:, :, None]
+        new_v = cache.v * (1 - upd) + upd * v[:, :, None]
+
+        # Attention of the (possibly inserted) query over the cached set.
+        valid = new_idx >= 0                                       # (B,H,k)
+        s = jnp.einsum("bnd,bnkd->bnk", q, new_k,
+                       preferred_element_type=jnp.float32) * (d ** -0.5)
+        s = jnp.where(valid, s, NEG_INF)
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+        att = jnp.einsum("bnk,bnkd->bnd", p.astype(cd), new_v,
+                         preferred_element_type=jnp.float32)
+        att = att * (score * selected.astype(jnp.float32))[..., None]
+        y = jnp.einsum("bnd,ndh->bh", att.astype(cd), params["wo"].astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd)
+
+        cache = MoSAKVCache(new_k, new_v, new_scores, new_idx, cache.length + 1)
+        return y[:, None], cache

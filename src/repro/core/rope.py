@@ -1,0 +1,73 @@
+"""Rotary position embeddings, position-index aware.
+
+MoSA gathers an arbitrary subset of tokens per head, so RoPE must be applied
+at the *original* sequence positions (the gathered index vector ``I``), not at
+``arange(k)``.  Everything here therefore takes an explicit ``positions``
+array broadcastable to the leading dims of the input.
+
+Also implements:
+  * partial rotary (``rotary_frac`` — the paper rotates half the dims),
+  * M-RoPE (qwen2-vl): the frequency dimension is split into (t, h, w)
+    sections, each section driven by its own position component.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def inv_freqs(d_rot: int, theta: float) -> jnp.ndarray:
+    """(d_rot // 2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
+
+
+def _rotate_half(x):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([-x2, x1], axis=-1)
+
+
+def apply_rope(x, positions, theta: float = 10000.0, rotary_frac: float = 1.0,
+               mrope_sections: tuple = ()):
+    """Apply RoPE at explicit positions.
+
+    x:         (..., L, d) queries or keys.
+    positions: (..., L) integer positions, broadcastable to x's leading dims;
+               for M-RoPE: (3, ..., L) with (t, h, w) components.
+    """
+    d = x.shape[-1]
+    d_rot = int(d * rotary_frac)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    x_rot, x_pass = x[..., :d_rot], x[..., d_rot:]
+    freqs = inv_freqs(d_rot, theta)                       # (d_rot/2,)
+
+    if mrope_sections:
+        assert positions.ndim >= 1 and positions.shape[0] == 3, \
+            "M-RoPE positions must have a leading (t,h,w) axis of size 3"
+        assert sum(mrope_sections) == d_rot // 2, \
+            f"mrope sections {mrope_sections} must sum to {d_rot // 2}"
+        pos = positions.astype(jnp.float32)               # (3, ..., L)
+        ang_all = pos[..., None] * freqs                  # (3, ..., L, d_rot/2)
+        chunks = []
+        off = 0
+        for comp, sec in enumerate(mrope_sections):
+            chunks.append(ang_all[comp, ..., off:off + sec])
+            off += sec
+        angles = jnp.concatenate(chunks, axis=-1)         # (..., L, d_rot/2)
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * freqs
+
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    cos = jnp.concatenate([cos, cos], axis=-1).astype(x.dtype)
+    sin = jnp.concatenate([sin, sin], axis=-1).astype(x.dtype)
+    x_rot = x_rot * cos + _rotate_half(x_rot) * sin
+    if x_pass.shape[-1] == 0:
+        return x_rot
+    return jnp.concatenate([x_rot, x_pass], axis=-1)
+
+
+def text_mrope_positions(positions):
+    """Lift 1-D text positions to (3, ...) M-RoPE positions (t=h=w)."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)

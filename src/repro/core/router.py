@@ -1,0 +1,104 @@
+"""Expert-choice token router — the heart of MoSA.
+
+Each MoSA head owns one router vector ``W^r in R^h``.  Scores are the
+*non-competitive* sigmoid ``r = sigmoid(X W^r)`` (sigma-MoE observation cited
+by the paper), and each head independently selects its top-k tokens
+(expert-choice: the head is the expert, so load balance is perfect by
+construction — exactly k tokens per head, no auxiliary loss).
+
+Selection is non-autoregressive (paper §5); the *scores* however are strictly
+causal (token t's score depends only on token t).  ``streaming_topk_update``
+implements the MoD-style autoregressive adaptation used by the serving path:
+a running top-k set with evict-min updates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import logical
+from repro.nn.layers import _trunc_normal
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertChoiceRouter:
+    d_model: int
+    n_heads: int
+    param_dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        # Router kept in fp32: top-k boundary decisions are precision-sensitive.
+        return {"w": _trunc_normal(key, (self.n_heads, self.d_model),
+                                   self.d_model ** -0.5, jnp.float32)}
+
+    def specs(self):
+        return {"w": logical("mosa_heads", "embed")}
+
+    def scores(self, params, x):
+        """x: (B, T, h) -> sigmoid scores (B, H, T) in fp32."""
+        logits = jnp.einsum("bth,nh->bnt", x.astype(jnp.float32), params["w"],
+                            preferred_element_type=jnp.float32)
+        return jax.nn.sigmoid(logits)
+
+
+def select_topk(scores, k: int, force_first: bool = True):
+    """Expert-choice selection.
+
+    scores: (B, H, T) fp32.  Returns (r, idx), both (B, H, k), with ``idx``
+    sorted ascending (so the index-derived causal mask is lower-triangular and
+    the scatter back to the sequence is ordered) and ``r`` the corresponding
+    router scores.
+
+    ``force_first`` always includes token 0 (StreamingLLM attention-sink
+    observation, used by the paper's IsoFLOP experiments): the head selects
+    k-1 tokens from positions 1..T-1 plus token 0.  Token 0's output is still
+    scaled by its *actual* router score.
+    """
+    B, H, T = scores.shape
+    assert 0 < k <= T, f"k={k} out of range for T={T}"
+    if force_first and k >= 2:
+        _, idx_rest = jax.lax.top_k(scores[..., 1:], k - 1)      # (B, H, k-1)
+        idx = jnp.concatenate(
+            [jnp.zeros((B, H, 1), idx_rest.dtype), idx_rest + 1], axis=-1)
+    else:
+        _, idx = jax.lax.top_k(scores, k)
+    idx = jnp.sort(idx, axis=-1)
+    r = jnp.take_along_axis(scores, idx, axis=-1)
+    return r, idx
+
+
+def selection_mask(idx_q, idx_k):
+    """Causal mask from original indices: allow iff I_q >= I_k.
+
+    idx_q: (..., kq), idx_k: (..., kk) -> bool (..., kq, kk).
+    """
+    return idx_q[..., :, None] >= idx_k[..., None, :]
+
+
+def streaming_topk_update(cache_scores, cache_idx, new_score, new_pos, is_forced):
+    """One step of the autoregressive (serving-time) top-k approximation.
+
+    cache_scores: (..., k) current per-slot scores (-inf = empty slot)
+    cache_idx:    (..., k) original positions of cached tokens
+    new_score:    (...,)   router score of the incoming token
+    new_pos:      scalar or (...,) its position
+    is_forced:    bool — force insertion (token 0 / attention sink)
+
+    Returns (selected, slot, new_scores, new_idx):
+      selected: (...,) bool — whether the token entered the set
+      slot:     (...,) int  — which slot it replaced (valid where selected)
+    """
+    min_slot = jnp.argmin(cache_scores, axis=-1)                   # (...,)
+    min_score = jnp.take_along_axis(cache_scores, min_slot[..., None], -1)[..., 0]
+    selected = jnp.logical_or(new_score > min_score, is_forced)
+    slot = min_slot
+    new_scores = jnp.where(
+        jax.nn.one_hot(slot, cache_scores.shape[-1], dtype=bool) & selected[..., None],
+        new_score[..., None], cache_scores)
+    new_idx = jnp.where(
+        jax.nn.one_hot(slot, cache_idx.shape[-1], dtype=bool) & selected[..., None],
+        jnp.asarray(new_pos)[..., None].astype(cache_idx.dtype), cache_idx)
+    return selected, slot, new_scores, new_idx

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: causal (optionally sliding-window) flash attention, GQA.
+
+Serves the dense / local heads of the hybrid layer.  Standard flash-v2
+streaming softmax with BlockSpec VMEM tiling:
+
+  grid = (B, Hq, Tq // block_q); KV streamed in ``block_k`` tiles with the
+  block range cut to [lo, hi) by causality (and the sliding window), so the
+  work per query block is O(min(q_end, window) ) rather than O(Tk).
+
+GQA is expressed in the BlockSpec index_map: the KV block for query head h is
+loaded from kv head h // (Hq // Hkv) — no materialized repeat.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float,
+                  window: int, q_offset: int):
+    """Refs: q (1, 1, bq, d); k/v (1, 1, Tk, d); o (1, 1, bq, d)."""
+    block_q, d = q_ref.shape[2], q_ref.shape[3]
+    Tk = k_ref.shape[2]
+
+    qi = pl.program_id(2)
+    q_start = qi * block_q + q_offset          # absolute position of q row 0
+    q = q_ref[0, 0].astype(jnp.float32) * scale
+    q_pos = q_start + jax.lax.iota(jnp.int32, block_q)
+
+    # causal upper bound: last query in the block attends up to q_end
+    q_end = q_start + block_q                  # exclusive
+    hi = jnp.minimum(pl.cdiv(q_end, block_k), Tk // block_k)
+    lo = 0
+    if window > 0:
+        lo = jnp.maximum((q_start - window + 1) // block_k, 0)
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = jax.lax.dynamic_slice(
+            k_ref[0, 0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice(
+            v_ref[0, 0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
+        k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+
+        s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        if window > 0:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1)
+        acc = acc * corr[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, acc0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
+                                             "window", "q_offset", "interpret"))
+def flash_attention_pallas(q, k, v, *, block_q: int = 128, block_k: int = 128,
+                           scale: float | None = None, window: int = 0,
+                           q_offset: int | None = None,
+                           interpret: bool = False):
+    """q: (B, Hq, Tq, d); k, v: (B, Hkv, Tk, d).  ``q_offset`` is the absolute
+    position of q row 0 (default: Tk - Tq, i.e. q rows are the last Tq
+    positions of the context — pass it explicitly when shapes are padded).
+    Preconditions (ops.py): Tq % block_q == 0, Tk % block_k == 0, d a
+    multiple of 128.
+    """
+    B, Hq, Tq, d = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    assert Tq % block_q == 0 and Tk % block_k == 0
+    assert Hq % Hkv == 0
+    n_rep = Hq // Hkv
+    scale = scale if scale is not None else d ** -0.5
+    if q_offset is None:
+        q_offset = Tk - Tq
+
+    grid = (B, Hq, Tq // block_q)
+    kernel = functools.partial(_flash_kernel, block_k=block_k, scale=scale,
+                               window=window, q_offset=q_offset)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Tk, d), lambda b, h, i: (b, h // n_rep, 0, 0)),
+            pl.BlockSpec((1, 1, Tk, d), lambda b, h, i: (b, h // n_rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Tq, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+    return out

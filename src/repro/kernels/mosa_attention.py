@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: MoSA inner attention over expert-choice-selected tokens.
+
+The hot spot the paper leaves to "future CUDA kernels": attention over the k
+selected tokens of each head, with
+  * the index-derived causal mask (I_q >= I_k) fused in,
+  * the router scaling (diag(r) A) fused into the output,
+  * flash-style streaming softmax (fp32 running max / denom),
+  * BlockSpec VMEM tiling: one (batch*head) slice per grid step, queries in
+    MXU-aligned blocks of ``block_q``, K/V streamed in blocks of ``block_k``.
+
+Shapes are MXU-friendly by construction: ops.py pads d_head to a multiple of
+128 lanes and S (selected count) to a multiple of the block size; padded KV
+slots carry idx = +INT_MAX so the mask kills them, padded queries are sliced
+off by the wrapper.
+
+VMEM budget per grid step (defaults bq=bk=128, d<=128 padded):
+  q block 128x128x4B = 64 KiB; k/v blocks 2x64 KiB; scores 128x128x4B = 64 KiB
+  + accumulators — well under the ~16 MiB/core VMEM of v5e.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _mosa_kernel(idx_ref, r_ref, q_ref, k_ref, v_ref, o_ref, *,
+                 block_k: int, scale: float):
+    """Grid: (BH, S // block_q).  Refs (VMEM blocks):
+
+    idx_ref: (1, S)       — selected-token original positions (whole row)
+    r_ref:   (1, block_q) — router scores for this query block
+    q_ref:   (1, block_q, d)
+    k_ref:   (1, S, d)    — all selected keys for this (b, h)
+    v_ref:   (1, S, d)
+    o_ref:   (1, block_q, d)
+    """
+    block_q, d = q_ref.shape[1], q_ref.shape[2]
+    S = k_ref.shape[1]
+    n_kb = S // block_k
+
+    q = q_ref[0].astype(jnp.float32) * scale                  # (bq, d)
+    qi = pl.program_id(1)
+    idx_q = jax.lax.dynamic_slice(idx_ref[0], (qi * block_q,), (block_q,))
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = jax.lax.dynamic_slice(
+            k_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice(
+            v_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
+        idx_k = jax.lax.dynamic_slice(idx_ref[0], (kb * block_k,), (block_k,))
+
+        s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        mask = (idx_q[:, None] >= idx_k[None, :]) & (idx_k >= 0)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1)
+        acc = acc * corr[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    out = out * r_ref[0][:, None]                              # router scaling
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
+                                             "interpret"))
+def mosa_attention_pallas(q, k, v, idx, r, *, block_q: int = 128,
+                          block_k: int = 128, scale: float | None = None,
+                          interpret: bool = False):
+    """q, k, v: (B, H, S, d); idx: (B, H, S) int32; r: (B, H, S) fp32.
+
+    Preconditions (ops.py guarantees them): S % block_q == 0,
+    S % block_k == 0, d padded to 128 lanes.
+    """
+    B, H, S, d = q.shape
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    scale = scale if scale is not None else d ** -0.5
+    BH = B * H
+    qf = q.reshape(BH, S, d)
+    kf = k.reshape(BH, S, d)
+    vf = v.reshape(BH, S, d)
+    idxf = idx.reshape(BH, S)
+    rf = r.reshape(BH, S).astype(jnp.float32)
+
+    grid = (BH, S // block_q)
+    kernel = functools.partial(_mosa_kernel, block_k=block_k, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, S), lambda b, i: (b, 0)),            # idx
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),      # r
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),  # q
+            pl.BlockSpec((1, S, d), lambda b, i: (b, 0, 0)),      # k
+            pl.BlockSpec((1, S, d), lambda b, i: (b, 0, 0)),      # v
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        interpret=interpret,
+    )(idxf, rf, qf, kf, vf)
+    return out.reshape(B, H, S, d)

@@ -1,0 +1,85 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles shape hygiene (padding S and d_head to MXU-aligned tiles, unpadding
+outputs) and platform dispatch: on TPU the kernels lower natively; elsewhere
+they run through the Pallas interpreter (set ``REPRO_PALLAS_INTERPRET=0`` to
+force native lowering, e.g. inside TPU tests).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.mosa_attention import mosa_attention_pallas
+
+LANE = 128
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis, mult, value=0.0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def mosa_attention(q, k, v, idx, r, *, block_q: int = 128, block_k: int = 128,
+                   interpret: bool | None = None):
+    """MoSA inner attention (see kernels/mosa_attention.py).
+
+    q,k,v: (B,H,S,d); idx: (B,H,S) sorted ascending; r: (B,H,S) fp32.
+    Returns (B,H,S,d) in q.dtype.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    B, H, S, d = q.shape
+    bq = min(block_q, max(8, 1 << (S - 1).bit_length()))
+    bk = min(block_k, bq)
+    scale = d ** -0.5  # scale on the TRUE head dim, before padding
+
+    qp = _pad_to(_pad_to(q, 3, LANE), 2, bq)
+    kp = _pad_to(_pad_to(k, 3, LANE), 2, bk)
+    vp = _pad_to(_pad_to(v, 3, LANE), 2, bk)
+    Sp = qp.shape[2]
+    # pad idx with INT_MAX (mask kills padded keys), r with 0 (zero output)
+    idxp = _pad_to(idx, 2, bq, value=jnp.iinfo(jnp.int32).max)
+    rp = _pad_to(r, 2, bq, value=0.0)
+
+    out = mosa_attention_pallas(qp, kp, vp, idxp, rp, block_q=bq, block_k=bk,
+                                scale=scale, interpret=interpret)
+    return out[:, :, :S, :d]
+
+
+def flash_attention(q, k, v, *, window: int = 0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """Causal/windowed GQA flash attention.  q: (B,Hq,Tq,d), k/v (B,Hkv,Tk,d)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    B, Hq, Tq, d = q.shape
+    Tk = k.shape[2]
+    bq = min(block_q, max(8, 1 << (Tq - 1).bit_length()))
+    bk = min(block_k, max(8, 1 << (Tk - 1).bit_length()))
+    scale = d ** -0.5
+
+    qp = _pad_to(_pad_to(q, 3, LANE), 2, bq)
+    kp = _pad_to(_pad_to(k, 3, LANE), 2, bk)
+    vp = _pad_to(_pad_to(v, 3, LANE), 2, bk)
+    # NOTE: padded KV rows sit at positions >= Tk; causal masking with
+    # absolute positions already excludes them for all real queries because
+    # real q positions are < Tk.  Padded q rows are sliced off below.
+    out = flash_attention_pallas(qp, kp, vp, block_q=bq, block_k=bk,
+                                 scale=scale, window=window,
+                                 q_offset=Tk - Tq, interpret=interpret)
+    return out[:, :, :Tq, :d]

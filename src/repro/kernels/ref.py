@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mosa_attention_ref(q, k, v, idx, r, scale=None):
+    """MoSA inner attention over selected tokens.
+
+    q, k, v: (B, H, S, d) — S = number of selected tokens (the paper's k)
+    idx:     (B, H, S) int32 original positions (sorted ascending); -1 = pad
+    r:       (B, H, S) fp32 router scores for the *query* tokens
+    out:     (B, H, S, d) = softmax(q k^T masked by idx_q >= idx_k) v * r_q
+    """
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    valid_k = idx >= 0
+    mask = (idx[..., :, None] >= idx[..., None, :]) & valid_k[..., None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    att = jnp.einsum("bhqk,bhkd->bhqd", p / denom, v.astype(jnp.float32))
+    return (att * r[..., None]).astype(q.dtype)
+
+
+def flash_attention_ref(q, k, v, scale=None, window: int = 0, k_len=None):
+    """Causal (optionally sliding-window) GQA attention.
+
+    q: (B, Hq, Tq, d); k, v: (B, Hkv, Tk, d); Hq % Hkv == 0.
+    q rows are the *last* Tq positions of the Tk-long context
+    (Tq == Tk for training; Tq == 1 for decode).
+    k_len: optional (B,) valid KV length (defaults to Tk).
+    """
+    B, Hq, Tq, d = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    if Hq != Hkv:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    q_pos = jnp.arange(Tk - Tq, Tk)
+    k_pos = jnp.arange(Tk)
+    ok = q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    ok = jnp.broadcast_to(ok, (B, Hq, Tq, Tk))
+    if k_len is not None:
+        ok = ok & (k_pos[None, None, None, :] < k_len[:, None, None, None])
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(ok, p, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

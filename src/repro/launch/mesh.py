@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first init).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def _auto(n):
+    return (AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=_auto(len(shape)))
+
+
+def make_host_mesh(tp: int = 1):
+    """Mesh over whatever devices exist (CPU tests, elastic restarts)."""
+    n = len(jax.devices())
+    tp = min(tp, n)
+    return jax.make_mesh((n // tp, tp), ("data", "model"),
+                         axis_types=_auto(2))

@@ -1,0 +1,179 @@
+"""Batched serving driver.
+
+Prefill + decode with per-layer caches; the MoSA layers realize the paper's
+KV-cache reduction at serve time (streaming top-k cache, DESIGN §5).
+
+Library entry points:
+  * ``Server`` — holds jit'd ``prefill`` / ``decode_step`` with cache
+    shardings; ``generate`` runs greedy/temperature decoding for a batch.
+  * ``RequestPool`` — minimal continuous-batching front end: requests join a
+    fixed-size batch; finished slots are refilled between decode steps.
+
+CLI (smoke-scale):
+  PYTHONPATH=src python -m repro.launch.serve --arch mosa-paper \\
+      --preset smoke --variant mosa --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.dist import sharding as shd
+from repro.dist import hints
+from repro.dist.fault_tolerance import elastic_plan
+from repro.launch import mesh as mesh_lib
+from repro.nn.module import init_shapes
+from repro.nn.transformer import TransformerLM
+
+
+class Server:
+    def __init__(self, model_cfg, mesh=None, rule_set: str = "tp",
+                 max_len: int = 256, batch: int = 4, params=None,
+                 seq_sharded: bool = False):
+        self.model_cfg = model_cfg
+        self.model = TransformerLM(model_cfg)
+        if mesh is None:
+            plan = elastic_plan(len(jax.devices()), tp=1)
+            mesh = mesh_lib.make_mesh(plan["shape"], plan["axes"])
+        self.mesh = mesh
+        self.max_len = max_len
+        self.batch = batch
+
+        shapes = init_shapes(self.model)
+        self.param_sh = shd.param_shardings(self.model, mesh, rule_set, shapes)
+        cache_shapes = jax.eval_shape(
+            lambda: self.model.init_cache(batch, max_len))
+        self.cache_sh = shd.cache_shardings(cache_shapes, mesh, rule_set,
+                                            seq_sharded=seq_sharded)
+        tok_sh = shd.batch_sharding(mesh, rule_set, batch=batch)
+
+        self.prefill = jax.jit(
+            self.model.prefill,
+            in_shardings=(self.param_sh, tok_sh, self.cache_sh),
+            out_shardings=(None, self.cache_sh))
+        self.decode_step = jax.jit(
+            self.model.decode_step,
+            in_shardings=(self.param_sh, tok_sh, self.cache_sh),
+            out_shardings=(None, self.cache_sh),
+            donate_argnums=(2,))
+
+        if params is None:
+            with mesh:
+                params = jax.jit(self.model.init,
+                                 out_shardings=self.param_sh)(
+                    jax.random.PRNGKey(0))
+        self.params = params
+
+    def new_cache(self):
+        with self.mesh:
+            return jax.jit(
+                lambda: self.model.init_cache(self.batch, self.max_len),
+                out_shardings=self.cache_sh)()
+
+    def generate(self, prompts: jnp.ndarray, gen_len: int,
+                 temperature: float = 0.0, key=None):
+        """prompts: (B, P) int32 -> (B, gen_len) int32 greedy/temp sampling."""
+        B, P = prompts.shape
+        assert B == self.batch
+        caches = self.new_cache()
+        with self.mesh, hints.sharding_hints(mesh=self.mesh):
+            logits, caches = self.prefill(self.params, prompts, caches)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            out = [tok]
+            for i in range(gen_len - 1):
+                logits, caches = self.decode_step(self.params, tok, caches)
+                if temperature > 0:
+                    key, sub = jax.random.split(key)
+                    tok = jax.random.categorical(
+                        sub, logits[:, -1] / temperature).astype(jnp.int32)[:, None]
+                else:
+                    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+                out.append(tok)
+        return jnp.concatenate(out, axis=1), caches
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: jnp.ndarray
+    max_new: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class RequestPool:
+    """Continuous-batching-lite: fixed B slots, refill when a request ends."""
+
+    def __init__(self, server: Server, eos: int = 0):
+        self.server = server
+        self.eos = eos
+        self.queue: list = []
+        self.slots: list = [None] * server.batch
+
+    def submit(self, prompt, max_new: int):
+        rid = len(self.queue)
+        self.queue.append(Request(rid, jnp.asarray(prompt, jnp.int32), max_new))
+        return rid
+
+    def run(self, max_steps: int = 1000):
+        """Simplified loop: drains the queue batch-by-batch (prefill per
+        cohort, decode until every member finishes or hits max_new)."""
+        results = {}
+        while self.queue:
+            cohort = [self.queue.pop(0) for _ in
+                      range(min(self.server.batch, len(self.queue)))]
+            while len(cohort) < self.server.batch:  # pad with a dummy
+                cohort.append(Request(-1, cohort[0].prompt, 1))
+            P = max(len(r.prompt) for r in cohort)
+            prompts = jnp.stack([
+                jnp.pad(r.prompt, (P - len(r.prompt), 0)) for r in cohort])
+            gen = max(r.max_new for r in cohort)
+            toks, _ = self.server.generate(prompts, gen)
+            for b, r in enumerate(cohort):
+                if r.rid >= 0:
+                    seq = toks[b, :r.max_new]
+                    results[r.rid] = seq
+        return results
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="mosa-paper")
+    p.add_argument("--preset", default="smoke")
+    p.add_argument("--variant", default=None)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--max-len", type=int, default=128)
+    args = p.parse_args(argv)
+
+    akw = {"variant": args.variant} if args.variant else {}
+    cfg = get_config(args.arch, preset=args.preset, **akw)
+    server = Server(cfg, batch=args.batch, max_len=args.max_len)
+    key = jax.random.PRNGKey(0)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 2,
+                                 cfg.vocab)
+    t0 = time.perf_counter()
+    toks, caches = server.generate(prompts, args.gen)
+    dt = time.perf_counter() - t0
+    print(f"generated {toks.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print(toks[0])
+    # report the paper's KV metric if the model has MoSA layers
+    if cfg.mosa is not None:
+        from repro.core.hybrid import HybridAttention
+        hy = HybridAttention(cfg.d_model, cfg.mosa)
+        print(f"KV entries per MoSA layer: {hy.kv_total(args.max_len)} "
+              f"(dense equivalent: "
+              f"{args.max_len * (cfg.mosa.n_dense_heads + cfg.mosa.n_mosa_heads)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Core layers: Linear, Embedding, RMSNorm, LayerNorm.
+
+Everything follows the module protocol from ``repro.nn.module``: ``init``,
+``specs``, ``__call__(params, x)``.  Parameters are stored in the dtype given
+at construction (``param_dtype``); matmuls run in ``compute_dtype`` with fp32
+accumulation (``preferred_element_type``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import logical
+
+
+def _trunc_normal(key, shape, std, dtype):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Linear:
+    d_in: int
+    d_out: int
+    bias: bool = False
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    in_axis: str | None = None
+    out_axis: str | None = None
+    std: float | None = None  # default: 1/sqrt(d_in)
+
+    def init(self, key):
+        std = self.std if self.std is not None else self.d_in ** -0.5
+        p = {"w": _trunc_normal(key, (self.d_in, self.d_out), std, self.param_dtype)}
+        if self.bias:
+            p["b"] = jnp.zeros((self.d_out,), self.param_dtype)
+        return p
+
+    def specs(self):
+        s = {"w": logical(self.in_axis, self.out_axis)}
+        if self.bias:
+            s["b"] = logical(self.out_axis)
+        return s
+
+    def __call__(self, params, x):
+        w = params["w"].astype(self.compute_dtype)
+        y = jnp.dot(x.astype(self.compute_dtype), w,
+                    preferred_element_type=jnp.float32).astype(self.compute_dtype)
+        if self.bias:
+            y = y + params["b"].astype(self.compute_dtype)
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class Embedding:
+    vocab: int
+    dim: int
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        return {"table": _trunc_normal(key, (self.vocab, self.dim), 1.0, self.param_dtype)}
+
+    def specs(self):
+        return {"table": logical("vocab", "embed")}
+
+    def __call__(self, params, ids):
+        return params["table"].astype(self.compute_dtype)[ids]
+
+    def attend(self, params, x):
+        """Tied unembedding: logits = x @ table.T (fp32 accumulation)."""
+        t = params["table"].astype(self.compute_dtype)
+        return jnp.dot(x.astype(self.compute_dtype), t.T,
+                       preferred_element_type=jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSNorm:
+    dim: int
+    eps: float = 1e-6
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        del key
+        return {"scale": jnp.ones((self.dim,), self.param_dtype)}
+
+    def specs(self):
+        return {"scale": logical(None)}
+
+    def __call__(self, params, x):
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + self.eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(self.compute_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerNorm:
+    dim: int
+    eps: float = 1e-5
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        del key
+        return {"scale": jnp.ones((self.dim,), self.param_dtype),
+                "bias": jnp.zeros((self.dim,), self.param_dtype)}
+
+    def specs(self):
+        return {"scale": logical(None), "bias": logical(None)}
+
+    def __call__(self, params, x):
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + self.eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+        return y.astype(self.compute_dtype)

@@ -1,0 +1,206 @@
+"""Mamba-1 selective SSM block (for the Jamba hybrid).
+
+TPU adaptation: the CUDA selective-scan kernel is replaced by a *chunked*
+scan — ``lax.scan`` over chunks of the sequence, each chunk processed with an
+inner (rematerialized) scan.  The carry between chunks is just the SSM state
+(B, d_inner, d_state), so activation memory is O(T/chunk · state) + O(chunk)
+instead of O(T · state).
+
+Decode is the natural O(1) recurrent step on the same state, used by
+``serve_step`` for the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig
+from repro.dist import hints
+from repro.nn.layers import _trunc_normal
+from repro.nn.module import logical
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaBlock:
+    d_model: int
+    cfg: MambaConfig
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    chunk: int = 128
+
+    @property
+    def d_inner(self):
+        return self.cfg.expand * self.d_model
+
+    @property
+    def dt_rank(self):
+        return self.cfg.dt_rank or -(-self.d_model // 16)
+
+    def init(self, key):
+        c = self.cfg
+        di, ds, dr = self.d_inner, c.d_state, self.dt_rank
+        ks = jax.random.split(key, 7)
+        std = self.d_model ** -0.5
+        # S4D-real initialization for A.
+        a = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+        dt = jnp.exp(jax.random.uniform(ks[0], (di,), jnp.float32) *
+                     (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+        inv_softplus = dt + jnp.log(-jnp.expm1(-dt))
+        return {
+            "in_proj": _trunc_normal(ks[1], (self.d_model, 2 * di), std, self.param_dtype),
+            "conv_w": _trunc_normal(ks[2], (c.d_conv, di), c.d_conv ** -0.5, self.param_dtype),
+            "conv_b": jnp.zeros((di,), self.param_dtype),
+            "x_proj": _trunc_normal(ks[3], (di, dr + 2 * ds), di ** -0.5, self.param_dtype),
+            "dt_proj_w": _trunc_normal(ks[4], (dr, di), dr ** -0.5, self.param_dtype),
+            "dt_proj_b": inv_softplus.astype(jnp.float32),
+            "a_log": jnp.log(a),
+            "d_skip": jnp.ones((di,), jnp.float32),
+            "out_proj": _trunc_normal(ks[5], (di, self.d_model), di ** -0.5, self.param_dtype),
+        }
+
+    def specs(self):
+        return {
+            "in_proj": logical("embed", "mlp"),
+            "conv_w": logical(None, "mlp"),
+            "conv_b": logical("mlp"),
+            "x_proj": logical("mlp", None),
+            "dt_proj_w": logical(None, "mlp"),
+            "dt_proj_b": logical("mlp"),
+            "a_log": logical("mlp", None),
+            "d_skip": logical("mlp"),
+            "out_proj": logical("mlp", "embed"),
+        }
+
+    def _ssm_inputs(self, params, xz):
+        """xz: (B, L, 2*di) -> (x_conv, z, dt, Bc, Cc) all (B, L, ...)."""
+        c = self.cfg
+        cd = self.compute_dtype
+        di, ds, dr = self.d_inner, c.d_state, self.dt_rank
+        x, z = jnp.split(xz, 2, axis=-1)
+        # causal depthwise conv along L
+        w = params["conv_w"].astype(cd)                      # (K, di)
+        K = c.d_conv
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        x_conv = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+        x_conv = jax.nn.silu(x_conv + params["conv_b"].astype(cd))
+        proj = jnp.dot(x_conv, params["x_proj"].astype(cd),
+                       preferred_element_type=jnp.float32)
+        dt_in, Bc, Cc = jnp.split(proj, [dr, dr + ds], axis=-1)
+        dt = jax.nn.softplus(
+            jnp.dot(dt_in, params["dt_proj_w"].astype(jnp.float32)) +
+            params["dt_proj_b"])                             # (B, L, di) fp32
+        return x_conv, z, dt, Bc.astype(jnp.float32), Cc.astype(jnp.float32)
+
+    def _scan_chunk(self, a_neg, x_conv, dt, Bc, Cc, state):
+        """Sequential inner scan over one chunk.  state: (B, di, ds)."""
+
+        def step(s, inp):
+            xt, dtt, bt, ct = inp          # (B,di), (B,di), (B,ds), (B,ds)
+            da = jnp.exp(dtt[..., None] * a_neg)             # (B, di, ds)
+            db = dtt[..., None] * bt[:, None, :]             # (B, di, ds)
+            s = da * s + db * xt[..., None].astype(jnp.float32)
+            y = jnp.einsum("bds,bs->bd", s, ct)
+            return s, y
+
+        inputs = (x_conv.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+                  Bc.transpose(1, 0, 2), Cc.transpose(1, 0, 2))
+        state, ys = jax.lax.scan(step, state, inputs)
+        return state, ys.transpose(1, 0, 2)                  # (B, L, di)
+
+    def __call__(self, params, x, positions=None, state=None, return_state=False):
+        """x: (B, T, h).  T must be a multiple of ``chunk`` or < chunk."""
+        cd = self.compute_dtype
+        B, T, _ = x.shape
+        di, ds = self.d_inner, self.cfg.d_state
+        xz = jnp.dot(x.astype(cd), params["in_proj"].astype(cd),
+                     preferred_element_type=jnp.float32).astype(cd)
+        # whole sequence, channels sharded: the chunk scan slices T locally
+        xz = hints.constrain(xz, ("dp", None, "tp"))
+        x_conv, z, dt, Bc, Cc = self._ssm_inputs(params, xz)
+        a_neg = -jnp.exp(params["a_log"])                    # (di, ds)
+
+        if state is None:
+            state = jnp.zeros((B, di, ds), jnp.float32)
+
+        chunk = min(self.chunk, T)
+        n = -(-T // chunk)
+        pad = n * chunk - T
+        if pad:
+            pz = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+            x_conv, dt, Bc, Cc = pz(x_conv), pz(dt), pz(Bc), pz(Cc)
+
+        def outer(state, inp):
+            xc, dtc, bc, cc = inp
+            state, y = self._scan_chunk(a_neg, xc, dtc, bc, cc, state)
+            return state, y
+
+        xs = tuple(t.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
+                   for t in (x_conv, dt, Bc, Cc))
+        state, ys = jax.lax.scan(
+            jax.checkpoint(outer, policy=jax.checkpoint_policies.nothing_saveable),
+            state, xs)
+        y = ys.transpose(1, 0, 2, 3).reshape(B, n * chunk, di)[:, :T]
+
+        y = y + x_conv.astype(jnp.float32)[:, :T] * params["d_skip"]
+        y = y.astype(cd) * jax.nn.silu(z[:, :T])
+        out = jnp.dot(y, params["out_proj"].astype(cd),
+                      preferred_element_type=jnp.float32).astype(cd)
+        if return_state:
+            return out, state
+        return out
+
+    # ---------------------------------------------------------------- serving
+    def prefill(self, params, x, state, positions=None):
+        """Process a prompt; returns (y, full recurrent state incl conv tail)."""
+        cd = self.compute_dtype
+        B, T, _ = x.shape
+        K = self.cfg.d_conv
+        y, ssm = self(params, x, positions, state=state.get("ssm") if
+                      isinstance(state, dict) else None, return_state=True)
+        xz = jnp.dot(x.astype(cd), params["in_proj"].astype(cd),
+                     preferred_element_type=jnp.float32).astype(cd)
+        x_in = xz[..., :self.d_inner]
+        tail = jnp.zeros((B, K - 1, self.d_inner), cd)
+        take = min(K - 1, T)
+        if take:
+            tail = tail.at[:, K - 1 - take:].set(x_in[:, T - take:])
+        return y, {"ssm": ssm, "conv": tail}
+
+    def init_state(self, batch):
+        """Recurrent state: SSM state + conv tail."""
+        di, ds = self.d_inner, self.cfg.d_state
+        return {"ssm": jnp.zeros((batch, di, ds), jnp.float32),
+                "conv": jnp.zeros((batch, self.cfg.d_conv - 1, di),
+                                  self.compute_dtype)}
+
+    def decode_step(self, params, x, state, positions=None):
+        """x: (B, 1, h) -> (B, 1, h); O(1) state update."""
+        c, cd = self.cfg, self.compute_dtype
+        B = x.shape[0]
+        di, ds, dr = self.d_inner, c.d_state, self.dt_rank
+        xz = jnp.dot(x[:, 0].astype(cd), params["in_proj"].astype(cd),
+                     preferred_element_type=jnp.float32).astype(cd)
+        xt, z = jnp.split(xz, 2, axis=-1)
+        hist = jnp.concatenate([state["conv"], xt[:, None]], axis=1)  # (B,K,di)
+        w = params["conv_w"].astype(cd)
+        x_conv = jax.nn.silu((hist * w).sum(1) + params["conv_b"].astype(cd))
+        proj = jnp.dot(x_conv, params["x_proj"].astype(cd),
+                       preferred_element_type=jnp.float32)
+        dt_in, Bc, Cc = jnp.split(proj, [dr, dr + ds], axis=-1)
+        dt = jax.nn.softplus(
+            jnp.dot(dt_in, params["dt_proj_w"].astype(jnp.float32)) +
+            params["dt_proj_b"])
+        a_neg = -jnp.exp(params["a_log"])
+        da = jnp.exp(dt[..., None] * a_neg)
+        db = dt[..., None] * Bc[:, None, :].astype(jnp.float32)
+        s = da * state["ssm"] + db * x_conv[..., None].astype(jnp.float32)
+        y = jnp.einsum("bds,bs->bd", s, Cc.astype(jnp.float32))
+        y = y + x_conv.astype(jnp.float32) * params["d_skip"]
+        y = y.astype(cd) * jax.nn.silu(z)
+        out = jnp.dot(y, params["out_proj"].astype(cd),
+                      preferred_element_type=jnp.float32).astype(cd)
+        new_state = {"ssm": s, "conv": hist[:, 1:]}
+        return out[:, None], new_state

@@ -1,0 +1,144 @@
+"""Minimal functional module system (no flax dependency).
+
+A *module* is a plain Python object that knows how to:
+
+  * ``init(key) -> params``    — build its parameter pytree (nested dicts of
+    jnp arrays);
+  * ``specs() -> spec tree``   — return a pytree with the *same structure*
+    whose leaves are tuples of **logical axis names** (or ``None`` entries),
+    one name per tensor dimension;
+  * ``__call__(params, ...)``  — apply itself.
+
+Logical axis names decouple model code from the mesh: a rules table maps each
+logical axis to a mesh axis (or ``None`` for replicated).  ``resolve_specs``
+turns a (params, specs, rules) triple into concrete
+``jax.sharding.PartitionSpec`` / ``NamedSharding`` trees, dropping any mapping
+whose dimension is not divisible by the mesh-axis size (replicate instead of
+fail — this is what lets GQA KV heads ride on a 16-way model axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Any  # nested dict pytree of arrays
+Specs = Any   # matching pytree of LogicalSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalSpec:
+    """Per-parameter logical sharding annotation: one name (or None) per dim."""
+
+    axes: tuple  # tuple[str | None, ...]
+
+    def __iter__(self):
+        return iter(self.axes)
+
+    def __len__(self):
+        return len(self.axes)
+
+
+def logical(*axes) -> LogicalSpec:
+    return LogicalSpec(tuple(axes))
+
+
+def _is_leaf_spec(x) -> bool:
+    return isinstance(x, LogicalSpec)
+
+
+def resolve_spec(
+    shape: Sequence[int],
+    spec: LogicalSpec,
+    rules: Mapping[str, Any],
+    mesh: Mesh,
+) -> P:
+    """Resolve one logical spec against a concrete shape.
+
+    Divisibility-safe: any axis whose size is not divisible by the product of
+    the mapped mesh axes is replicated instead.
+    """
+    if spec is None:
+        return P()
+    out = []
+    used: set = set()
+    for dim, name in zip(shape, spec.axes):
+        mesh_axes = rules.get(name) if name is not None else None
+        if mesh_axes is None:
+            out.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        # Filter out mesh axes already used by an earlier dim of this tensor.
+        mesh_axes = tuple(a for a in mesh_axes if a not in used)
+        if not mesh_axes:
+            out.append(None)
+            continue
+        total = 1
+        for a in mesh_axes:
+            total *= mesh.shape[a]
+        if total == 0 or dim % total != 0:
+            out.append(None)
+            continue
+        used.update(mesh_axes)
+        out.append(mesh_axes[0] if len(mesh_axes) == 1 else mesh_axes)
+    # Trim trailing Nones for tidier HLO.
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def resolve_specs(params_shapes, specs, rules: Mapping[str, Any], mesh: Mesh):
+    """Map a (shape-tree, logical-spec-tree) pair to a PartitionSpec tree.
+
+    ``params_shapes`` may contain arrays, ShapeDtypeStructs, or anything with
+    ``.shape``.
+    """
+
+    def one(p, s):
+        return resolve_spec(p.shape, s, rules, mesh)
+
+    return jax.tree.map(one, params_shapes, specs, is_leaf=lambda x: _is_leaf_spec(x) or x is None)
+
+
+def named_shardings(params_shapes, specs, rules, mesh: Mesh):
+    ptree = resolve_specs(params_shapes, specs, rules, mesh)
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), ptree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def shape_tree(params: Params):
+    """Replace arrays by ShapeDtypeStructs (for lowering without allocation)."""
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+
+
+def init_shapes(module, key=None) -> Params:
+    """Get the parameter shape tree of a module *without allocating memory*.
+
+    Uses ``jax.eval_shape`` around ``module.init`` so even multi-billion
+    parameter configs can be "initialized" abstractly for the dry-run.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: module.init(k), key)
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    def c(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(c, params)

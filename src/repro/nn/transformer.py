@@ -1,0 +1,493 @@
+"""Transformer assembly: blocks, periodic-pattern scan, LM head, serving.
+
+``TransformerLM`` is driven entirely by ``ModelConfig``:
+
+  * each layer is a ``BlockSpec`` (mixer kind x ffn kind);
+  * the layer pattern's smallest period is detected and the periodic prefix is
+    compiled as ONE super-block scanned ``n_units`` times (stacked params) —
+    an 80-layer uniform model compiles a single layer body, Jamba compiles an
+    8-layer super-block, gemma3 a (5 local + 1 global) super-block;
+  * the non-periodic tail is applied unrolled;
+  * MoE aux losses are accumulated through the scan carry;
+  * serving: ``init_cache`` / ``prefill`` / ``decode_step`` thread per-layer
+    caches (stacked for the scanned prefix) of whatever type each mixer needs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.core.attention import MLAAttention, MultiHeadAttention
+from repro.core.hybrid import HybridAttention
+from repro.core.kv_cache import DenseKVCache, MLAKVCache, WindowKVCache
+from repro.nn.ffn import MLP, MoEFFN
+from repro.nn.layers import Embedding, LayerNorm, RMSNorm
+from repro.nn.mamba import MambaBlock
+from repro.nn.module import logical
+from repro.nn.xlstm import MLSTMBlock, SLSTMBlock
+
+
+def find_period(pattern, max_head: int = 4):
+    """Locate the largest scannable periodic run, allowing a few unrolled
+    *head* layers before it (e.g. deepseek's dense-FFN first layer — without
+    the offset all 27 layers unroll: 600 s compiles and every layer's MoE
+    dispatch buffers live simultaneously; §Perf cell-1 it.9).
+
+    Returns (head_end, p, n_units, tail_start): layers [0, head_end) and
+    [tail_start, n) are unrolled; [head_end, tail_start) is scanned as
+    ``n_units`` super-blocks of period ``p``.  (0, 0, 0, 0) = all unrolled.
+    """
+    n = len(pattern)
+    best = (0, 0, 0, 0, 0)  # coverage, -head, head, p, units
+    for head in range(0, min(max_head, n) + 1):
+        sub = pattern[head:]
+        m = len(sub)
+        for p in range(1, m // 2 + 1):
+            units = m // p
+            if units < 2:
+                break
+            prefix = units * p
+            if all(sub[i] == sub[i % p] for i in range(prefix)):
+                cand = (prefix, -head, head, p, units)
+                if cand > best:
+                    best = cand
+                break  # smallest p for this head is the best for this head
+    if best[0] == 0:
+        return 0, 0, 0, 0
+    _, _, head, p, units = best
+    return head, p, units, head + p * units
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    """norm -> mixer -> +residual; norm -> ffn -> +residual (pre-LN)."""
+
+    cfg: ModelConfig
+    spec: BlockSpec
+
+    def _norm(self):
+        cls = RMSNorm if self.cfg.norm == "rmsnorm" else LayerNorm
+        return cls(self.cfg.d_model, param_dtype=self.cfg.pdtype,
+                   compute_dtype=self.cfg.cdtype)
+
+    def mixer_module(self):
+        c = self.cfg
+        kind = self.spec.mixer
+        if kind in ("attn", "attn_local"):
+            acfg = c.attention
+            if kind == "attn" and acfg.window:
+                acfg = dataclasses.replace(acfg, window=0)
+            if kind == "attn_local" and not acfg.window:
+                acfg = dataclasses.replace(acfg, window=1024)
+            if c.attention.kind == "mla":
+                return MLAAttention(c.d_model, acfg, c.pdtype, c.cdtype)
+            return MultiHeadAttention(c.d_model, acfg, c.pdtype, c.cdtype,
+                                      rotary_frac=1.0)
+        if kind == "mosa":
+            return HybridAttention(c.d_model, c.mosa, c.attention.rope_theta,
+                                   rotary_frac=0.5, param_dtype=c.pdtype,
+                                   compute_dtype=c.cdtype,
+                                   variant=c.sparse_variant)
+        if kind == "mamba":
+            return MambaBlock(c.d_model, c.mamba, c.pdtype, c.cdtype)
+        if kind == "mlstm":
+            return MLSTMBlock(c.d_model, c.attention.n_heads, c.xlstm,
+                              c.pdtype, c.cdtype)
+        if kind == "slstm":
+            return SLSTMBlock(c.d_model, c.attention.n_heads, c.xlstm,
+                              c.pdtype, c.cdtype)
+        raise ValueError(kind)
+
+    def ffn_module(self):
+        c = self.cfg
+        if self.spec.ffn == "dense":
+            return MLP(c.d_model, c.d_ff, c.ffn_act, c.pdtype, c.cdtype)
+        if self.spec.ffn == "moe":
+            return MoEFFN(c.d_model, c.moe, param_dtype=c.pdtype,
+                          compute_dtype=c.cdtype)
+        return None
+
+    def init(self, key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {"norm1": self._norm().init(k1),
+             "mixer": self.mixer_module().init(k2)}
+        ffn = self.ffn_module()
+        if ffn is not None:
+            p["norm2"] = self._norm().init(k3)
+            p["ffn"] = ffn.init(k4)
+        return p
+
+    def specs(self):
+        s = {"norm1": self._norm().specs(),
+             "mixer": self.mixer_module().specs()}
+        ffn = self.ffn_module()
+        if ffn is not None:
+            s["norm2"] = self._norm().specs()
+            s["ffn"] = ffn.specs()
+        return s
+
+    def __call__(self, params, x, positions=None):
+        norm = self._norm()
+        mixer = self.mixer_module()
+        aux = jnp.zeros((), jnp.float32)
+        h = mixer(params["mixer"], norm(params["norm1"], x), positions)
+        x = x + h
+        ffn = self.ffn_module()
+        if ffn is not None:
+            h = ffn(params["ffn"], norm(params["norm2"], x))
+            if isinstance(h, tuple):
+                h, aux = h
+            x = x + h
+        return x, aux
+
+    # ---------------------------------------------------------------- serving
+    def init_cache(self, batch, max_len, dtype):
+        c = self.cfg
+        kind = self.spec.mixer
+        m = self.mixer_module()
+        if kind == "mosa":
+            return m.init_cache(batch, max_len, dtype)
+        if kind in ("attn", "attn_local"):
+            if c.attention.kind == "mla":
+                ml = c.attention.mla
+                return MLAKVCache.create(batch, max_len, ml.kv_lora_rank,
+                                         ml.rope_head_dim, dtype)
+            if m.cfg.window:
+                return WindowKVCache.create(batch, min(m.cfg.window, max_len),
+                                            c.attention.n_kv_heads,
+                                            c.attention.d_head, dtype)
+            return DenseKVCache.create(batch, max_len, c.attention.n_kv_heads,
+                                       c.attention.d_head, dtype)
+        if kind in ("mamba", "mlstm", "slstm"):
+            return m.init_state(batch)
+        raise ValueError(kind)
+
+    def prefill(self, params, x, cache, positions=None):
+        norm = self._norm()
+        m = self.mixer_module()
+        kind = self.spec.mixer
+        xin = norm(params["norm1"], x)
+        h, cache = m.prefill(params["mixer"], xin, cache, positions)
+        x = x + h
+        ffn = self.ffn_module()
+        aux = jnp.zeros((), jnp.float32)
+        if ffn is not None:
+            h = ffn(params["ffn"], norm(params["norm2"], x))
+            if isinstance(h, tuple):
+                h, aux = h
+            x = x + h
+        return x, cache, aux
+
+    def decode_step(self, params, x, cache, positions=None):
+        norm = self._norm()
+        m = self.mixer_module()
+        kind = self.spec.mixer
+        xin = norm(params["norm1"], x)
+        if kind in ("mamba", "mlstm", "slstm"):
+            h, cache = m.decode_step(params["mixer"], xin, cache, positions)
+        else:
+            h, cache = m.decode_step(params["mixer"], xin, cache, positions)
+        x = x + h
+        ffn = self.ffn_module()
+        if ffn is not None:
+            h = ffn(params["ffn"], norm(params["norm2"], x))
+            if isinstance(h, tuple):
+                h, _ = h
+            x = x + h
+        return x, cache
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerLM:
+    cfg: ModelConfig
+    # Optional PartitionSpec applied to the residual stream at block
+    # boundaries (sequence-parallel activation sharding for big configs; set
+    # by the launcher, e.g. P(("pod","data"), "model")).
+    act_spec: Any = None
+
+    def _constrain(self, x):
+        if self.act_spec is not None:
+            return jax.lax.with_sharding_constraint(x, self.act_spec)
+        return x
+
+    # ------------------------------------------------------------------ build
+    def _embed(self):
+        c = self.cfg
+        return Embedding(c.vocab, c.d_model, c.pdtype, c.cdtype)
+
+    def _final_norm(self):
+        c = self.cfg
+        cls = RMSNorm if c.norm == "rmsnorm" else LayerNorm
+        return cls(c.d_model, param_dtype=c.pdtype, compute_dtype=c.cdtype)
+
+    def _blocks(self):
+        return [Block(self.cfg, s) for s in self.cfg.resolved_pattern()]
+
+    def _layout(self):
+        """(head_end, p, units, tail_start, pattern) — see find_period."""
+        pattern = self.cfg.resolved_pattern()
+        if not self.cfg.scan_layers:
+            return 0, 0, 0, 0, pattern
+        head, p, units, tail_start = find_period(pattern)
+        return head, p, units, tail_start, pattern
+
+    def _unrolled_indices(self):
+        head, p, units, tail_start, pattern = self._layout()
+        return list(range(0, head)) + list(range(tail_start, len(pattern)))
+
+    def init(self, key):
+        c = self.cfg
+        head, p, units, tail_start, pattern = self._layout()
+        ke, kb, kn, ku = jax.random.split(key, 4)
+        params: dict = {"embed": self._embed().init(ke)}
+
+        blocks = self._blocks()
+        layer_params: dict = {}
+        if units:
+            scan_p = {}
+            for j in range(p):
+                block = blocks[head + j]
+                keys = jax.random.split(
+                    jax.random.fold_in(kb, j), units)
+                scan_p[f"pos{j}"] = jax.vmap(block.init)(keys)
+            layer_params["scan"] = scan_p
+        tail = {}
+        for i in self._unrolled_indices():
+            tail[f"layer{i}"] = blocks[i].init(jax.random.fold_in(kb, 10_000 + i))
+        if tail:
+            layer_params["tail"] = tail
+        params["layers"] = layer_params
+        params["final_norm"] = self._final_norm().init(kn)
+        if not c.tie_embeddings:
+            from repro.nn.layers import Linear
+            params["unembed"] = Linear(
+                c.d_model, c.vocab, param_dtype=c.pdtype,
+                compute_dtype=c.cdtype).init(ku)
+        return params
+
+    def specs(self):
+        c = self.cfg
+        head, p, units, tail_start, pattern = self._layout()
+        blocks = self._blocks()
+        specs: dict = {"embed": self._embed().specs()}
+        layer_specs: dict = {}
+        if units:
+            scan_s = {}
+            for j in range(p):
+                s = blocks[head + j].specs()
+                # prepend the stacked (layer) axis to every leaf
+                scan_s[f"pos{j}"] = jax.tree.map(
+                    lambda ls: logical(*((None,) + tuple(ls))),
+                    s, is_leaf=lambda x: hasattr(x, "axes"))
+            layer_specs["scan"] = scan_s
+        tail = {}
+        for i in self._unrolled_indices():
+            tail[f"layer{i}"] = blocks[i].specs()
+        if tail:
+            layer_specs["tail"] = tail
+        specs["layers"] = layer_specs
+        specs["final_norm"] = self._final_norm().specs()
+        if not c.tie_embeddings:
+            from repro.nn.layers import Linear
+            specs["unembed"] = Linear(c.d_model, c.vocab).specs()
+            specs["unembed"]["w"] = logical("embed", "vocab")
+        return specs
+
+    # ---------------------------------------------------------------- forward
+    def _maybe_remat(self, fn):
+        if self.cfg.remat == "full":
+            return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+        if self.cfg.remat == "dots_saveable":
+            return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+        return fn
+
+    def backbone(self, params, x, positions=None):
+        """(B, T, h) -> (B, T, h) hidden states + aux loss."""
+        head, p, units, tail_start, pattern = self._layout()
+        blocks = self._blocks()
+        aux_total = jnp.zeros((), jnp.float32)
+
+        for i in range(head):
+            blk = self._maybe_remat(blocks[i].__call__)
+            x, a = blk(params["layers"]["tail"][f"layer{i}"], x, positions)
+            x = self._constrain(x)
+            aux_total = aux_total + a
+
+        if units:
+            unit_blocks = blocks[head:head + p]
+
+            def superblock(x, unit_params):
+                aux = jnp.zeros((), jnp.float32)
+                for j in range(p):
+                    x, a = unit_blocks[j](unit_params[f"pos{j}"], x, positions)
+                    x = self._constrain(x)
+                    aux = aux + a
+                return x, aux
+
+            superblock = self._maybe_remat(superblock)
+
+            def scan_body(carry, unit_params):
+                x, aux = carry
+                x, a = superblock(x, unit_params)
+                return (x, aux + a), None
+
+            (x, aux_total), _ = jax.lax.scan(
+                scan_body, (x, aux_total), params["layers"]["scan"])
+
+        for i in range(tail_start, len(pattern)):
+            blk = self._maybe_remat(blocks[i].__call__)
+            x, a = blk(params["layers"]["tail"][f"layer{i}"], x, positions)
+            x = self._constrain(x)
+            aux_total = aux_total + a
+        return x, aux_total
+
+    def _embed_tokens(self, params, tokens=None, inputs_embeds=None):
+        c = self.cfg
+        if inputs_embeds is not None:
+            return inputs_embeds.astype(c.cdtype)
+        x = self._embed()(params["embed"], tokens)
+        if c.norm == "rmsnorm" and c.name.startswith("gemma"):
+            x = x * jnp.asarray(c.d_model ** 0.5, x.dtype)  # gemma convention
+        return x
+
+    def __call__(self, params, tokens=None, positions=None, inputs_embeds=None):
+        """Returns (logits fp32 (B, T, vocab), aux_loss scalar)."""
+        c = self.cfg
+        x = self._embed_tokens(params, tokens, inputs_embeds)
+        x, aux = self.backbone(params, x, positions)
+        x = self._final_norm()(params["final_norm"], x)
+        if c.tie_embeddings:
+            logits = self._embed().attend(params["embed"], x)
+        else:
+            w = params["unembed"]["w"].astype(c.cdtype)
+            logits = jnp.dot(x.astype(c.cdtype), w,
+                             preferred_element_type=jnp.float32)
+        return logits, aux
+
+    def loss(self, params, batch):
+        """batch: {"tokens" (B,T) or "embeds" (B,T,h), "labels" (B,T)}.
+        labels < 0 are masked.  Returns (loss, metrics)."""
+        tokens = batch.get("tokens")
+        embeds = batch.get("embeds")
+        labels = batch["labels"]
+        positions = batch.get("positions")
+        logits, aux = self(params, tokens, positions, inputs_embeds=embeds)
+        logits = logits.astype(jnp.float32)
+        V = logits.shape[-1]
+        mask = (labels >= 0).astype(jnp.float32)
+        labels_c = jnp.clip(labels, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # Gold logit via a fused one-hot reduction instead of
+        # take_along_axis: a gather across the vocab-sharded dim would
+        # all-gather the logits (measured 40 GB/dev on qwen2-vl; §Perf it.2).
+        iota_v = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+        gold = jnp.sum(jnp.where(iota_v == labels_c[..., None], logits, 0.0),
+                       axis=-1)
+        nll = (logz - gold) * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+        ce = nll.sum() / denom
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux, "ppl": jnp.exp(ce),
+                      "tokens": denom}
+
+    # ---------------------------------------------------------------- serving
+    def init_cache(self, batch, max_len, dtype=None):
+        dtype = dtype or self.cfg.cdtype
+        head, p, units, tail_start, pattern = self._layout()
+        blocks = self._blocks()
+        caches: dict = {}
+        if units:
+            scan_c = {}
+            for j in range(p):
+                one = blocks[head + j].init_cache(batch, max_len, dtype)
+                scan_c[f"pos{j}"] = jax.tree.map(
+                    lambda t: jnp.broadcast_to(t[None], (units,) + t.shape)
+                    if hasattr(t, "shape") else t, one)
+            caches["scan"] = scan_c
+        tail = {}
+        for i in self._unrolled_indices():
+            tail[f"layer{i}"] = blocks[i].init_cache(batch, max_len, dtype)
+        if tail:
+            caches["tail"] = tail
+        return caches
+
+    def _serving_pass(self, params, x, caches, positions, step_fn_name):
+        head, p, units, tail_start, pattern = self._layout()
+        blocks = self._blocks()
+
+        new_tail = {}
+
+        def run_unrolled(i, x, caches):
+            fn = getattr(blocks[i], step_fn_name)
+            res = fn(params["layers"]["tail"][f"layer{i}"], x,
+                     caches["tail"][f"layer{i}"], positions)
+            if step_fn_name == "prefill":
+                x, c_new, _ = res
+            else:
+                x, c_new = res
+            new_tail[f"layer{i}"] = c_new
+            return x
+
+        for i in range(head):
+            x = run_unrolled(i, x, caches)
+
+        if units:
+            unit_blocks = blocks[head:head + p]
+
+            def scan_body(x, xs):
+                unit_params, unit_caches = xs
+                new_caches = {}
+                for j in range(p):
+                    fn = getattr(unit_blocks[j], step_fn_name)
+                    res = fn(unit_params[f"pos{j}"], x,
+                             unit_caches[f"pos{j}"], positions)
+                    if step_fn_name == "prefill":
+                        x, c_new, _ = res
+                    else:
+                        x, c_new = res
+                    new_caches[f"pos{j}"] = c_new
+                return x, new_caches
+
+            x, new_scan = jax.lax.scan(
+                scan_body, x, (params["layers"]["scan"], caches["scan"]))
+            caches = dict(caches, scan=new_scan)
+
+        for i in range(tail_start, len(pattern)):
+            x = run_unrolled(i, x, caches)
+        if new_tail:
+            caches = dict(caches, tail={**caches["tail"], **new_tail})
+        return x, caches
+
+    def prefill(self, params, tokens, caches, positions=None, inputs_embeds=None):
+        c = self.cfg
+        x = self._embed_tokens(params, tokens, inputs_embeds)
+        x, caches = self._serving_pass(params, x, caches, positions, "prefill")
+        x = self._final_norm()(params["final_norm"], x)
+        if c.tie_embeddings:
+            logits = self._embed().attend(params["embed"], x[:, -1:])
+        else:
+            logits = jnp.dot(x[:, -1:].astype(c.cdtype),
+                             params["unembed"]["w"].astype(c.cdtype),
+                             preferred_element_type=jnp.float32)
+        return logits, caches
+
+    def decode_step(self, params, token, caches, positions=None):
+        """token: (B, 1) int32 -> (logits (B, 1, V), caches)."""
+        c = self.cfg
+        x = self._embed_tokens(params, token)
+        x, caches = self._serving_pass(params, x, caches, positions,
+                                       "decode_step")
+        x = self._final_norm()(params["final_norm"], x)
+        if c.tie_embeddings:
+            logits = self._embed().attend(params["embed"], x)
+        else:
+            logits = jnp.dot(x.astype(c.cdtype),
+                             params["unembed"]["w"].astype(c.cdtype),
+                             preferred_element_type=jnp.float32)
+        return logits, caches

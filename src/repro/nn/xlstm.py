@@ -1,0 +1,347 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory w/ recurrence).
+
+Faithful to Beck et al. 2024 at the block level:
+
+  * mLSTM — pre-up-projection block; per head a matrix memory
+    ``C in R^{dh x dh}`` with exponential input/forget gates and the
+    max-stabilizer ``m``; q/k/v from a causal conv path; parallelizable over
+    the sequence in chunks (we scan chunks carrying (C, n, m)).
+  * sLSTM — post-up-projection block; scalar cell per channel with
+    *recurrent* gate connections (block-diagonal R per head) — inherently
+    sequential, scanned step by step.
+
+Both expose O(1) ``decode_step`` states, which is what makes the xlstm-125m
+``long_500k`` cell run at constant memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import XLSTMConfig
+from repro.dist import hints
+from repro.nn.layers import _trunc_normal
+from repro.nn.module import logical
+
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMBlock:
+    d_model: int
+    n_heads: int
+    cfg: XLSTMConfig
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    chunk: int = 64
+
+    @property
+    def d_inner(self):
+        return int(self.cfg.proj_factor_mlstm * self.d_model)
+
+    @property
+    def d_head(self):
+        return self.d_inner // self.n_heads
+
+    def init(self, key):
+        di, h = self.d_inner, self.d_model
+        dh, H = self.d_head, self.n_heads
+        ks = jax.random.split(key, 8)
+        std = h ** -0.5
+        stdi = di ** -0.5
+        return {
+            "up_proj": _trunc_normal(ks[0], (h, 2 * di), std, self.param_dtype),
+            "conv_w": _trunc_normal(ks[1], (self.cfg.conv1d_kernel, di),
+                                    self.cfg.conv1d_kernel ** -0.5, self.param_dtype),
+            "conv_b": jnp.zeros((di,), self.param_dtype),
+            "wq": _trunc_normal(ks[2], (di, di), stdi, self.param_dtype),
+            "wk": _trunc_normal(ks[3], (di, di), stdi, self.param_dtype),
+            "wv": _trunc_normal(ks[4], (di, di), stdi, self.param_dtype),
+            "w_if": _trunc_normal(ks[5], (di, 2 * H), stdi, jnp.float32),
+            "b_if": jnp.concatenate([jnp.zeros((H,)),
+                                     jnp.linspace(3.0, 6.0, H)]).astype(jnp.float32),
+            "ln_scale": jnp.ones((di,), self.param_dtype),
+            "down_proj": _trunc_normal(ks[6], (di, h), stdi, self.param_dtype),
+        }
+
+    def specs(self):
+        return {"up_proj": logical("embed", "mlp"), "conv_w": logical(None, "mlp"),
+                "conv_b": logical("mlp"), "wq": logical("mlp", None),
+                "wk": logical("mlp", None), "wv": logical("mlp", None),
+                "w_if": logical("mlp", None), "b_if": logical(None),
+                "ln_scale": logical("mlp"), "down_proj": logical("mlp", "embed")}
+
+    def _qkv_gates(self, params, x_inner):
+        """x_inner: (B, L, di) -> q,k,v (B,L,H,dh), i/f preacts (B,L,H) fp32."""
+        cd = self.compute_dtype
+        B, L, di = x_inner.shape
+        H, dh = self.n_heads, self.d_head
+        K = self.cfg.conv1d_kernel
+        w = params["conv_w"].astype(cd)
+        xp = jnp.pad(x_inner, ((0, 0), (K - 1, 0), (0, 0)))
+        x_conv = sum(xp[:, i:i + L] * w[i] for i in range(K))
+        x_conv = jax.nn.silu(x_conv + params["conv_b"].astype(cd))
+        q = jnp.dot(x_conv, params["wq"].astype(cd),
+                    preferred_element_type=jnp.float32).astype(cd)
+        k = jnp.dot(x_conv, params["wk"].astype(cd),
+                    preferred_element_type=jnp.float32).astype(cd) * (dh ** -0.5)
+        v = jnp.dot(x_inner, params["wv"].astype(cd),
+                    preferred_element_type=jnp.float32).astype(cd)
+        gates = jnp.dot(x_conv.astype(jnp.float32), params["w_if"]) + params["b_if"]
+        i_pre, f_pre = jnp.split(gates, 2, axis=-1)          # (B, L, H)
+        rs = lambda t: t.reshape(B, L, H, dh)
+        return rs(q), rs(k), rs(v), i_pre, f_pre
+
+    def _scan(self, q, k, v, i_pre, f_pre, state):
+        """Sequential scan (stabilized).  state: dict(C (B,H,dh,dh), n (B,H,dh), m (B,H))."""
+
+        def step(s, inp):
+            qt, kt, vt, it, ft = inp
+            logf = -jax.nn.softplus(-ft)                     # log sigmoid(f)
+            m_new = jnp.maximum(logf + s["m"], it)
+            i_g = jnp.exp(it - m_new)
+            f_g = jnp.exp(logf + s["m"] - m_new)
+            C = f_g[..., None, None] * s["C"] + \
+                i_g[..., None, None] * (vt[..., :, None] *
+                                        kt[..., None, :]).astype(jnp.float32)
+            n = f_g[..., None] * s["n"] + i_g[..., None] * kt.astype(jnp.float32)
+            qf = qt.astype(jnp.float32)
+            num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+            den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf))
+            den = jnp.maximum(den, jnp.exp(-s["m"]) * 0 + 1.0)
+            y = num / den[..., None]
+            return {"C": C, "n": n, "m": m_new}, y
+
+        inputs = tuple(t.transpose(1, 0, 2, 3) for t in (q, k, v)) + \
+            tuple(t.transpose(1, 0, 2) for t in (i_pre, f_pre))
+        state, ys = jax.lax.scan(step, state, inputs)
+        return state, ys.transpose(1, 0, 2, 3)               # (B, L, H, dh)
+
+    def init_state(self, batch):
+        H, dh = self.n_heads, self.d_head
+        return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+                "n": jnp.zeros((batch, H, dh), jnp.float32),
+                "m": jnp.zeros((batch, H), jnp.float32),
+                "conv": jnp.zeros((batch, self.cfg.conv1d_kernel - 1, self.d_inner),
+                                  self.compute_dtype)}
+
+    def __call__(self, params, x, positions=None, state=None, return_state=False):
+        cd = self.compute_dtype
+        B, T, _ = x.shape
+        di = self.d_inner
+        up = jnp.dot(x.astype(cd), params["up_proj"].astype(cd),
+                     preferred_element_type=jnp.float32).astype(cd)
+        # whole sequence before the recurrent chunk scan (one gather)
+        up = hints.constrain(up, ("dp", None, "tp"))
+        x_inner, z = jnp.split(up, 2, axis=-1)
+        q, k, v, i_pre, f_pre = self._qkv_gates(params, x_inner)
+        if state is None:
+            state = {k_: v_ for k_, v_ in self.init_state(B).items() if k_ != "conv"}
+
+        chunk = min(self.chunk, T)
+        n = -(-T // chunk)
+        pad = n * chunk - T
+        if pad:
+            q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                       for t in (q, k, v))
+            i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)),
+                            constant_values=-1e9)  # i=0: pad steps write nothing
+            f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)),
+                            constant_values=1e9)   # f=1: state preserved
+
+        H, dh = self.n_heads, self.d_head
+
+        def outer(st, inp):
+            qc, kc, vc, ic, fc = inp
+            return self._scan(qc, kc, vc, ic, fc, st)
+
+        xs = (q.reshape(B, n, chunk, H, dh).transpose(1, 0, 2, 3, 4),
+              k.reshape(B, n, chunk, H, dh).transpose(1, 0, 2, 3, 4),
+              v.reshape(B, n, chunk, H, dh).transpose(1, 0, 2, 3, 4),
+              i_pre.reshape(B, n, chunk, H).transpose(1, 0, 2, 3),
+              f_pre.reshape(B, n, chunk, H).transpose(1, 0, 2, 3))
+        state, ys = jax.lax.scan(
+            jax.checkpoint(outer, policy=jax.checkpoint_policies.nothing_saveable),
+            state, xs)
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(B, n * chunk, di)[:, :T]
+
+        # per-head group norm (multi-head layer norm in the paper)
+        yf = y.astype(jnp.float32).reshape(B, T, H, dh)
+        mu = yf.mean(-1, keepdims=True)
+        var = yf.var(-1, keepdims=True)
+        yf = ((yf - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(B, T, di)
+        y = (yf * params["ln_scale"].astype(jnp.float32)).astype(cd)
+        y = y * jax.nn.silu(z)
+        out = jnp.dot(y, params["down_proj"].astype(cd),
+                      preferred_element_type=jnp.float32).astype(cd)
+        if return_state:
+            return out, state
+        return out
+
+    def prefill(self, params, x, state, positions=None):
+        cd = self.compute_dtype
+        B, T, _ = x.shape
+        K = self.cfg.conv1d_kernel
+        core = {k: v for k, v in state.items() if k != "conv"} if state else None
+        y, new_core = self(params, x, positions, state=core, return_state=True)
+        up = jnp.dot(x.astype(cd), params["up_proj"].astype(cd),
+                     preferred_element_type=jnp.float32).astype(cd)
+        x_inner = up[..., :self.d_inner]
+        tail = jnp.zeros((B, K - 1, self.d_inner), cd)
+        take = min(K - 1, T)
+        if take:
+            tail = tail.at[:, K - 1 - take:].set(x_inner[:, T - take:])
+        return y, {**new_core, "conv": tail}
+
+    def decode_step(self, params, x, state, positions=None):
+        cd = self.compute_dtype
+        B = x.shape[0]
+        di, H, dh = self.d_inner, self.n_heads, self.d_head
+        up = jnp.dot(x[:, 0].astype(cd), params["up_proj"].astype(cd),
+                     preferred_element_type=jnp.float32).astype(cd)
+        x_inner, z = jnp.split(up, 2, axis=-1)
+        hist = jnp.concatenate([state["conv"], x_inner[:, None]], axis=1)
+        w = params["conv_w"].astype(cd)
+        x_conv = jax.nn.silu((hist * w).sum(1) + params["conv_b"].astype(cd))
+        q = jnp.dot(x_conv, params["wq"].astype(cd)).reshape(B, H, dh)
+        k = (jnp.dot(x_conv, params["wk"].astype(cd)) * (dh ** -0.5)).reshape(B, H, dh)
+        v = jnp.dot(x_inner, params["wv"].astype(cd)).reshape(B, H, dh)
+        gates = jnp.dot(x_conv.astype(jnp.float32), params["w_if"]) + params["b_if"]
+        it, ft = jnp.split(gates, 2, axis=-1)                # (B, H)
+
+        logf = -jax.nn.softplus(-ft)
+        m_new = jnp.maximum(logf + state["m"], it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(logf + state["m"] - m_new)
+        C = f_g[..., None, None] * state["C"] + \
+            i_g[..., None, None] * (v[..., :, None] * k[..., None, :]).astype(jnp.float32)
+        nvec = f_g[..., None] * state["n"] + i_g[..., None] * k.astype(jnp.float32)
+        qf = q.astype(jnp.float32)
+        num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", nvec, qf)), 1.0)
+        y = (num / den[..., None]).reshape(B, di)
+        mu = y.reshape(B, H, dh).mean(-1, keepdims=True)
+        var = y.reshape(B, H, dh).var(-1, keepdims=True)
+        y = ((y.reshape(B, H, dh) - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(B, di)
+        y = (y * params["ln_scale"].astype(jnp.float32)).astype(cd) * jax.nn.silu(z)
+        out = jnp.dot(y, params["down_proj"].astype(cd),
+                      preferred_element_type=jnp.float32).astype(cd)
+        new_state = {"C": C, "n": nvec, "m": m_new, "conv": hist[:, 1:]}
+        return out[:, None], new_state
+
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMBlock:
+    d_model: int
+    n_heads: int
+    cfg: XLSTMConfig
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+    def init(self, key):
+        h, H, dh = self.d_model, self.n_heads, self.d_head
+        ks = jax.random.split(key, 4)
+        std = h ** -0.5
+        d_up = int(self.cfg.proj_factor_slstm * h)
+        d_up -= d_up % 2
+        return {
+            # input weights for 4 gates (z, i, f, o)
+            "w_gates": _trunc_normal(ks[0], (h, 4 * h), std, self.param_dtype),
+            # block-diagonal recurrent weights per head: (4, H, dh, dh)
+            "r_gates": _trunc_normal(ks[1], (4, H, dh, dh), dh ** -0.5, jnp.float32),
+            "b_gates": jnp.concatenate([
+                jnp.zeros((2 * h,)), jnp.linspace(3.0, 6.0, h),
+                jnp.zeros((h,))]).astype(jnp.float32),
+            "ln_scale": jnp.ones((h,), self.param_dtype),
+            "up_proj": _trunc_normal(ks[2], (h, d_up), std, self.param_dtype),
+            "down_proj": _trunc_normal(ks[3], (d_up // 2, h),
+                                       (d_up // 2) ** -0.5, self.param_dtype),
+        }
+
+    def specs(self):
+        return {"w_gates": logical("embed", None), "r_gates": logical(None, "heads", None, None),
+                "b_gates": logical(None), "ln_scale": logical(None),
+                "up_proj": logical("embed", "mlp"), "down_proj": logical("mlp", "embed")}
+
+    def init_state(self, batch):
+        h, H, dh = self.d_model, self.n_heads, self.d_head
+        return {"c": jnp.zeros((batch, h), jnp.float32),
+                "n": jnp.ones((batch, h), jnp.float32),
+                "h": jnp.zeros((batch, h), jnp.float32),
+                "m": jnp.zeros((batch, h), jnp.float32)}
+
+    def _cell(self, params, gates_x, state):
+        """One sLSTM step.  gates_x: (B, 4h) input preactivations."""
+        B = gates_x.shape[0]
+        h, H, dh = self.d_model, self.n_heads, self.d_head
+        hprev = state["h"].reshape(B, H, dh)
+        rec = jnp.einsum("ghij,bhj->gbhi", params["r_gates"], hprev)
+        rec = rec.transpose(1, 0, 2, 3).reshape(B, 4 * h)
+        pre = gates_x.astype(jnp.float32) + rec + params["b_gates"]
+        z_pre, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+        z = jnp.tanh(z_pre)
+        o = jax.nn.sigmoid(o_pre)
+        logf = -jax.nn.softplus(-f_pre)
+        m_new = jnp.maximum(logf + state["m"], i_pre)
+        i_g = jnp.exp(i_pre - m_new)
+        f_g = jnp.exp(logf + state["m"] - m_new)
+        c = f_g * state["c"] + i_g * z
+        n = f_g * state["n"] + i_g
+        h_new = o * c / jnp.maximum(n, 1e-6)
+        return {"c": c, "n": n, "h": h_new, "m": m_new}
+
+    def __call__(self, params, x, positions=None, state=None, return_state=False):
+        cd = self.compute_dtype
+        B, T, h = x.shape
+        if state is None:
+            state = self.init_state(B)
+        gates_x = jnp.dot(x.astype(cd), params["w_gates"].astype(cd),
+                          preferred_element_type=jnp.float32)
+        # per-token recurrence: T must be local (a seq-sharded gates_x would
+        # put a collective inside the T-step loop; §Perf it.5)
+        gates_x = hints.constrain(gates_x, ("dp", None, None))
+
+        def step(s, gx):
+            s = self._cell(params, gx, s)
+            return s, s["h"]
+
+        state, hs = jax.lax.scan(step, state, gates_x.transpose(1, 0, 2))
+        y = hs.transpose(1, 0, 2)                            # (B, T, h) fp32
+        mu = y.mean(-1, keepdims=True)
+        var = y.var(-1, keepdims=True)
+        y = (y - mu) * jax.lax.rsqrt(var + 1e-6) * params["ln_scale"].astype(jnp.float32)
+        y = y.astype(cd)
+        up = jnp.dot(y, params["up_proj"].astype(cd),
+                     preferred_element_type=jnp.float32).astype(cd)
+        a, b = jnp.split(up, 2, axis=-1)
+        y = jax.nn.gelu(a) * b
+        out = jnp.dot(y, params["down_proj"].astype(cd),
+                      preferred_element_type=jnp.float32).astype(cd)
+        if return_state:
+            return out, state
+        return out
+
+    def prefill(self, params, x, state, positions=None):
+        return self(params, x, positions, state=state, return_state=True)
+
+    def decode_step(self, params, x, state, positions=None):
+        cd = self.compute_dtype
+        gates_x = jnp.dot(x[:, 0].astype(cd), params["w_gates"].astype(cd),
+                          preferred_element_type=jnp.float32)
+        state = self._cell(params, gates_x, state)
+        y = state["h"]
+        mu = y.mean(-1, keepdims=True)
+        var = y.var(-1, keepdims=True)
+        y = ((y - mu) * jax.lax.rsqrt(var + 1e-6) *
+             params["ln_scale"].astype(jnp.float32)).astype(cd)
+        up = jnp.dot(y, params["up_proj"].astype(cd),
+                     preferred_element_type=jnp.float32).astype(cd)
+        a, b = jnp.split(up, 2, axis=-1)
+        out = jnp.dot(jax.nn.gelu(a) * b, params["down_proj"].astype(cd),
+                      preferred_element_type=jnp.float32).astype(cd)
+        return out[:, None], state

@@ -1,0 +1,114 @@
+"""Optimizers as pure pytree transformations (no optax dependency).
+
+``adamw(...)`` returns an ``Optimizer`` namedtuple of pure functions:
+  init(params) -> state;  update(grads, state, params, step) -> (updates, state)
+so the train step is just ``params = apply_updates(params, updates)``.
+
+Includes: Adam/AdamW (decoupled weight decay), global-norm clipping, any
+schedule from ``repro.optim.schedules``, and fp32 master copies of the first
+and second moments regardless of param dtype (bf16-safe training).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        tree), norm
+
+
+def adamw(lr: Callable | float, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: Optional[float] = None) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        stepf = step.astype(jnp.float32) + 1.0
+        lr_t = jnp.asarray(lr_fn(stepf), jnp.float32)
+        bc1 = 1.0 - b1 ** stepf
+        bc2 = 1.0 - b2 ** stepf
+
+        def one(g, mu, nu, p):
+            g32 = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g32
+            nu = b2 * nu + (1 - b2) * jnp.square(g32)
+            upd = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * upd).astype(p.dtype), mu, nu
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_mu = tdef.flatten_up_to(state["mu"])
+        flat_nu = tdef.flatten_up_to(state["nu"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [one(g, m, n, p) for g, m, n, p in
+               zip(flat_g, flat_mu, flat_nu, flat_p)]
+        updates = tdef.unflatten([o[0] for o in out])
+        new_state = {"mu": tdef.unflatten([o[1] for o in out]),
+                     "nu": tdef.unflatten([o[2] for o in out])}
+        return updates, new_state, {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: Callable | float, *, momentum: float = 0.0,
+        clip_norm: Optional[float] = None) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        if momentum:
+            return {"mom": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+        return {}
+
+    def update(grads, state, params, step):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        lr_t = jnp.asarray(lr_fn(step.astype(jnp.float32) + 1.0), jnp.float32)
+        if momentum:
+            new_mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mom"], grads)
+            updates = jax.tree.map(lambda m, p: (-lr_t * m).astype(p.dtype),
+                                   new_mom, params)
+            return updates, {"mom": new_mom}, {"grad_norm": gnorm, "lr": lr_t}
+        updates = jax.tree.map(
+            lambda g, p: (-lr_t * g.astype(jnp.float32)).astype(p.dtype),
+            grads, params)
+        return updates, state, {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,42 @@
+"""Learning-rate schedules (pure functions of the fp32 step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    """The paper's schedule: linear warmup then constant (App. C: 4k warmup)."""
+
+    def fn(step):
+        warm = jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        return jnp.asarray(lr * warm, jnp.float32)
+
+    return fn
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        warm = jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.asarray(lr * warm * cos, jnp.float32)
+
+    return fn
+
+
+def warmup_rsqrt(lr: float, warmup_steps: int):
+    def fn(step):
+        s = jnp.maximum(step, 1.0)
+        return jnp.asarray(
+            lr * jnp.minimum(s / max(warmup_steps, 1),
+                             (warmup_steps / s) ** 0.5 if warmup_steps else 1.0),
+            jnp.float32)
+
+    return fn

@@ -1,0 +1,154 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train step
+on CPU, asserting output shapes and no NaNs.  One test per assigned arch."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, config_names
+from repro.nn.transformer import TransformerLM
+
+ARCHS = [
+    "granite-moe-1b-a400m", "deepseek-v2-lite-16b", "jamba-v0.1-52b",
+    "musicgen-large", "yi-34b", "yi-9b", "gemma3-4b", "qwen2-1.5b",
+    "xlstm-125m", "qwen2-vl-72b",
+]
+
+
+def _batch(cfg, key, B=2, T=32):
+    toks = jax.random.randint(key, (B, T + 1), 2, cfg.vocab)
+    batch = {"labels": toks[:, 1:]}
+    if cfg.frontend in ("audio_stub", "vision_stub"):
+        # stub frontend: precomputed frame/patch embeddings
+        batch["embeds"] = jax.random.normal(key, (B, T, cfg.d_model),
+                                            cfg.cdtype) * 0.02
+    else:
+        batch["tokens"] = toks[:, :-1]
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, preset="smoke")
+    model = TransformerLM(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+
+    logits, aux = model(params, batch.get("tokens"),
+                        inputs_embeds=batch.get("embeds"))
+    B = batch["labels"].shape[0]
+    T = batch["labels"].shape[1]
+    assert logits.shape == (B, T, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+    (loss, metrics), grads = jax.value_and_grad(
+        model.loss, has_aux=True)(params, batch)
+    assert np.isfinite(float(loss))
+    gleaves = jax.tree.leaves(grads)
+    assert all(not bool(jnp.isnan(g).any()) for g in gleaves)
+    # one SGD step changes the loss
+    params2 = jax.tree.map(lambda p, g: p - 1e-2 * g.astype(p.dtype),
+                           params, grads)
+    loss2, _ = model.loss(params2, batch)
+    assert float(loss2) != float(loss)
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "qwen2-1.5b", "gemma3-4b"])
+def test_arch_smoke_with_mosa_variant(arch):
+    """The paper's technique toggles onto any attention arch."""
+    cfg = get_config(arch, preset="smoke").with_mosa(sparsity=4, n_mosa_heads=4)
+    model = TransformerLM(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+    loss, metrics = model.loss(params, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_mosa_inapplicable_to_xlstm():
+    cfg = get_config("xlstm-125m", preset="smoke")
+    with pytest.raises(ValueError, match="inapplicable"):
+        cfg.with_mosa()
+
+
+def test_all_assigned_archs_registered():
+    names = config_names()
+    for a in ARCHS:
+        assert a in names
+
+
+FULL_EXPECT = {
+    # (n_layers, d_model, n_heads, n_kv, d_ff, vocab) from the assignment
+    "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+    "deepseek-v2-lite-16b": (27, 2048, 16, 16, 10944, 102400),
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+    "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+    "yi-9b": (48, 4096, 32, 4, 11008, 64000),
+    "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+    "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+    "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+    "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch, preset="full")
+    want = FULL_EXPECT[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.attention.n_heads,
+           cfg.attention.n_kv_heads, cfg.d_ff, cfg.vocab)
+    assert got == want, f"{arch}: {got} != {want}"
+
+
+@pytest.mark.parametrize("arch,moe", [
+    ("granite-moe-1b-a400m", (32, 8)),
+    ("deepseek-v2-lite-16b", (64, 6)),
+    ("jamba-v0.1-52b", (16, 2)),
+])
+def test_moe_configs(arch, moe):
+    cfg = get_config(arch, preset="full")
+    assert (cfg.moe.n_experts, cfg.moe.top_k) == moe
+
+
+def test_jamba_interleave_ratio():
+    cfg = get_config("jamba-v0.1-52b", preset="full")
+    pat = cfg.resolved_pattern()
+    n_attn = sum(1 for b in pat if b.mixer == "attn")
+    n_mamba = sum(1 for b in pat if b.mixer == "mamba")
+    assert n_attn * 7 == n_mamba     # 1:7
+
+
+def test_gemma3_local_global_ratio():
+    cfg = get_config("gemma3-4b", preset="full")
+    pat = cfg.resolved_pattern()
+    n_local = sum(1 for b in pat if b.mixer == "attn_local")
+    n_global = sum(1 for b in pat if b.mixer == "attn")
+    assert n_global == 5 and n_local == 29   # 34 layers, 5:1 + remainder
+
+
+def test_find_period_head_offset():
+    """deepseek-style odd first layer must not kill the layer scan (it.9)."""
+    from repro.nn.transformer import find_period
+    from repro.configs.base import BlockSpec
+    a, b = BlockSpec("attn", "dense"), BlockSpec("attn", "moe")
+    assert find_period((a,) + (b,) * 26) == (1, 1, 26, 27)
+    assert find_period((b,) * 8) == (0, 1, 8, 8)
+    assert find_period((a, b, a, b, a, b)) == (0, 2, 3, 6)
+    # no periodicity at all
+    c = BlockSpec("mamba", "dense")
+    assert find_period((a, b, c)) == (0, 0, 0, 0)
+
+
+def test_dryrun_build_cfg_mosa_variant():
+    import importlib
+    dr = importlib.import_module("repro.launch.dryrun")
+    cfg, shape, note = dr.build_cfg("yi-9b", "train_4k", mosa=True)
+    assert cfg.mosa is not None and cfg.mosa.n_dense_heads == 4
+    assert "mosa_hybrid" in note
+    cfg2, _, note2 = dr.build_cfg("yi-9b", "long_500k")
+    assert cfg2.mosa is not None and cfg2.mosa.k_fixed == 512

@@ -1,0 +1,145 @@
+"""Dense attention family: GQA / MLA / local window, train vs serve parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttentionConfig, MLAConfig
+from repro.core.attention import (MLAAttention, MultiHeadAttention,
+                                  chunked_attention, gqa_attention)
+from repro.core.kv_cache import DenseKVCache, MLAKVCache, WindowKVCache
+from repro.core.rope import apply_rope, text_mrope_positions
+
+
+def test_chunked_matches_direct():
+    key = jax.random.PRNGKey(0)
+    B, Hq, Hkv, T, d = 2, 4, 2, 37, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Hq, T, d))
+    k = jax.random.normal(ks[1], (B, Hkv, T, d))
+    v = jax.random.normal(ks[2], (B, Hkv, T, d))
+    pos = jnp.arange(T)
+    o1 = chunked_attention(q, k, v, pos, pos, d ** -0.5, chunk=8)
+    o2 = gqa_attention(q, k, v, pos, pos, d ** -0.5)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_chunked_window_matches_direct():
+    key = jax.random.PRNGKey(1)
+    B, H, T, d = 1, 2, 64, 8
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, T, d))
+    k = jax.random.normal(ks[1], (B, H, T, d))
+    v = jax.random.normal(ks[2], (B, H, T, d))
+    pos = jnp.arange(T)
+    o1 = chunked_attention(q, k, v, pos, pos, d ** -0.5, window=9, chunk=16)
+    o2 = gqa_attention(q, k, v, pos, pos, d ** -0.5, window=9)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+@pytest.mark.parametrize("qkv_bias", [False, True])
+def test_gqa_train_vs_decode_parity(qkv_bias):
+    """Decoding token-by-token must reproduce the training forward."""
+    key = jax.random.PRNGKey(0)
+    B, T, h = 1, 12, 32
+    cfg = AttentionConfig(n_heads=4, n_kv_heads=2, d_head=8, qkv_bias=qkv_bias)
+    m = MultiHeadAttention(h, cfg, impl="chunked", chunk=4)
+    p = m.init(key)
+    x = jax.random.normal(key, (B, T, h))
+    y_train = m(p, x)
+    cache = DenseKVCache.create(B, T, 2, 8, jnp.float32)
+    ys = []
+    for t in range(T):
+        y, cache = m.decode_step(p, x[:, t:t + 1], cache)
+        ys.append(y)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_train), np.asarray(y_dec),
+                               atol=2e-5)
+
+
+def test_window_attention_train_vs_decode_parity():
+    key = jax.random.PRNGKey(2)
+    B, T, h, W = 1, 20, 32, 6
+    cfg = AttentionConfig(n_heads=4, n_kv_heads=2, d_head=8, window=W)
+    m = MultiHeadAttention(h, cfg, impl="chunked", chunk=4)
+    p = m.init(key)
+    x = jax.random.normal(key, (B, T, h))
+    y_train = m(p, x)
+    cache = WindowKVCache.create(B, W, 2, 8, jnp.float32)
+    ys = []
+    for t in range(T):
+        y, cache = m.decode_step(p, x[:, t:t + 1], cache)
+        ys.append(y)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_train), np.asarray(y_dec),
+                               atol=2e-5)
+
+
+def test_mla_train_vs_decode_parity():
+    key = jax.random.PRNGKey(3)
+    B, T, h = 1, 10, 32
+    mla = MLAConfig(kv_lora_rank=16, rope_head_dim=8, v_head_dim=8,
+                    nope_head_dim=8)
+    cfg = AttentionConfig(kind="mla", n_heads=4, d_head=16, mla=mla)
+    m = MLAAttention(h, cfg)
+    p = m.init(key)
+    x = jax.random.normal(key, (B, T, h))
+    y_train = m(p, x)
+    cache = MLAKVCache.create(B, T, 16, 8, jnp.float32)
+    ys = []
+    for t in range(T):
+        y, cache = m.decode_step(p, x[:, t:t + 1], cache)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(y_train),
+                               np.asarray(jnp.concatenate(ys, 1)), atol=3e-5)
+
+
+def test_mla_cache_is_latent_sized():
+    """MLA's point: the cache holds the latent, not per-head K/V."""
+    cache = MLAKVCache.create(2, 100, 16, 8, jnp.float32)
+    per_token = cache.latent.shape[-1] + cache.k_rope.shape[-1]
+    assert per_token == 24            # kv_lora + rope_dim, NOT H*(2*d_head)
+
+
+def test_rope_position_awareness():
+    """RoPE at gathered positions == RoPE applied then gathered."""
+    key = jax.random.PRNGKey(0)
+    T, d = 16, 8
+    x = jax.random.normal(key, (1, T, d))
+    idx = jnp.asarray([[1, 5, 11]])
+    full = apply_rope(x, jnp.arange(T)[None])
+    gathered = jnp.take_along_axis(x, idx[..., None], axis=1)
+    direct = apply_rope(gathered, idx)
+    via_full = jnp.take_along_axis(full, idx[..., None], axis=1)
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(via_full),
+                               atol=1e-6)
+
+
+def test_rope_partial_rotation():
+    x = jnp.ones((1, 4, 8))
+    y = apply_rope(x, jnp.arange(4)[None], rotary_frac=0.5)
+    # last half of dims untouched
+    np.testing.assert_array_equal(np.asarray(y[..., 4:]), np.ones((1, 4, 4)))
+    assert not np.allclose(np.asarray(y[..., :4]), 1.0)
+
+
+def test_mrope_text_equals_rope():
+    """For pure text (t=h=w), M-RoPE must reduce to standard RoPE."""
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (2, 8, 16))
+    pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+    std = apply_rope(x, pos)
+    mr = apply_rope(x, text_mrope_positions(pos), mrope_sections=(2, 3, 3))
+    np.testing.assert_allclose(np.asarray(std), np.asarray(mr), atol=1e-6)
+
+
+def test_mrope_distinct_components_differ():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (1, 8, 16))
+    pos = jnp.broadcast_to(jnp.arange(8), (1, 8))
+    p3 = text_mrope_positions(pos)
+    p3b = p3.at[1].add(3)  # shift the h component (vision patches)
+    a = apply_rope(x, p3, mrope_sections=(2, 3, 3))
+    b = apply_rope(x, p3b, mrope_sections=(2, 3, 3))
+    assert float(jnp.abs(a - b).max()) > 1e-3

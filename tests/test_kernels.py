@@ -1,0 +1,118 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _mosa_inputs(key, B, H, S, d, T, dtype):
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, H, S, d), dtype)
+    k = jax.random.normal(ks[1], (B, H, S, d), dtype)
+    v = jax.random.normal(ks[2], (B, H, S, d), dtype)
+    perm = jnp.stack([
+        jnp.stack([jax.random.permutation(jax.random.fold_in(ks[3], b * H + h),
+                                          T)[:S]
+                   for h in range(H)]) for b in range(B)])
+    idx = jnp.sort(perm, axis=-1).astype(jnp.int32)
+    r = jax.nn.sigmoid(jax.random.normal(ks[4], (B, H, S))).astype(jnp.float32)
+    return q, k, v, idx, r
+
+
+MOSA_CASES = [
+    # (B, H, S, d, T)
+    (1, 1, 8, 16, 32),
+    (2, 3, 24, 20, 100),
+    (1, 2, 128, 64, 1024),     # paper-typical: k=128, d_head=64
+    (2, 4, 33, 48, 256),       # non-aligned S
+    (1, 2, 256, 128, 4096),    # MXU-aligned
+]
+
+
+@pytest.mark.parametrize("B,H,S,d,T", MOSA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mosa_kernel_matches_oracle(B, H, S, d, T, dtype):
+    q, k, v, idx, r = _mosa_inputs(jax.random.PRNGKey(0), B, H, S, d, T, dtype)
+    out = ops.mosa_attention(q, k, v, idx, r)
+    want = ref.mosa_attention_ref(q, k, v, idx, r)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_mosa_kernel_router_scaling():
+    """Doubling r doubles the output (scaling is fused post-softmax)."""
+    q, k, v, idx, r = _mosa_inputs(jax.random.PRNGKey(1), 1, 2, 16, 8, 64,
+                                   jnp.float32)
+    o1 = ops.mosa_attention(q, k, v, idx, r)
+    o2 = ops.mosa_attention(q, k, v, idx, 2 * r)
+    np.testing.assert_allclose(np.asarray(2 * o1), np.asarray(o2), rtol=1e-5)
+
+
+def test_mosa_kernel_respects_index_mask():
+    """A query may only see keys with smaller-or-equal original index."""
+    B, H, S, d, T = 1, 1, 8, 16, 64
+    q, k, v, idx, r = _mosa_inputs(jax.random.PRNGKey(2), B, H, S, d, T,
+                                   jnp.float32)
+    out1 = ops.mosa_attention(q, k, v, idx, r)
+    # perturb the LAST selected token's k/v: rows before it must not change
+    k2 = k.at[:, :, -1].add(100.0)
+    v2 = v.at[:, :, -1].add(100.0)
+    out2 = ops.mosa_attention(q, k2, v2, idx, r)
+    np.testing.assert_allclose(np.asarray(out1[:, :, :-1]),
+                               np.asarray(out2[:, :, :-1]), atol=1e-5)
+
+
+FLASH_CASES = [
+    # (B, Hq, Hkv, Tq, Tk, d, window)
+    (1, 2, 2, 16, 16, 8, 0),
+    (2, 4, 2, 50, 50, 36, 0),
+    (2, 4, 2, 50, 50, 36, 7),
+    (1, 8, 1, 128, 128, 64, 0),     # MQA
+    (1, 4, 4, 1, 77, 32, 0),        # decode
+    (1, 4, 2, 1, 300, 64, 64),      # windowed decode
+    (2, 2, 2, 256, 256, 128, 128),  # MXU-aligned with window
+]
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Tq,Tk,d,window", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_matches_oracle(B, Hq, Hkv, Tq, Tk, d, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, Tq, d), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, Tk, d), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, Tk, d), dtype)
+    out = ops.flash_attention(q, k, v, window=window)
+    want = ref.flash_attention_ref(q, k, v, window=window)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_kernel_block_shape_sweep():
+    """Different BlockSpec tilings give identical results."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    B, H, T, d = 1, 2, 256, 64
+    q = jax.random.normal(ks[0], (B, H, T, d))
+    k = jax.random.normal(ks[1], (B, H, T, d))
+    v = jax.random.normal(ks[2], (B, H, T, d))
+    outs = [np.asarray(ops.flash_attention(q, k, v, block_q=bq, block_k=bk))
+            for bq, bk in [(64, 64), (128, 128), (128, 64), (256, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=1e-5)
+
+
+def test_mosa_layer_pallas_equals_einsum():
+    from repro.configs.base import MoSAConfig
+    from repro.core.mosa import MoSAAttention
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 64, 32))
+    cfg = MoSAConfig(n_mosa_heads=6, sparsity=8, n_dense_heads=0, d_head=16)
+    m1 = MoSAAttention(32, cfg, impl="einsum")
+    m2 = MoSAAttention(32, cfg, impl="pallas")
+    p = m1.init(key)
+    np.testing.assert_allclose(np.asarray(m1(p, x)), np.asarray(m2(p, x)),
+                               atol=1e-5)

@@ -1,0 +1,167 @@
+"""Behavioural tests of the paper's core mechanism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoSAConfig
+from repro.core.kv_cache import MoSAKVCache
+from repro.core.mosa import MoSAAttention
+from repro.core.router import (ExpertChoiceRouter, select_topk,
+                               selection_mask, streaming_topk_update)
+
+
+def test_select_topk_sorted_and_scored():
+    scores = jnp.asarray([[[0.9, 0.1, 0.8, 0.5, 0.7]]])
+    r, idx = select_topk(scores, 3, force_first=False)
+    assert idx.tolist() == [[[0, 2, 4]]]
+    np.testing.assert_allclose(np.asarray(r), [[[0.9, 0.8, 0.7]]])
+
+
+def test_select_topk_force_first():
+    scores = jnp.asarray([[[0.0, 0.9, 0.8, 0.7, 0.6]]])
+    r, idx = select_topk(scores, 3, force_first=True)
+    assert idx.tolist() == [[[0, 1, 2]]]          # 0 forced despite score 0.0
+    np.testing.assert_allclose(np.asarray(r)[0, 0, 0], 0.0)  # true score kept
+
+
+def test_expert_choice_perfect_load_balance():
+    """Every head selects exactly k tokens — no balancing loss needed."""
+    key = jax.random.PRNGKey(0)
+    B, H, T, k = 3, 8, 64, 16
+    router = ExpertChoiceRouter(32, H)
+    p = router.init(key)
+    x = jax.random.normal(key, (B, T, 32))
+    scores = router.scores(p, x)
+    r, idx = select_topk(scores, k)
+    assert idx.shape == (B, H, k)
+    # no duplicate tokens within a head's selection
+    for b in range(B):
+        for h in range(H):
+            sel = np.asarray(idx[b, h])
+            assert len(np.unique(sel)) == k
+
+
+def test_selection_mask_is_causal_on_original_indices():
+    idx = jnp.asarray([[[2, 5, 9]]])
+    m = selection_mask(idx, idx)[0, 0]
+    want = np.tril(np.ones((3, 3), bool))
+    np.testing.assert_array_equal(np.asarray(m), want)
+
+
+def test_mosa_output_zero_at_unselected_positions():
+    key = jax.random.PRNGKey(0)
+    B, T, h = 1, 32, 16
+    cfg = MoSAConfig(n_mosa_heads=2, sparsity=8, n_dense_heads=0, d_head=8,
+                     force_first_token=False)
+    m = MoSAAttention(h, cfg)
+    p = m.init(key)
+    x = jax.random.normal(key, (B, T, h))
+    y = m(p, x)
+    scores = m.router.scores(p["router"], x)
+    _, idx = select_topk(scores, m.k_for(T), False)
+    selected = np.zeros(T, bool)
+    selected[np.asarray(idx).reshape(-1)] = True
+    y_np = np.asarray(y)[0]
+    assert np.abs(y_np[~selected]).max() == 0.0
+    assert np.abs(y_np[selected]).max() > 0.0
+
+
+def test_mosa_router_gradient_flows():
+    key = jax.random.PRNGKey(0)
+    cfg = MoSAConfig(n_mosa_heads=4, sparsity=4, n_dense_heads=0, d_head=8)
+    m = MoSAAttention(16, cfg)
+    p = m.init(key)
+    x = jax.random.normal(key, (2, 32, 16))
+    g = jax.grad(lambda p_: jnp.sum(m(p_, x) ** 2))(p)
+    assert float(jnp.abs(g["router"]["w"]).max()) > 0.0
+
+
+def test_mosa_complexity_k_for():
+    cfg = MoSAConfig(n_mosa_heads=1, sparsity=32, n_dense_heads=0, d_head=8)
+    m = MoSAAttention(16, cfg)
+    assert m.k_for(1024) == 32
+    assert m.k_for(4096) == 128
+    assert m.k_for(16) == 2          # min_k floor (paper §3.5)
+    m2 = MoSAAttention(16, MoSAConfig(n_mosa_heads=1, sparsity=32,
+                                      n_dense_heads=0, d_head=8, k_fixed=64))
+    assert m2.k_for(524288) == 64    # paper §3.4: constant k on long seqs
+
+
+def test_streaming_topk_update():
+    scores = jnp.asarray([[-jnp.inf, -jnp.inf, -jnp.inf]])
+    idx = jnp.asarray([[-1, -1, -1]])
+    # fill three slots
+    for t, s in enumerate([0.5, 0.2, 0.8]):
+        sel, slot, scores, idx = streaming_topk_update(
+            scores, idx, jnp.asarray([s]), t, jnp.asarray(False))
+        assert bool(sel[0])
+    # score below the min -> rejected
+    sel, _, scores, idx = streaming_topk_update(
+        scores, idx, jnp.asarray([0.1]), 3, jnp.asarray(False))
+    assert not bool(sel[0])
+    # score above the min -> evicts the min (0.2 at slot 1)
+    sel, slot, scores, idx = streaming_topk_update(
+        scores, idx, jnp.asarray([0.6]), 4, jnp.asarray(False))
+    assert bool(sel[0]) and int(slot[0]) == 1
+    assert int(idx[0, 1]) == 4
+    # forced insertion regardless of score
+    sel, _, scores, idx = streaming_topk_update(
+        scores, idx, jnp.asarray([-5.0]), 5, jnp.asarray(True))
+    assert bool(sel[0])
+
+
+def test_mosa_decode_kv_cache_is_constant_size():
+    """The paper's KV-cache claim: cache stays at k entries per head."""
+    key = jax.random.PRNGKey(0)
+    B, T, h, H, k = 1, 40, 16, 3, 8
+    cfg = MoSAConfig(n_mosa_heads=H, sparsity=5, n_dense_heads=0, d_head=8)
+    m = MoSAAttention(h, cfg)
+    p = m.init(key)
+    x = jax.random.normal(key, (B, T, h))
+    cache = MoSAKVCache.create(B, H, k, 8, jnp.float32)
+    for t in range(T):
+        y, cache = m.decode_step(p, x[:, t:t + 1], cache)
+    assert cache.k.shape == (B, H, k, 8)          # never grew
+    assert int(cache.length[0]) == T
+    assert cache.kv_entries == H * k
+    # all cached indices are valid past positions
+    assert int(cache.idx.max()) < T
+
+
+def test_mosa_streaming_decode_approximates_training_selection():
+    """Streaming top-k keeps high-score tokens: the final cached set should
+    contain most of the (non-autoregressive) training-time top-k."""
+    key = jax.random.PRNGKey(3)
+    B, T, h, H, k = 1, 64, 16, 2, 8
+    cfg = MoSAConfig(n_mosa_heads=H, sparsity=8, n_dense_heads=0, d_head=8,
+                     force_first_token=False)
+    m = MoSAAttention(h, cfg)
+    p = m.init(key)
+    x = jax.random.normal(key, (B, T, h))
+    cache = MoSAKVCache.create(B, H, k, 8, jnp.float32)
+    for t in range(T):
+        _, cache = m.decode_step(p, x[:, t:t + 1], cache)
+    scores = m.router.scores(p["router"], x)
+    _, idx_train = select_topk(scores, k, False)
+    # streaming top-k over per-token scores == exact top-k (scores are causal)
+    got = set(np.asarray(cache.idx[0, 0]).tolist())
+    want = set(np.asarray(idx_train[0, 0]).tolist())
+    assert got == want
+
+
+def test_mosa_prefill_matches_training_selection():
+    key = jax.random.PRNGKey(4)
+    B, T, h, H = 1, 32, 16, 2
+    cfg = MoSAConfig(n_mosa_heads=H, sparsity=4, n_dense_heads=0, d_head=8)
+    m = MoSAAttention(h, cfg)
+    p = m.init(key)
+    x = jax.random.normal(key, (B, T, h))
+    cache = MoSAKVCache.create(B, H, m.k_for(T), 8, jnp.float32)
+    y, cache = m.prefill(p, x, cache)
+    y_train = m(p, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_train), atol=1e-5)
+    scores = m.router.scores(p["router"], x)
+    _, idx = select_topk(scores, m.k_for(T), True)
+    np.testing.assert_array_equal(np.asarray(cache.idx), np.asarray(idx))

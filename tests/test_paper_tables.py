@@ -1,0 +1,90 @@
+"""Exact reproduction of the paper's quantitative skeleton (Tables 2/4/5)."""
+
+import pytest
+
+from repro.core.flops import (PAPER_MODELS, TABLE4_GFLOPS,
+                              TABLE5_HYBRID_HEADS, TABLE5_PURE_HEADS,
+                              flops_dense_head, flops_fixed_head,
+                              flops_mosa_head, flops_routing_head)
+
+
+@pytest.mark.parametrize("size", ["tiny", "small", "large"])
+def test_table4_forward_flops_exact(size):
+    got = PAPER_MODELS[size].dense_flops(1024) / 1e9
+    assert abs(got - TABLE4_GFLOPS[size]) < 0.005, (size, got)
+
+
+def test_table4_medium_known_discrepancy():
+    """Medium is architecturally exactly 2x small (18L vs 9L, same h/ff/heads)
+    so its FLOPs must be 2*219.85 = 439.70G; the paper prints 430.70G —
+    a likely typo we document rather than reproduce."""
+    got = PAPER_MODELS["medium"].dense_flops(1024) / 1e9
+    assert abs(got - 2 * TABLE4_GFLOPS["small"]) < 0.01
+    assert abs(got - TABLE4_GFLOPS["medium"]) > 8.0  # the paper's printed value
+
+
+@pytest.mark.parametrize("size", list(TABLE5_HYBRID_HEADS))
+def test_table5_hybrid_head_counts_exact(size):
+    want = TABLE5_HYBRID_HEADS[size]
+    got = {s: PAPER_MODELS[size].hybrid_mosa_heads(s) for s in want}
+    assert got == want
+
+
+@pytest.mark.parametrize("size", list(TABLE5_PURE_HEADS))
+def test_table5_pure_head_counts(size):
+    want = TABLE5_PURE_HEADS[size]
+    got = {s: PAPER_MODELS[size].pure_mosa_heads(s) for s in want}
+    assert got == want
+
+
+def test_table2_kv_cache_reduction():
+    """KV = T*H_dense + k*H_mosa reproduces Table 2's KV column."""
+    T = 1024
+    # Tiny: dense 9 heads -> 9.2K; MoSA 4 dense + 17 sparse @ rho=32 -> 4.5K
+    dense = PAPER_MODELS["tiny"].kv_total(T, 9, 0, 32)
+    mosa = PAPER_MODELS["tiny"].kv_total(T, 4, 17, 32)
+    assert round(dense / 1000, 1) == 9.2
+    assert round(mosa / 1000, 1) == 4.6  # 4*1024 + 17*32 = 4640
+    # Large: dense 16 heads -> 16.4K; MoSA 4 + 16 @ rho=16 -> 5.1K
+    dense_l = PAPER_MODELS["large"].kv_total(T, 16, 0, 16)
+    mosa_l = PAPER_MODELS["large"].kv_total(T, 4, 16, 16)
+    assert round(dense_l / 1000, 1) == 16.4
+    assert round(mosa_l / 1000, 1) == 5.1
+    # headline claim: >50% reduction
+    assert mosa / dense < 0.51
+    assert mosa_l / dense_l < 0.32
+
+
+def test_mosa_head_flops_dominated_by_projections_at_high_sparsity():
+    """At k << T the MoSA head is ~T-linear (O(k^2 + T) claim)."""
+    T, h, hp = 4096, 1024, 64
+    k = 64
+    f = flops_mosa_head(T, k, h, hp)
+    proj = 8 * h * hp * k
+    attn = 4 * hp * k * k
+    routing = 2 * h * T + hp * k
+    assert f == proj + attn + routing
+    assert attn / f < 0.05           # attention negligible at rho=64
+    dense = flops_dense_head(T, h, hp)
+    assert f < dense / 25            # >25x cheaper per head
+
+
+def test_routing_head_costs_rho_mosa_heads():
+    """Paper: one Routing head ~ rho fixed/MoSA heads FLOP-wise."""
+    T, h, hp, rho = 1024, 512, 64, 8
+    k = T // rho
+    ratio = flops_routing_head(T, k, h, hp) / flops_fixed_head(T, k, h, hp)
+    assert rho * 0.6 < ratio < rho * 1.05
+
+
+def test_isoflop_never_exceeds_budget():
+    for size, pm in PAPER_MODELS.items():
+        budget = pm.n_heads * flops_dense_head(1024, pm.h, pm.hp)
+        for rho in (2, 4, 8, 16, 32):
+            n = pm.hybrid_mosa_heads(rho)
+            spent = 4 * flops_dense_head(1024, pm.h, pm.hp) + \
+                n * flops_mosa_head(1024, 1024 // rho, pm.h, pm.hp)
+            assert spent <= budget
+            # and adding one more head would exceed it
+            spent1 = spent + flops_mosa_head(1024, 1024 // rho, pm.h, pm.hp)
+            assert spent1 > budget

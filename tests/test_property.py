@@ -1,0 +1,136 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoSAConfig
+from repro.core.flops import PaperModel, flops_dense_head, flops_mosa_head
+from repro.core.mosa import MoSAAttention
+from repro.core.router import select_topk, streaming_topk_update
+from repro.data.pipeline import PackedLMDataset, SyntheticCorpus
+from repro.kernels import ops, ref
+from repro.optim.grad_compression import int8_compress, topk_compress
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@given(T=st.integers(4, 64), k_frac=st.floats(0.1, 1.0),
+       seed=st.integers(0, 2**16), force=st.booleans())
+@settings(**SETTINGS)
+def test_select_topk_invariants(T, k_frac, seed, force):
+    k = max(2, int(T * k_frac))
+    scores = jax.random.uniform(jax.random.PRNGKey(seed), (2, 3, T))
+    r, idx = select_topk(scores, k, force_first=force)
+    idx_np = np.asarray(idx)
+    # sorted ascending, unique, in range
+    assert (np.diff(idx_np, axis=-1) > 0).all()
+    assert idx_np.min() >= 0 and idx_np.max() < T
+    if force:
+        assert (idx_np[..., 0] == 0).all()
+    # r values are the true scores at idx
+    want = np.take_along_axis(np.asarray(scores), idx_np, axis=-1)
+    np.testing.assert_allclose(np.asarray(r), want)
+    # expert choice = perfect load balance: exactly k per head, every head
+    assert idx_np.shape[-1] == k
+
+
+@given(seed=st.integers(0, 2**16), B=st.integers(1, 3), H=st.integers(1, 4),
+       S=st.integers(2, 32), d=st.integers(4, 32))
+@settings(**SETTINGS)
+def test_mosa_kernel_property_matches_oracle(seed, B, H, S, d):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    T = 4 * S
+    q = jax.random.normal(ks[0], (B, H, S, d))
+    k = jax.random.normal(ks[1], (B, H, S, d))
+    v = jax.random.normal(ks[2], (B, H, S, d))
+    idx = jnp.sort(jnp.stack([
+        jnp.stack([jax.random.permutation(
+            jax.random.fold_in(ks[3], b * H + h_), T)[:S]
+            for h_ in range(H)]) for b in range(B)]), -1).astype(jnp.int32)
+    r = jax.nn.sigmoid(jax.random.normal(ks[4], (B, H, S)))
+    np.testing.assert_allclose(
+        np.asarray(ops.mosa_attention(q, k, v, idx, r)),
+        np.asarray(ref.mosa_attention_ref(q, k, v, idx, r)),
+        atol=3e-5, rtol=3e-5)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_streaming_topk_matches_exact_topk(seed):
+    """Streaming evict-min over causal scores == exact top-k of the prefix."""
+    rng = np.random.default_rng(seed)
+    T, k = 24, 5
+    scores_seq = rng.random(T).astype(np.float32)
+    cs = jnp.full((1, k), -jnp.inf)
+    ci = jnp.full((1, k), -1, jnp.int32)
+    for t in range(T):
+        _, _, cs, ci = streaming_topk_update(
+            cs, ci, jnp.asarray([scores_seq[t]]), t, jnp.asarray(False))
+    got = set(np.asarray(ci[0]).tolist())
+    want = set(np.argsort(scores_seq)[-k:].tolist())
+    assert got == want
+
+
+@given(T=st.sampled_from([256, 512, 1024, 2048]),
+       rho=st.sampled_from([2, 4, 8, 16, 32]),
+       h=st.sampled_from([256, 512, 1024]))
+@settings(**SETTINGS)
+def test_mosa_head_always_cheaper_than_dense(T, rho, h):
+    hp = 64
+    k = T // rho
+    assert flops_mosa_head(T, k, h, hp) < flops_dense_head(T, h, hp)
+
+
+@given(n_heads=st.integers(5, 24), layers=st.integers(2, 12),
+       h=st.sampled_from([256, 512, 1024]), rho=st.sampled_from([2, 8, 32]))
+@settings(**SETTINGS)
+def test_isoflop_solver_tight(n_heads, layers, h, rho):
+    pm = PaperModel("x", layers, h, 4 * h, 64, n_heads)
+    n = pm.hybrid_mosa_heads(rho)
+    budget = n_heads * flops_dense_head(1024, h, 64)
+    spend = 4 * flops_dense_head(1024, h, 64) + \
+        n * flops_mosa_head(1024, 1024 // rho, h, 64)
+    assert spend <= budget
+    assert spend + flops_mosa_head(1024, 1024 // rho, h, 64) > budget
+
+
+@given(seed=st.integers(0, 2**16), frac=st.floats(0.05, 1.0))
+@settings(**SETTINGS)
+def test_compression_identity(seed, frac):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (257,))
+    kept, res = topk_compress(g, frac)
+    np.testing.assert_allclose(np.asarray(kept + res), np.asarray(g),
+                               atol=1e-6)
+    deq, res2 = int8_compress(g)
+    np.testing.assert_allclose(np.asarray(deq + res2), np.asarray(g),
+                               atol=1e-6)
+
+
+@given(step=st.integers(0, 10_000), seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_data_pipeline_pure_function_of_step(step, seed):
+    ds = PackedLMDataset(SyntheticCorpus(vocab=512, seed=seed), 32, 2)
+    a = ds.batch_at(step)
+    b = ds.batch_at(step)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].min() >= 1
+
+
+@given(seed=st.integers(0, 2**16), sparsity=st.sampled_from([2, 4, 8]))
+@settings(max_examples=10, deadline=None)
+def test_mosa_layer_output_finite_and_sparse(seed, sparsity):
+    key = jax.random.PRNGKey(seed)
+    B, T, h = 1, 32, 16
+    cfg = MoSAConfig(n_mosa_heads=3, sparsity=sparsity, n_dense_heads=0,
+                     d_head=8)
+    m = MoSAAttention(h, cfg)
+    p = m.init(key)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, T, h))
+    y = np.asarray(m(p, x))
+    assert np.isfinite(y).all()
+    # at most H*k rows can be nonzero
+    nonzero_rows = (np.abs(y[0]).max(-1) > 0).sum()
+    assert nonzero_rows <= cfg.n_mosa_heads * m.k_for(T)

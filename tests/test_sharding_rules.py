@@ -1,0 +1,137 @@
+"""Unit tests for the sharding substrate: logical-axis resolution,
+divisibility safety, cache specs, hints, and the analytic cost model."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.dist import sharding as shd
+from repro.dist.hints import constrain, sharding_hints
+from repro.launch.mesh import make_host_mesh
+from repro.nn.module import LogicalSpec, logical, resolve_spec
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH = FakeMesh({"data": 4, "model": 8})
+
+
+def test_resolve_spec_basic():
+    assert resolve_spec((32, 64), logical("embed", "mlp"),
+                        {"embed": None, "mlp": "model"}, MESH) == P(None, "model")
+
+
+def test_resolve_spec_divisibility_safe():
+    # 6 % 8 != 0 -> replicate instead of fail (GQA kv heads case)
+    assert resolve_spec((6, 64), logical("heads", None),
+                        {"heads": "model"}, MESH) == P()
+
+
+def test_resolve_spec_no_axis_reuse():
+    # two dims mapped to the same mesh axis: second gets dropped
+    spec = resolve_spec((8, 8), logical("a", "b"),
+                        {"a": "model", "b": "model"}, MESH)
+    assert spec == P("model")
+
+
+def test_resolve_spec_multi_axis_batch():
+    m = FakeMesh({"pod": 2, "data": 4, "model": 8})
+    spec = resolve_spec((16, 128), logical("batch", None),
+                        {"batch": ("pod", "data")}, m)
+    assert spec == P(("pod", "data"))
+
+
+def test_dp_axes_trims_to_divisibility():
+    m = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    m.shape = {"pod": 2, "data": 16, "model": 16}
+    assert shd.dp_axes(m, "fsdp_tp", batch=256) == ("pod", "data")
+    assert shd.dp_axes(m, "fsdp_tp", batch=16) == ("pod",) or \
+        shd.dp_axes(m, "fsdp_tp", batch=16) == ("pod", "data")[:1]
+    assert shd.dp_axes(m, "fsdp_tp", batch=1) == ()
+
+
+def test_cache_shardings_structures():
+    from repro.nn.transformer import TransformerLM
+    cfg = get_config("gemma3-4b", preset="smoke")
+    model = TransformerLM(cfg)
+    mesh = make_host_mesh(tp=1)
+    shapes = jax.eval_shape(lambda: model.init_cache(2, 32, jnp.float32))
+    sh = shd.cache_shardings(shapes, mesh, "tp")
+    # same tree structure
+    assert jax.tree.structure(shapes) == jax.tree.structure(
+        jax.tree.map(lambda x: 0, sh))
+
+
+def test_hints_noop_without_context():
+    x = jnp.ones((4, 8))
+    y = constrain(x, ("dp", "tp"))
+    assert (y == x).all()
+
+
+def test_hints_divisibility_safe():
+    mesh = make_host_mesh(tp=1)  # 1x1 mesh
+    with sharding_hints(mesh=mesh):
+        x = jnp.ones((3, 5))
+        y = constrain(x, ("dp", "tp"))   # nothing divides -> no-op semantics
+        assert (y == x).all()
+
+
+def test_param_shardings_cover_all_leaves():
+    from repro.nn.module import init_shapes
+    from repro.nn.transformer import TransformerLM
+    for arch in ("qwen2-1.5b", "jamba-v0.1-52b", "xlstm-125m"):
+        cfg = get_config(arch, preset="smoke")
+        model = TransformerLM(cfg)
+        shapes = init_shapes(model)
+        mesh = make_host_mesh(tp=1)
+        sh = shd.param_shardings(model, mesh, "fsdp_tp", shapes)
+        n_shapes = len(jax.tree.leaves(shapes))
+        n_sh = len(jax.tree.leaves(
+            jax.tree.map(lambda s: 0, sh)))
+        assert n_shapes == n_sh, arch
+
+
+# ----------------------------------------------------------- analytic model
+def test_analytic_matches_paper_flops():
+    """The analytic estimator reduces to the paper's formula on its models."""
+    from benchmarks.analytic import model_flops
+    from repro.configs.mosa_paper import paper_config
+    from repro.core.flops import PAPER_MODELS
+    cfg = paper_config("tiny", "dense", seq_len=1024)
+    got = model_flops(cfg, B=1, T=1024)
+    want = PAPER_MODELS["tiny"].dense_flops(1024)
+    # analytic adds the unembed term the paper omits; remove it to compare
+    got -= 2 * 1024 * cfg.d_model * cfg.vocab
+    assert abs(got - want) / want < 1e-6
+
+
+def test_analytic_active_params_moe():
+    from benchmarks.analytic import param_counts
+    cfg = get_config("granite-moe-1b-a400m", preset="full")
+    total, active = param_counts(cfg)
+    assert 1.2e9 < total < 1.5e9
+    assert active < total            # top-8 of 32 experts
+    assert active > total * 0.25
+
+
+def test_analytic_cache_bytes_scale_with_context():
+    from benchmarks.analytic import cache_bytes
+    cfg = get_config("qwen2-1.5b", preset="smoke")
+    b1 = cache_bytes(cfg, 1, 64)
+    b2 = cache_bytes(cfg, 1, 128)
+    assert b2 > b1 * 1.8             # dense cache ~ linear in S
+
+
+def test_analytic_mosa_cache_constant_in_context():
+    """The paper's claim at the analytic level: MoSA-hybrid cache is O(k)."""
+    from benchmarks.analytic import cache_bytes
+    cfg = get_config("qwen2-1.5b", preset="smoke").with_mosa(
+        sparsity=4, n_mosa_heads=4, local_window=16, k_fixed=8)
+    b1 = cache_bytes(cfg, 1, 64)
+    b2 = cache_bytes(cfg, 1, 128)
+    assert b2 < b1 * 1.1             # window + k_fixed: ~flat in S

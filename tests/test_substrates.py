@@ -1,0 +1,202 @@
+"""Optimizer, schedules, grad compression, checkpointing, data pipeline,
+fault tolerance."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.data.pipeline import (ByteTokenizer, PackedLMDataset, Prefetcher,
+                                 SyntheticCorpus)
+from repro.dist.fault_tolerance import (Heartbeat, StragglerMonitor,
+                                        elastic_plan)
+from repro.optim import schedules
+from repro.optim.grad_compression import (int8_compress, topk_compress)
+from repro.optim.optimizer import (adamw, apply_updates, clip_by_global_norm,
+                                   global_norm, sgd)
+
+
+# ------------------------------------------------------------------ optimizer
+def test_adamw_converges_on_quadratic():
+    opt = adamw(0.1)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    step = jnp.zeros((), jnp.int32)
+    for i in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        upd, state, _ = opt.update(g, state, params, step + i)
+        params = apply_updates(params, upd)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_bf16_params_fp32_moments():
+    opt = adamw(1e-3)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state["mu"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    upd, state, _ = opt.update(g, state, params, jnp.zeros((), jnp.int32))
+    assert upd["w"].dtype == jnp.bfloat16
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-6
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_schedules():
+    lw = schedules.linear_warmup(1.0, 10)
+    assert float(lw(5.0)) == 0.5
+    assert float(lw(100.0)) == 1.0
+    wc = schedules.warmup_cosine(1.0, 10, 110)
+    assert float(wc(10.0)) == pytest.approx(1.0)
+    assert float(wc(110.0)) == pytest.approx(0.1)
+
+
+# ------------------------------------------------------- gradient compression
+def test_topk_compress_error_feedback_identity():
+    g = jnp.asarray([1.0, -0.1, 3.0, 0.01, -2.0])
+    kept, res = topk_compress(g, 0.4)
+    np.testing.assert_allclose(np.asarray(kept + res), np.asarray(g))
+    assert int((kept != 0).sum()) == 2
+
+
+def test_int8_compress_bounded_error():
+    g = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+    deq, res = int8_compress(g)
+    np.testing.assert_allclose(np.asarray(deq + res), np.asarray(g),
+                               atol=1e-6)
+    assert float(jnp.abs(res).max()) <= float(jnp.abs(g).max()) / 127.0 + 1e-6
+
+
+def test_compressed_training_still_converges():
+    """top-k compression + error feedback reaches the optimum."""
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0, -1.0])}
+    opt = sgd(0.05)
+    state = opt.init(params)
+    residual = jax.tree.map(jnp.zeros_like, params)
+    for i in range(600):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        g_fb = jax.tree.map(lambda a, b: a + b, g, residual)
+        comp = jax.tree.map(lambda x: topk_compress(x, 0.25), g_fb)
+        kept = jax.tree.map(lambda t: t[0], comp,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        residual = jax.tree.map(lambda t: t[1], comp,
+                                is_leaf=lambda x: isinstance(x, tuple))
+        upd, state, _ = opt.update(kept, state, params,
+                                   jnp.asarray(i, jnp.int32))
+        params = apply_updates(params, upd)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+# ---------------------------------------------------------------- checkpoints
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+            "b": jnp.asarray([1, 2, 3], jnp.int32)}
+    ckpt.save(str(tmp_path), 7, tree, extra_meta={"step": 7})
+    target = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                          tree)
+    restored, extra = ckpt.restore(str(tmp_path), target)
+    assert extra["step"] == 7
+    np.testing.assert_array_equal(np.asarray(restored["a"]["w"]),
+                                  np.asarray(tree["a"]["w"]))
+    assert restored["b"].dtype == jnp.int32
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    tree = {"w": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), s, tree, keep_last=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2
+    assert ckpt.latest_step(str(tmp_path)) == 4
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    tree = {"w": jnp.arange(4.0)}
+    path = ckpt.save(str(tmp_path), 1, tree)
+    # corrupt the array file
+    npz = os.path.join(path, "arrays.npz")
+    data = open(npz, "rb").read()
+    open(npz, "wb").write(data[:-8] + b"deadbeef")
+    target = {"w": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    with pytest.raises(Exception):
+        ckpt.restore(str(tmp_path), target)
+
+
+def test_async_checkpointer(tmp_path):
+    c = ckpt.AsyncCheckpointer(str(tmp_path), keep_last=1)
+    c.save(1, {"w": jnp.ones((8,))})
+    c.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+# ------------------------------------------------------------------ data
+def test_data_determinism_and_resume():
+    ds = PackedLMDataset(SyntheticCorpus(vocab=1000, seed=3), seq_len=64,
+                         global_batch=4)
+    b1 = ds.batch_at(10)
+    b2 = ds.batch_at(10)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are inputs shifted by one
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    assert b1["tokens"].shape == (4, 64)
+    assert b1["tokens"].max() < 1000
+
+
+def test_data_sharding_partitions_global_batch():
+    full = PackedLMDataset(SyntheticCorpus(seed=0), 32, 8).batch_at(0)
+    assert full["tokens"].shape == (8, 32)
+    s0 = PackedLMDataset(SyntheticCorpus(seed=0), 32, 8, shard_index=0,
+                         shard_count=2).batch_at(0)
+    assert s0["tokens"].shape == (4, 32)
+
+
+def test_prefetcher_orders_steps():
+    ds = PackedLMDataset(SyntheticCorpus(seed=1), 16, 2)
+    pf = Prefetcher(ds, start_step=5)
+    try:
+        s, b = pf.next()
+        assert s == 5
+        s2, b2 = pf.next()
+        assert s2 == 6
+        np.testing.assert_array_equal(b2["tokens"], ds.batch_at(6)["tokens"])
+    finally:
+        pf.close()
+
+
+def test_tokenizer_roundtrip():
+    tok = ByteTokenizer(vocab=400)
+    ids = tok.encode("hello world hello")
+    assert tok.decode(ids) == "hello world hello"
+
+
+# ----------------------------------------------------------- fault tolerance
+def test_straggler_monitor_flags_outlier():
+    mon = StragglerMonitor(z_threshold=3.0, warmup_steps=3)
+    for i in range(20):
+        assert not mon.record(i, 0.1 + 0.001 * (i % 3))
+    assert mon.record(20, 1.5)      # 15x slower step
+    assert mon.summary()["straggler_events"] == 1
+
+
+def test_elastic_plan_shapes():
+    assert elastic_plan(512, tp=16, want_pods=True)["shape"] == (2, 16, 16)
+    assert elastic_plan(256, tp=16)["shape"] == (16, 16)
+    # lose one host (8 chips) within a pod: shrink data axis
+    p = elastic_plan(248, tp=16)
+    assert p["shape"][1] == 16 and p["devices_idle"] < 16
+    # tiny: CPU test hosts
+    assert elastic_plan(1, tp=16)["shape"] == (1, 1)
+
+
+def test_heartbeat_stale_detection(tmp_path):
+    hb = Heartbeat(str(tmp_path), rank=0)
+    hb.beat(5)
+    assert Heartbeat.stale_ranks(str(tmp_path), timeout_s=60) == []
+    assert Heartbeat.stale_ranks(str(tmp_path), timeout_s=0) == [0]

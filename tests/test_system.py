@@ -1,0 +1,110 @@
+"""End-to-end behaviour tests of the paper's system claims.
+
+These are the paper-facing assertions: hybrid MoSA trains at matched FLOPs
+with better loss trend than dense (directional IsoFLOP check at CPU scale),
+and the KV/compute accounting matches the paper's formulas.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.mosa_paper import paper_config
+from repro.core.flops import PAPER_MODELS
+from repro.launch.train import TrainConfig, Trainer
+from repro.nn.transformer import TransformerLM
+
+
+def _short_train(model_cfg, steps=30, seq=128, batch=8, seed=0, lr=3e-3):
+    cfg = TrainConfig(arch="unused", seq_len=seq, global_batch=batch,
+                      steps=steps, lr=lr, warmup=10,
+                      log_every=max(steps // 3, 1), seed=seed)
+    tr = Trainer(cfg, model_cfg=model_cfg)
+    _, _, hist = tr.run(install_signals=False)
+    return hist[-1]["loss"]
+
+
+def test_isoflop_directional_mosa_beats_dense():
+    """Short-training CPU check of the paper's headline ordering:
+    hybrid MoSA <= dense at matched FLOPs (tiny scale, synthetic data).
+
+    30 steps cannot reproduce 100k-step perplexities; we assert the
+    *ordering* with slack, as a smoke-level directional signal.  The full
+    IsoFLOP harness is benchmarks/table1_isoflop.py.
+    """
+    dense = paper_config("tiny", "dense", seq_len=128)
+    dense = dataclasses.replace(dense, n_layers=2, vocab=512)
+    mosa = paper_config("tiny", "mosa", sparsity=8, seq_len=128)
+    mosa = dataclasses.replace(mosa, n_layers=2, vocab=512,
+                               pattern=mosa.pattern[:2])
+    l_dense = _short_train(dense)
+    l_mosa = _short_train(mosa)
+    # hybrid has many more (cheap) heads at matched FLOPs; at minimum it must
+    # be in the same band as dense — 5% slack for short-run noise.
+    assert l_mosa < l_dense * 1.05, (l_mosa, l_dense)
+
+
+def test_model_flops_match_paper_accounting():
+    """configs/mosa_paper wires the Table-5 solver into real configs."""
+    cfg = paper_config("tiny", "mosa", sparsity=8)
+    assert cfg.mosa.n_mosa_heads == PAPER_MODELS["tiny"].hybrid_mosa_heads(8)
+    assert cfg.mosa.n_dense_heads == 4
+    cfg_pure = paper_config("tiny", "pure", sparsity=2)
+    assert cfg_pure.mosa.n_dense_heads == 0
+    assert cfg_pure.mosa.n_mosa_heads == \
+        PAPER_MODELS["tiny"].pure_mosa_heads(2)
+
+
+def test_kv_cache_reduction_at_serve_time():
+    """The serving stack realizes the paper's Table-2 KV claim."""
+    from repro.core.hybrid import HybridAttention
+    # paper Table 2 tiny recipe: ppl-matched = 4 dense + 17 MoSA @ rho=32
+    cfg = paper_config("tiny", "mosa", sparsity=32, n_mosa_heads=17)
+    hy = HybridAttention(cfg.d_model, cfg.mosa)
+    T = 1024
+    kv_mosa = hy.kv_total(T)
+    kv_dense = T * PAPER_MODELS["tiny"].n_heads
+    assert kv_mosa / kv_dense < 0.62       # Table 2 band (-51% w/ 17 heads)
+
+    # and the actual cache arrays agree with the accounting
+    caches = hy.init_cache(1, T, jnp.float32)
+    entries = caches["sparse"].kv_entries + caches["dense"].k.shape[1] * \
+        caches["dense"].k.shape[2]
+    assert entries == kv_mosa
+
+
+def test_sparse_baselines_run_at_matched_flops():
+    """Fixed and Routing variants instantiate and train one step."""
+    for variant in ("fixed", "routing"):
+        cfg = paper_config("tiny", variant, sparsity=8, seq_len=64)
+        cfg = dataclasses.replace(cfg, n_layers=2, vocab=256,
+                                  pattern=cfg.pattern[:2])
+        model = TransformerLM(cfg)
+        key = jax.random.PRNGKey(0)
+        params = model.init(key)
+        toks = jax.random.randint(key, (2, 33), 2, 256)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch)
+        assert np.isfinite(float(loss))
+        assert all(not bool(jnp.isnan(g).any())
+                   for g in jax.tree.leaves(grads))
+
+
+def test_long_context_mosa_constant_k():
+    """Paper §3.4: constant k as T grows — cost per head stays flat."""
+    from repro.configs.base import MoSAConfig
+    from repro.core.mosa import MoSAAttention
+    cfg = MoSAConfig(n_mosa_heads=2, sparsity=16, n_dense_heads=0, d_head=8,
+                     k_fixed=16)
+    m = MoSAAttention(32, cfg)
+    key = jax.random.PRNGKey(0)
+    p = m.init(key)
+    for T in (64, 128, 256):
+        x = jax.random.normal(key, (1, T, 32))
+        y = m(p, x)
+        assert y.shape == (1, T, 32)
+        assert m.k_for(T) == 16

@@ -1,0 +1,110 @@
+"""Training-loop integration: loss goes down, checkpoint/restart resumes
+bit-exactly, preemption triggers a save."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.launch.train import TrainConfig, Trainer
+
+
+def _cfg(tmp_path=None, steps=8, **kw):
+    return TrainConfig(
+        arch="mosa-paper", preset="smoke", arch_kwargs={"variant": "mosa"},
+        seq_len=64, global_batch=4, steps=steps, lr=1e-3, warmup=4,
+        ckpt_dir=str(tmp_path) if tmp_path else None, ckpt_every=4,
+        log_every=100, **kw)
+
+
+def test_training_reduces_loss():
+    tr = Trainer(_cfg(steps=20))
+    _, _, hist = tr.run(install_signals=False)
+    losses = [h["loss"] for h in hist]
+    assert losses[-1] < losses[0]
+
+
+def test_checkpoint_restart_resumes_bit_exact(tmp_path):
+    # run 8 steps straight
+    tr1 = Trainer(_cfg(tmp_path / "a", steps=8))
+    p1, o1, _ = tr1.run(install_signals=False)
+
+    # run 4 steps, "crash", restart, run to 8
+    tr2 = Trainer(_cfg(tmp_path / "b", steps=4))
+    tr2.run(install_signals=False)
+    assert ckpt.latest_step(str(tmp_path / "b")) == 4
+    tr3 = Trainer(_cfg(tmp_path / "b", steps=8))
+    p3, o3, _ = tr3.run(install_signals=False)
+
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p3)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_preemption_checkpoint(tmp_path):
+    tr = Trainer(_cfg(tmp_path, steps=100))
+    # simulate SIGTERM after the 2nd step by toggling the flag
+    orig_step = tr.train_step
+
+    calls = {"n": 0}
+
+    def wrapped(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2 and tr.preempt is not None:
+            tr.preempt.requested = True
+        return orig_step(*a, **kw)
+
+    tr.train_step = wrapped
+    tr.run()
+    assert ckpt.latest_step(str(tmp_path)) == 2   # saved at the boundary
+
+
+def test_elastic_restore_across_mesh_change(tmp_path):
+    """Checkpoint saved under one sharding restores under another."""
+    from repro.configs.base import get_config
+    from repro.dist import sharding as shd
+    from repro.launch.mesh import make_host_mesh
+    from repro.nn.module import init_shapes
+    from repro.nn.transformer import TransformerLM
+
+    cfg = get_config("qwen2-1.5b", preset="smoke")
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ckpt.save(str(tmp_path), 1, params)
+
+    mesh = make_host_mesh(tp=1)  # "new cluster": 1 device
+    shapes = init_shapes(model)
+    sh = shd.param_shardings(model, mesh, "tp", shapes)
+    restored, _ = ckpt.restore(str(tmp_path), shapes, shardings=sh)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_data_state_travels_with_checkpoint(tmp_path):
+    """Resume consumes exactly the batches the crashed run would have."""
+    tr = Trainer(_cfg(tmp_path, steps=6))
+    seen = []
+    orig = tr.train_step
+
+    def spy(params, opt, step, batch):
+        seen.append(np.asarray(batch["tokens"])[0, :4].tolist())
+        return orig(params, opt, step, batch)
+
+    tr.train_step = spy
+    tr.run(install_signals=False)
+
+    tr2 = Trainer(_cfg(tmp_path, steps=8))
+    seen2 = []
+    orig2 = tr2.train_step
+
+    def spy2(params, opt, step, batch):
+        seen2.append(np.asarray(batch["tokens"])[0, :4].tolist())
+        return orig2(params, opt, step, batch)
+
+    tr2.train_step = spy2
+    tr2.run(install_signals=False)
+    # restart at step 6 (ckpt_every=4 -> last ckpt at step 4? no: saved at
+    # i+1 == 4 and at the final step 6) -> resumes with batch 6 and 7
+    assert seen2[0] == Trainer(_cfg(steps=1)).dataset.batch_at(6)["tokens"][0, :4].tolist()
