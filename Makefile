@@ -1,0 +1,28 @@
+# Tier-1 verification targets.  `make ci` is the gate: collection must exit 0
+# (no module may break imports again) before the full suite runs.
+
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: test collect lint smoke ci
+
+# Tier-1 command from ROADMAP.md
+test:
+	$(PY) -m pytest -x -q
+
+# Collection as a checked step: 9 of 13 seed test files once failed to even
+# import; this target keeps that class of regression impossible to miss.
+collect:
+	$(PY) -m pytest -q --collect-only > /dev/null
+	@echo "collection OK"
+
+lint:
+	$(PY) -m compileall -q src tests benchmarks examples
+	@echo "lint OK (compileall)"
+
+# Fast signal: the dist substrate, kernels, and core MoSA math
+smoke:
+	$(PY) -m pytest -q tests/test_sharding_rules.py tests/test_substrates.py \
+	    tests/test_dist_unit.py tests/test_mosa_core.py
+
+ci: lint collect test

@@ -1,0 +1,25 @@
+"""Distributed substrate for the MoSA reproduction.
+
+Four modules, all mesh-driven:
+
+  * ``sharding``        — logical-axis rule sets -> concrete NamedShardings
+                          for params, batches, and serving caches.
+  * ``hints``           — ambient activation-sharding hints (``constrain``)
+                          used inside model code without threading a mesh.
+  * ``fault_tolerance`` — heartbeats, straggler detection, preemption
+                          handling, and elastic mesh (re)planning.
+  * ``pipeline``        — layer-stacked GPipe pipeline parallelism.
+
+Mesh-axis naming convention (shared by every module):
+
+  ``pod``   — outermost data-parallel axis (across pods);
+  ``data``  — within-pod data-parallel axis (batch, FSDP shards);
+  ``model`` — tensor/model-parallel axis (heads, mlp, experts, vocab);
+  ``pipe``  — pipeline-stage axis (only on dedicated pipeline meshes).
+
+Submodules are imported explicitly (``from repro.dist import sharding``);
+this ``__init__`` stays empty of imports so no consumer pays for machinery
+it does not use and no import cycles can form through the package root.
+"""
+
+__all__ = ["sharding", "hints", "fault_tolerance", "pipeline"]

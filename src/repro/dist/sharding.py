@@ -1,0 +1,225 @@
+"""Sharding rule sets: logical model axes -> concrete mesh shardings.
+
+Mesh-axis naming convention (see ``repro.dist.__init__``): data parallelism
+lives on ``("pod", "data")`` (outer to inner), tensor parallelism on
+``"model"``.  Model code only names *logical* axes (``embed``, ``heads``,
+``mlp``, ``expert``, ...); a rule set maps each logical axis to mesh axes, and
+``repro.nn.module.resolve_spec`` applies the mapping divisibility-safely —
+any dimension not divisible by the mapped mesh-axis product is replicated
+instead of failing (the GQA kv-heads case: 6 kv heads on an 8-way model axis
+simply stay replicated).
+
+Two rule sets:
+
+  * ``"tp"``      — tensor parallelism only: width-like axes (mlp, heads,
+                    experts, vocab) shard over ``model``; everything else is
+                    replicated.
+  * ``"fsdp_tp"`` — ``"tp"`` plus ZeRO/FSDP-style sharding of the ``embed``
+                    axis over the data-parallel axes.
+
+Also hosts the jax-version compat shims (``AxisType``, ``make_mesh``) so the
+rest of the codebase never touches ``jax.sharding`` feature-detection.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+try:  # jax >= 0.5 (explicit-sharding axis types)
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    class AxisType:
+        """Stand-in for ``jax.sharding.AxisType`` on older jax releases."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+from repro.nn.module import (LogicalSpec, init_shapes, logical,  # noqa: F401
+                             named_shardings, resolve_spec, resolve_specs)
+
+P = PartitionSpec
+
+# Sharding-invariant RNG: with the legacy (non-partitionable) threefry that
+# older jax defaults to, jit with sharded out_shardings generates DIFFERENT
+# random values than the same program unsharded — sharded init would diverge
+# from single-device init.  Partitionable threefry makes random bits a pure
+# function of (key, position), independent of the mesh.
+jax.config.update("jax_threefry_partitionable", True)
+
+# Data-parallel mesh axes, outermost first; tensor-parallel axis name.
+DP_AXES = ("pod", "data")
+TP_AXIS = "model"
+
+_TP_RULES = {
+    "embed": None,
+    "vocab": TP_AXIS,
+    "mlp": TP_AXIS,
+    "heads": TP_AXIS,
+    "kv_heads": TP_AXIS,
+    "mosa_heads": TP_AXIS,
+    "expert": TP_AXIS,
+    "expert_mlp": None,
+    "batch": DP_AXES,
+}
+
+RULE_SETS: Mapping[str, Mapping[str, Any]] = {
+    "tp": _TP_RULES,
+    "fsdp_tp": {**_TP_RULES, "embed": DP_AXES},
+}
+
+
+# --------------------------------------------------------------- mesh compat
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    """``jax.make_mesh`` with ``axis_types=Auto`` where the jax supports it."""
+    kwargs = {}
+    try:
+        if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+            kwargs["axis_types"] = (AxisType.Auto,) * len(shape)
+    except (TypeError, ValueError):  # pragma: no cover
+        pass
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
+
+
+# ------------------------------------------------------------- axis fitting
+def fit_axes(dim: int, axes: Sequence[str], mesh: Mesh) -> tuple:
+    """Largest prefix of ``axes`` whose mesh-size product divides ``dim``.
+
+    Trims from the *right* (innermost axis first) so the outer data-parallel
+    axis survives longest — a batch of 16 on a (pod=2, data=16) mesh shards
+    over ``pod`` alone rather than replicating.
+    """
+    axes = tuple(a for a in axes if a in mesh.shape)
+    while axes and dim > 0:
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        if total > 0 and dim % total == 0:
+            return axes
+        axes = axes[:-1]
+    return ()
+
+
+def dp_axes(mesh: Mesh, rule_set: str = "fsdp_tp",
+            batch: Optional[int] = None) -> tuple:
+    """Data-parallel axes of ``mesh``, trimmed so they divide ``batch``.
+
+    Driven by the rule set's ``batch`` mapping, restricted to axes present
+    on the mesh.
+    """
+    if rule_set not in RULE_SETS:
+        raise KeyError(f"unknown rule set {rule_set!r}; have {list(RULE_SETS)}")
+    ruled = RULE_SETS[rule_set].get("batch") or ()
+    if isinstance(ruled, str):
+        ruled = (ruled,)
+    axes = tuple(a for a in ruled if a in mesh.shape)
+    if batch is None:
+        return axes
+    return fit_axes(batch, axes, mesh)
+
+
+def tp_axis(mesh: Mesh) -> Optional[str]:
+    return TP_AXIS if TP_AXIS in mesh.shape else None
+
+
+def mesh_rules(mesh: Mesh, rule_set: str) -> dict:
+    """RULE_SETS entry restricted to axes that exist on ``mesh``."""
+    if rule_set not in RULE_SETS:
+        raise KeyError(f"unknown rule set {rule_set!r}; have {list(RULE_SETS)}")
+    out = {}
+    for name, axes in RULE_SETS[rule_set].items():
+        if axes is None:
+            out[name] = None
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        present = tuple(a for a in axes if a in mesh.shape)
+        out[name] = present if present else None
+    return out
+
+
+# ------------------------------------------------------------ public makers
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh, rule_set: str = "fsdp_tp",
+                   batch: Optional[int] = None) -> NamedSharding:
+    """Sharding for a batch-leading tensor: dim 0 over the dp axes."""
+    axes = dp_axes(mesh, rule_set, batch)
+    if not axes:
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P(axes[0] if len(axes) == 1 else axes))
+
+
+def _axes_product(axes, mesh: Mesh) -> int:
+    total = 1
+    for a in axes or ():
+        total *= mesh.shape[a]
+    return total
+
+
+def param_shardings(model, mesh: Mesh, rule_set: str = "fsdp_tp",
+                    shapes=None):
+    """NamedSharding tree for ``model``'s parameters (one leaf per param).
+
+    The ``heads``/``kv_heads`` logical axes usually label FUSED
+    ``n_heads * d_head`` projection dims, so plain dim-divisibility is not
+    enough: 2 GQA kv heads of d_head=16 give a 32-wide dim that a 4-way model
+    axis *can* split — but only by splitting ``d_head`` itself, which breaks
+    head-local ops (RoPE's rotate-half permutes within d_head).  When the
+    model config is visible, those rules are dropped unless the *head count*
+    divides the mapped axes (head-granular fallback to replication).
+    """
+    if shapes is None:
+        shapes = init_shapes(model)
+    rules = dict(mesh_rules(mesh, rule_set))
+    att = getattr(getattr(model, "cfg", None), "attention", None)
+    if att is not None:
+        for rule, n in (("heads", getattr(att, "n_heads", None)),
+                        ("kv_heads", getattr(att, "n_kv_heads", None))):
+            if n and rules.get(rule) and n % _axes_product(rules[rule], mesh):
+                rules[rule] = None
+    return named_shardings(shapes, model.specs(), rules, mesh)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, rule_set: str = "fsdp_tp",
+                    seq_sharded: bool = False):
+    """NamedSharding tree for serving caches.
+
+    Cache pytrees are heterogeneous (Dense/Window/MLA/MoSA KV caches, SSM
+    states), so the mapping is positional rather than name-based:
+
+      * the batch dim (0; 1 for layer-stacked ``scan`` caches) shards over
+        the data-parallel axes;
+      * with ``seq_sharded`` the following dim (sequence for KV caches, heads
+        for MoSA, channels for SSM state) shards over ``model`` — the
+        batch==1 long-context serving layout;
+      * everything else is replicated.
+
+    All mappings are divisibility-safe (non-dividing dims replicate).
+    """
+    dp = dp_axes(mesh, rule_set)
+    tp = tp_axis(mesh)
+
+    def one(path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        stacked = any(getattr(entry, "key", None) == "scan" for entry in path)
+        b = 1 if stacked else 0
+        spec = [None] * len(shape)
+        if len(shape) > b:
+            axes = fit_axes(shape[b], dp, mesh)
+            if axes:
+                spec[b] = axes[0] if len(axes) == 1 else axes
+        if seq_sharded and tp is not None and len(shape) > b + 1 \
+                and shape[b + 1] % mesh.shape[tp] == 0 and shape[b + 1] > 0:
+            spec[b + 1] = tp
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)

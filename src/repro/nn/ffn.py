@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
+from repro.dist import hints
 from repro.nn.module import logical
 from repro.nn.layers import _trunc_normal
 
@@ -274,18 +275,15 @@ class MoEFFN:
 
     def __call__(self, params, x):
         """x: (B, T, h) -> (y, aux_loss)."""
-        from repro.dist import hints as hints_lib
         c = self.cfg
         B, T, h = x.shape
-        h_state = hints_lib._HINTS.get()
-        use_ep = (h_state is not None and h_state.get("mesh") is not None
-                  and h_state.get("tp") in (h_state["mesh"].shape if
-                                            h_state.get("mesh") else {})
-                  and c.n_experts % h_state["mesh"].shape[h_state["tp"]] == 0)
+        state = hints.current()
+        mesh = state["mesh"] if state else None
+        tp = state["tp"] if state else None
+        use_ep = (mesh is not None and tp in mesh.shape
+                  and c.n_experts % mesh.shape[tp] == 0)
         if use_ep:
-            mesh = h_state["mesh"]
-            y, me, ce = self._ep_call(params, x, mesh, h_state["dp"],
-                                      h_state["tp"])
+            y, me, ce = self._ep_call(params, x, mesh, state["dp"], tp)
         else:
             y, me, ce = jax.vmap(self._dispatch_row,
                                  in_axes=(None, 0))(params, x)

@@ -81,7 +81,7 @@ def resolve_spec(
         total = 1
         for a in mesh_axes:
             total *= mesh.shape[a]
-        if total == 0 or dim % total != 0:
+        if total == 0 or dim == 0 or dim % total != 0:
             out.append(None)
             continue
         used.update(mesh_axes)

@@ -20,7 +20,10 @@ def run_devices(script: str, n_devices: int = 8, timeout: int = 420) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # Pin the subprocess to the CPU platform: these are CPU-emulation tests,
+    # and with libtpu installed an unset JAX_PLATFORMS makes backend init
+    # probe for (absent) TPU hardware — which can hang past the timeout.
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
                          capture_output=True, text=True, timeout=timeout,
                          env=env)
@@ -176,7 +179,7 @@ def test_dryrun_single_cell_subprocess():
     """The dry-run entry point works end to end for one light cell."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"      # see run_devices: avoid TPU probing
     out = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-1.5b",
          "--shape", "decode_32k", "--out-dir", "/tmp/dryrun_test"],

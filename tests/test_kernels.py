@@ -43,6 +43,54 @@ def test_mosa_kernel_matches_oracle(B, H, S, d, T, dtype):
                                np.asarray(want, np.float32), atol=tol, rtol=tol)
 
 
+BF16_SWEEP_CASES = [
+    # (B, H, S, d, T) — spans small/odd/MXU-aligned shapes
+    (1, 2, 32, 16, 128),
+    (2, 2, 48, 36, 200),
+    (1, 2, 64, 64, 512),
+    (1, 4, 128, 128, 2048),
+]
+
+
+@pytest.mark.parametrize("B,H,S,d,T", BF16_SWEEP_CASES)
+def test_mosa_kernel_bf16_error_vs_fp32_oracle(B, H, S, d, T):
+    """bf16 kernel vs the fp32 oracle on identical (bf16-quantized) inputs.
+
+    Bounds the *accumulated* low-precision error, not just kernel-vs-oracle
+    drift at matched dtype: the only allowed error sources are the bf16
+    rounding of the output and the kernel's internal precision choices.
+    """
+    q, k, v, idx, r = _mosa_inputs(jax.random.PRNGKey(7), B, H, S, d, T,
+                                   jnp.bfloat16)
+    out = np.asarray(ops.mosa_attention(q, k, v, idx, r), np.float32)
+    want = np.asarray(ref.mosa_attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        idx, r), np.float32)
+    err = np.abs(out - want).max()
+    # outputs are O(1) convex combinations of v*r; one bf16 ulp is ~2^-8
+    assert err < 5e-2, f"bf16 max err {err} at shape {(B, H, S, d, T)}"
+
+
+def test_mosa_kernel_dense_equivalent_full_selection():
+    """T == S with k = T (every token selected): MoSA must reduce exactly to
+    dense causal attention — checked against BOTH oracles (mosa ref and the
+    dense flash ref), so a selection-mask regression can't hide in a shared
+    oracle bug."""
+    B, H, T, d = 2, 2, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (B, H, T, d))
+    k = jax.random.normal(ks[1], (B, H, T, d))
+    v = jax.random.normal(ks[2], (B, H, T, d))
+    idx = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, H, T))
+    r = jnp.ones((B, H, T), jnp.float32)
+
+    out = np.asarray(ops.mosa_attention(q, k, v, idx, r))
+    want_mosa = np.asarray(ref.mosa_attention_ref(q, k, v, idx, r))
+    want_dense = np.asarray(ref.flash_attention_ref(q, k, v))
+    np.testing.assert_allclose(out, want_mosa, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(out, want_dense, atol=2e-5, rtol=2e-5)
+
+
 def test_mosa_kernel_router_scaling():
     """Doubling r doubles the output (scaling is fused post-softmax)."""
     q, k, v, idx, r = _mosa_inputs(jax.random.PRNGKey(1), 1, 2, 16, 8, 64,

@@ -3,7 +3,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+# hypothesis is optional in the CI image; skip (not fail) collection without it
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import MoSAConfig
 from repro.core.flops import PaperModel, flops_dense_head, flops_mosa_head
