@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test collect lint smoke ci
+.PHONY: test collect lint smoke bench-smoke ci
 
 # Tier-1 command from ROADMAP.md
 test:
@@ -25,4 +25,12 @@ smoke:
 	$(PY) -m pytest -q tests/test_sharding_rules.py tests/test_substrates.py \
 	    tests/test_dist_unit.py tests/test_mosa_core.py
 
-ci: lint collect test
+# Decode-path perf trajectory: refreshes the TRACKED BENCH_serve.json
+# (fused vs per-token decode tok/s + MoSA vs dense KV bytes; CPU, tiny scale).
+bench-smoke:
+	$(PY) -m benchmarks.serve_bench --out BENCH_serve.json
+
+# bench-smoke runs BEFORE test: the suite validates the regenerated
+# BENCH_serve.json, so the artifact this ci run leaves behind is the one
+# that passed.
+ci: lint collect bench-smoke test

@@ -10,6 +10,8 @@ run at the paper's true scale on real hardware.
   fig4_longseq     — constant-k long-sequence scaling (Fig. 4)
   kernels          — mosa/flash attention micro-benchmarks (XLA path)
   flops_check      — paper Table 4/5 accounting (exact)
+  decode           — serving decode path: fused vs per-token tok/s + KV bytes
+                     (full knobs / JSON artifact: ``benchmarks.serve_bench``)
 """
 
 from __future__ import annotations
@@ -145,6 +147,21 @@ def kernels():
          f"GFLOP={flops / 1e9:.2f};GFLOPs={flops / us / 1e3:.1f}")
 
 
+# ---------------------------------------------------------------- decode
+def decode(batch=2, gen=32, max_len=256):
+    """Serving decode path (tok/s + KV bytes); see benchmarks.serve_bench."""
+    from benchmarks.serve_bench import run_bench
+    res = run_bench(batch=batch, gen=gen, max_len=max_len)
+    for v, r in res["variants"].items():
+        emit(f"decode/{v}", 1e6 * batch / r["fused_tok_s"],
+             f"fused={r['fused_tok_s']}tok/s;"
+             f"stepwise={r['stepwise_tok_s']}tok/s;"
+             f"speedup={r['fused_speedup']}x;kv_bytes={r['cache_bytes']}")
+    if "kv_bytes_mosa_over_dense" in res:
+        emit("decode/kv_ratio", 0.0,
+             f"mosa_over_dense={res['kv_bytes_mosa_over_dense']}")
+
+
 # ----------------------------------------------------------- accounting
 def flops_check():
     for size, want in TABLE4_GFLOPS.items():
@@ -160,6 +177,7 @@ def flops_check():
 ALL = {
     "flops_check": flops_check,
     "kernels": kernels,
+    "decode": decode,
     "table1_isoflop": table1_isoflop,
     "table2_resource": table2_resource,
     "fig3_sparsity": fig3_sparsity,

@@ -2,7 +2,9 @@
 
 Shows the paper's KV-cache claim live: the MoSA heads keep only their top-k
 tokens, so the cache footprint is a fraction of dense attention's at the same
-context length.
+context length.  Requests flow through the continuous-batching pool: decode
+runs in scan-fused chunks, finished slots (EOS or length limit) refill
+between chunks (DESIGN §6).
 
     PYTHONPATH=src python examples/serve_batched.py --gen 24
 """
@@ -13,11 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config
+from repro.core.kv_cache import cache_nbytes
 from repro.launch.serve import RequestPool, Server
-
-
-def cache_nbytes(tree):
-    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
 
 
 def main():
@@ -27,14 +26,17 @@ def main():
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--max-len", type=int, default=256)
     p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--eos", type=int, default=-1,
+                   help="EOS token id (< 0 disables early stop)")
     args = p.parse_args()
 
     akw = {"variant": args.variant} if args.arch == "mosa-paper" else {}
     cfg = get_config(args.arch, preset="smoke", **akw)
     server = Server(cfg, batch=args.batch, max_len=args.max_len)
 
-    # continuous-batching-lite: submit more requests than slots
-    pool = RequestPool(server)
+    # continuous batching: submit more requests than slots; finished slots
+    # are refilled between fused decode chunks
+    pool = RequestPool(server, eos=args.eos)
     key = jax.random.PRNGKey(0)
     for i in range(args.batch * 2):
         plen = 8 + 4 * (i % 3)

@@ -266,7 +266,13 @@ class MultiHeadAttention:
         return y, cache
 
     def _prefill_window(self, params, x, cache: "WindowKVCache", positions=None):
-        """Window prefill: run the full forward, keep the last W tokens' KV."""
+        """Window prefill: run the full forward, keep the last W tokens' KV.
+
+        Kept tokens land at slot ``position % W`` — the SAME ring arithmetic
+        ``WindowKVCache.append_one`` uses (slot ``length % W``) — so the
+        first decode step after a prompt longer than the window overwrites
+        the oldest kept token, not an arbitrary one.
+        """
         c = self.cfg
         B, T, _ = x.shape
         pos = positions if positions is not None else \
@@ -279,10 +285,18 @@ class MultiHeadAttention:
         take = min(W, T)
         sl = slice(T - take, T)
         base_pos = pos if pos.ndim == 2 else pos[0]
-        kw = jnp.zeros_like(cache.k).at[:, :take].set(k[:, sl].astype(cache.k.dtype))
-        vw = jnp.zeros_like(cache.v).at[:, :take].set(v[:, sl].astype(cache.v.dtype))
-        posw = jnp.full_like(cache.positions, -1).at[:, :take].set(
-            jnp.broadcast_to(base_pos[:, sl], (B, take)).astype(jnp.int32))
+        kept_pos = jnp.broadcast_to(base_pos[:, sl], (B, take)).astype(jnp.int32)
+        slots = kept_pos % W                                  # (B, take)
+
+        def put(dst, slot, val):
+            return dst.at[slot].set(val)
+
+        kw = jax.vmap(put)(jnp.zeros_like(cache.k), slots,
+                           k[:, sl].astype(cache.k.dtype))
+        vw = jax.vmap(put)(jnp.zeros_like(cache.v), slots,
+                           v[:, sl].astype(cache.v.dtype))
+        posw = jax.vmap(put)(jnp.full_like(cache.positions, -1), slots,
+                             kept_pos)
         return y, WindowKVCache(kw, vw, posw, cache.length + T)
 
     def _decode_window(self, params, x, cache: "WindowKVCache", positions=None):
@@ -329,7 +343,10 @@ class MultiHeadAttention:
         k_valid = k_pos < cache.length[:, None]
         # attention in the CACHE's native (B, S, Hkv, d) layout: transposing a
         # sequence-sharded cache forces a per-layer all-gather (§Perf cell-3
-        # it.16), while einsum contracts any layout for free.
+        # it.16), while einsum contracts any layout for free.  Same story for
+        # the head-sharded layout CACHE_AXES assigns under the tp rule sets
+        # (DESIGN §6): g stays a batching dim of the einsum, so a
+        # model-sharded cache never relayouts during fused decode.
         Hkv = c.n_kv_heads
         R = c.n_heads // Hkv
         qg = q.reshape(B, Hkv, R, 1, c.d_head).astype(jnp.float32)

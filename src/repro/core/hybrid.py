@@ -131,6 +131,8 @@ class HybridAttention:
         return dense_T * c.n_dense_heads + self._sparse_k(T) * c.n_mosa_heads
 
     def _sparse_k(self, T: int) -> int:
+        # Mirrors MoSAAttention.k_for, including the cap at T: without it
+        # kv_total / init_cache would overstate KV for T < min_k.
         if self.cfg.k_fixed > 0:
             return min(self.cfg.k_fixed, T)
-        return max(T // self.cfg.sparsity, self.cfg.min_k)
+        return min(max(T // self.cfg.sparsity, self.cfg.min_k), T)

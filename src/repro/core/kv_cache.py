@@ -8,8 +8,24 @@ Four cache families, all fixed-shape pytrees (jit/pjit friendly):
                            the per-head K/V are re-expanded from the latent.
   * ``MoSAKVCache``      — the paper's payoff: each MoSA head keeps only its
                            running top-k selected tokens (streaming
-                           expert-choice; evict-min).  KV memory per head is
-                           O(k), independent of context length.
+                           expert-choice).  KV memory per head is O(k),
+                           independent of context length.
+
+``MoSAKVCache`` is a passive container: the evict-min streaming policy that
+decides which token a new arrival replaces lives in
+``repro.core.router.streaming_topk_update`` (called from
+``repro.core.mosa.MoSAAttention.decode_step``), not here.  Empty-slot
+sentinels, used consistently by both sides:
+
+  * ``scores == -inf`` — slot holds no token yet; any real router score
+    (sigmoid output, in (0, 1)) beats it, so empty slots fill first;
+  * ``idx == -1``      — same slot, position view; decode masks attention to
+    ``idx >= 0`` and tests/kernels treat ``-1`` as "ignore".
+
+Every cache keeps a per-row ``length`` so a continuous-batching server can
+hold rows at different sequence positions in one batched cache.  Sharding:
+``repro.dist.sharding.CACHE_AXES`` declares the logical axes of every cache
+type (head-sharded MoSA decode, DESIGN §6).
 """
 
 from __future__ import annotations
@@ -69,17 +85,21 @@ class WindowKVCache(NamedTuple):
         return cls(z, z, pos, jnp.zeros((batch,), jnp.int32))
 
     def append_one(self, k_new, v_new):
-        """k_new/v_new: (B, Hkv, d) — single decode step."""
-        W = self.k.shape[1]
-        slot = self.length[0] % W
-        k = jax.lax.dynamic_update_slice(
-            self.k, k_new[:, None].astype(self.k.dtype), (0, slot, 0, 0))
-        v = jax.lax.dynamic_update_slice(
-            self.v, v_new[:, None].astype(self.v.dtype), (0, slot, 0, 0))
-        pos = jax.lax.dynamic_update_slice(
-            self.positions, jnp.broadcast_to(
-                self.length[:, None], (self.positions.shape[0], 1)).astype(jnp.int32),
-            (0, slot))
+        """k_new/v_new: (B, Hkv, d) — single decode step.
+
+        Per-row ring slots (``length % W`` row by row): continuous batching
+        refills slots mid-stream, so rows sit at different positions.  The
+        masked elementwise update partitions cleanly for the same reason as
+        ``DenseKVCache.append``.
+        """
+        B, W = self.positions.shape
+        slot = (self.length % W)[:, None]                   # (B, 1)
+        hit = jax.lax.broadcasted_iota(jnp.int32, (B, W), 1) == slot
+        m = hit[..., None, None]
+        k = jnp.where(m, k_new[:, None].astype(self.k.dtype), self.k)
+        v = jnp.where(m, v_new[:, None].astype(self.v.dtype), self.v)
+        pos = jnp.where(hit, self.length[:, None].astype(jnp.int32),
+                        self.positions)
         return WindowKVCache(k, v, pos, self.length + 1)
 
 
@@ -113,8 +133,22 @@ class MLAKVCache(NamedTuple):
         return MLAKVCache(lat, kr, self.length + latent_new.shape[1])
 
 
+def cache_nbytes(tree) -> int:
+    """Total bytes of a cache pytree (the serving-side KV-memory metric)."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree)
+               if hasattr(x, "dtype"))
+
+
 class MoSAKVCache(NamedTuple):
-    """Streaming expert-choice cache: one top-k set per (batch, head)."""
+    """Streaming expert-choice cache: one top-k set per (batch, head).
+
+    Eviction policy (evict-min on router scores) is implemented by
+    ``repro.core.router.streaming_topk_update``; this type only defines the
+    storage layout and the empty-slot sentinels (``scores = -inf``,
+    ``idx = -1`` — see the module docstring).  ``idx`` is kept sorted
+    ascending with empty slots last, matching the prefill/training-time
+    ``select_topk`` convention.
+    """
 
     k: jnp.ndarray        # (B, H, k, d) selected keys
     v: jnp.ndarray        # (B, H, k, d) selected values

@@ -197,15 +197,23 @@ class MoSAAttention:
         score beats the current minimum (or it is the forced first token);
         only then does that head compute its output for this position.
         KV memory stays at k entries per head forever.
+
+        Positions are per-row (``cache.length``): under continuous batching
+        rows sit at different sequence offsets.  After every insertion the
+        cache slots are re-sorted by original position (empty slots last), so
+        ``cache.idx`` keeps the ascending-index invariant that training-time
+        ``select_topk`` establishes — the layout stays deterministic and any
+        index-derived causal mask stays lower-triangular (DESIGN §5).
         """
         c, cd = self.cfg, self.compute_dtype
         B, _, h = x.shape
         H, d = c.n_mosa_heads, c.d_head
-        t = cache.length[0] if positions is None else positions[0, 0]
+        t = cache.length if positions is None else positions[:, 0]   # (B,)
 
         x0 = x[:, 0]                                              # (B, h)
         score = self.router.scores(params["router"], x)[..., 0]   # (B, H)
-        is_forced = jnp.logical_and(jnp.asarray(c.force_first_token), t == 0)
+        is_forced = jnp.logical_and(jnp.asarray(c.force_first_token),
+                                    t == 0)[:, None]              # (B, 1)
 
         q = jnp.einsum("bh,nhd->bnd", x0.astype(cd), params["wq"].astype(cd),
                        preferred_element_type=jnp.float32).astype(cd)
@@ -213,19 +221,28 @@ class MoSAAttention:
                         preferred_element_type=jnp.float32).astype(cd)
         v = jnp.einsum("bh,nhd->bnd", x0.astype(cd), params["wv"].astype(cd),
                        preferred_element_type=jnp.float32).astype(cd)
-        pos_t = jnp.full((B, H, 1), t, jnp.int32)
+        pos_t = jnp.broadcast_to(t[:, None, None], (B, H, 1)).astype(jnp.int32)
         q = rope_lib.apply_rope(q[:, :, None], pos_t, self.rope_theta,
                                 self.rotary_frac)[:, :, 0]
         kk = rope_lib.apply_rope(kk[:, :, None], pos_t, self.rope_theta,
                                  self.rotary_frac)[:, :, 0]
 
         selected, slot, new_scores, new_idx = streaming_topk_update(
-            cache.scores, cache.idx, score, t, is_forced)
+            cache.scores, cache.idx, score,
+            jnp.broadcast_to(t[:, None], (B, H)), is_forced)
 
         onehot = jax.nn.one_hot(slot, cache.k.shape[2], dtype=cd)  # (B,H,k)
         upd = (onehot * selected[..., None].astype(cd))[..., None]
         new_k = cache.k * (1 - upd) + upd * kk[:, :, None]
         new_v = cache.v * (1 - upd) + upd * v[:, :, None]
+
+        # Restore the sorted-ascending slot order (empty slots sort last).
+        order = jnp.argsort(jnp.where(new_idx < 0,
+                                      jnp.iinfo(jnp.int32).max, new_idx), -1)
+        new_idx = jnp.take_along_axis(new_idx, order, -1)
+        new_scores = jnp.take_along_axis(new_scores, order, -1)
+        new_k = jnp.take_along_axis(new_k, order[..., None], 2)
+        new_v = jnp.take_along_axis(new_v, order[..., None], 2)
 
         # Attention of the (possibly inserted) query over the cached set.
         valid = new_idx >= 0                                       # (B,H,k)

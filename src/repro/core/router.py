@@ -81,11 +81,19 @@ def selection_mask(idx_q, idx_k):
 def streaming_topk_update(cache_scores, cache_idx, new_score, new_pos, is_forced):
     """One step of the autoregressive (serving-time) top-k approximation.
 
+    This is the evict-min policy behind ``repro.core.kv_cache.MoSAKVCache``
+    (whose module docstring documents the ``-inf`` / ``-1`` empty-slot
+    sentinels): the incoming token replaces the minimum-score slot iff its
+    router score beats that minimum.  Empty slots score ``-inf``, so they
+    always fill first.  The *storage* lives in the cache; the *policy* lives
+    here — ``MoSAAttention.decode_step`` wires the two together.
+
     cache_scores: (..., k) current per-slot scores (-inf = empty slot)
-    cache_idx:    (..., k) original positions of cached tokens
+    cache_idx:    (..., k) original positions of cached tokens (-1 = empty)
     new_score:    (...,)   router score of the incoming token
-    new_pos:      scalar or (...,) its position
-    is_forced:    bool — force insertion (token 0 / attention sink)
+    new_pos:      scalar or broadcastable to new_score's shape — its position
+    is_forced:    bool (broadcastable) — force insertion (token 0 /
+                  attention sink)
 
     Returns (selected, slot, new_scores, new_idx):
       selected: (...,) bool — whether the token entered the set

@@ -39,6 +39,7 @@ except ImportError:  # pragma: no cover - depends on installed jax
         Explicit = "explicit"
         Manual = "manual"
 
+from repro.core import kv_cache as _kvc
 from repro.nn.module import (LogicalSpec, init_shapes, logical,  # noqa: F401
                              named_shardings, resolve_spec, resolve_specs)
 
@@ -187,28 +188,135 @@ def param_shardings(model, mesh: Mesh, rule_set: str = "fsdp_tp",
     return named_shardings(shapes, model.specs(), rules, mesh)
 
 
+# ------------------------------------------------------- cache spec table
+# Per-cache-type logical axes, one name (or None) per tensor dim, mirroring
+# each NamedTuple's field layout in ``repro.core.kv_cache``.  Resolution:
+#
+#   * ``"batch"``                     -> the rule set's data-parallel axes;
+#   * ``"seq"``                       -> ``model``, only under
+#                                        ``seq_sharded`` (the batch==1
+#                                        long-context layout);
+#   * ``"kv_heads"`` / ``"mosa_heads"`` -> whatever the rule set maps them to
+#     (``model`` under ``tp``/``fsdp_tp``) — unlike the *parameter* specs,
+#     cache head dims hold the literal head count (never fused with d_head),
+#     so plain dim-divisibility is the correct guard here.
+#
+# This is what lets MoSA's (B, H, k, d) cache shard its HEAD dim over the
+# tensor-parallel axis at decode time (head-parallel decode, DESIGN §6): the
+# positional heuristic this table replaced could only name "the dim after
+# batch", which for MoSA is heads but for dense caches is sequence.
+CACHE_AXES: Mapping[type, Mapping[str, tuple]] = {
+    _kvc.DenseKVCache: {
+        "k": ("batch", "seq", "kv_heads", None),
+        "v": ("batch", "seq", "kv_heads", None),
+        "length": ("batch",),
+    },
+    _kvc.WindowKVCache: {
+        "k": ("batch", "seq", "kv_heads", None),
+        "v": ("batch", "seq", "kv_heads", None),
+        "positions": ("batch", "seq"),
+        "length": ("batch",),
+    },
+    _kvc.MLAKVCache: {
+        "latent": ("batch", "seq", None),
+        "k_rope": ("batch", "seq", None),
+        "length": ("batch",),
+    },
+    _kvc.MoSAKVCache: {
+        "k": ("batch", "mosa_heads", None, None),
+        "v": ("batch", "mosa_heads", None, None),
+        "scores": ("batch", "mosa_heads", None),
+        "idx": ("batch", "mosa_heads", None),
+        "length": ("batch",),
+    },
+}
+
+_CACHE_TYPES = tuple(CACHE_AXES)
+
+
+def cache_spec(cache, mesh: Mesh, rule_set: str = "fsdp_tp",
+               seq_sharded: bool = False, stacked: bool = False):
+    """PartitionSpec for one typed cache from the ``CACHE_AXES`` table.
+
+    ``cache`` is a KV-cache NamedTuple (arrays or ShapeDtypeStructs);
+    ``stacked`` marks layer-stacked ``scan`` caches (every dim shifted right
+    by the layer axis, which stays replicated).  Returns a same-type
+    NamedTuple of PartitionSpecs.  Divisibility-safe: any dim the mapped
+    axes do not divide is replicated; a mesh axis is used at most once per
+    tensor (``seq`` wins over heads when ``seq_sharded`` requests both).
+    """
+    rules = mesh_rules(mesh, rule_set)
+    dp = dp_axes(mesh, rule_set)
+    tp = tp_axis(mesh)
+    table = CACHE_AXES[type(cache)]
+
+    def one_field(leaf, names):
+        shape = tuple(getattr(leaf, "shape", ()))
+        off = 1 if stacked else 0
+        spec = [None] * len(shape)
+        used: set = set()
+        for i, name in enumerate(names):
+            d = off + i
+            if name is None or d >= len(shape):
+                continue
+            dim = shape[d]
+            if name == "batch":
+                axes = fit_axes(dim, tuple(a for a in dp if a not in used),
+                                mesh)
+            elif name == "seq":
+                axes = (tp,) if (seq_sharded and tp and tp not in used
+                                 and dim > 0
+                                 and dim % mesh.shape[tp] == 0) else ()
+            else:
+                axes = rules.get(name) or ()
+                if isinstance(axes, str):
+                    axes = (axes,)
+                axes = tuple(a for a in axes if a not in used)
+                if _axes_product(axes, mesh) == 0 or dim == 0 \
+                        or dim % _axes_product(axes, mesh):
+                    axes = ()
+            if axes:
+                spec[d] = axes[0] if len(axes) == 1 else axes
+                used.update(axes)
+        while spec and spec[-1] is None:
+            spec.pop()
+        return P(*spec)
+
+    return type(cache)(*(one_field(getattr(cache, f), table[f])
+                         for f in cache._fields))
+
+
 def cache_shardings(cache_shapes, mesh: Mesh, rule_set: str = "fsdp_tp",
                     seq_sharded: bool = False):
     """NamedSharding tree for serving caches.
 
-    Cache pytrees are heterogeneous (Dense/Window/MLA/MoSA KV caches, SSM
-    states), so the mapping is positional rather than name-based:
+    Typed KV caches (Dense/Window/MLA/MoSA) resolve through the
+    ``CACHE_AXES`` spec table — each cache family declares the logical axis
+    of every dim.  Under the tp rule sets BOTH MoSA and dense/window caches
+    head-shard over ``model`` by default; ``seq_sharded`` makes dense
+    caches seq-shard instead (a mesh axis is used at most once per tensor,
+    and ``seq`` wins).  Remaining leaves (SSM / xLSTM recurrent states,
+    which are plain array pytrees) keep the positional fallback:
 
       * the batch dim (0; 1 for layer-stacked ``scan`` caches) shards over
         the data-parallel axes;
-      * with ``seq_sharded`` the following dim (sequence for KV caches, heads
-        for MoSA, channels for SSM state) shards over ``model`` — the
-        batch==1 long-context serving layout;
-      * everything else is replicated.
+      * with ``seq_sharded`` the following dim (channels for SSM state)
+        shards over ``model``.
 
     All mappings are divisibility-safe (non-dividing dims replicate).
     """
     dp = dp_axes(mesh, rule_set)
     tp = tp_axis(mesh)
 
+    def is_cache(x):
+        return isinstance(x, _CACHE_TYPES)
+
     def one(path, leaf):
-        shape = tuple(getattr(leaf, "shape", ()))
         stacked = any(getattr(entry, "key", None) == "scan" for entry in path)
+        if is_cache(leaf):
+            specs = cache_spec(leaf, mesh, rule_set, seq_sharded, stacked)
+            return type(leaf)(*(NamedSharding(mesh, s) for s in specs))
+        shape = tuple(getattr(leaf, "shape", ()))
         b = 1 if stacked else 0
         spec = [None] * len(shape)
         if len(shape) > b:
@@ -222,4 +330,5 @@ def cache_shardings(cache_shapes, mesh: Mesh, rule_set: str = "fsdp_tp",
             spec.pop()
         return NamedSharding(mesh, P(*spec))
 
-    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+    return jax.tree_util.tree_map_with_path(one, cache_shapes,
+                                            is_leaf=is_cache)

@@ -1,13 +1,21 @@
 """Batched serving driver.
 
 Prefill + decode with per-layer caches; the MoSA layers realize the paper's
-KV-cache reduction at serve time (streaming top-k cache, DESIGN §5).
+KV-cache reduction at serve time (streaming top-k cache, DESIGN §5).  The
+decode hot path is the scan-fused chunk decoder of DESIGN §6: one jit
+dispatch per *chunk* of tokens instead of several dispatches per token,
+sampling on-device, caches donated, and (under the ``tp`` rule sets) the
+MoSA KV caches head-sharded over the ``model`` mesh axis.
 
 Library entry points:
-  * ``Server`` — holds jit'd ``prefill`` / ``decode_step`` with cache
-    shardings; ``generate`` runs greedy/temperature decoding for a batch.
-  * ``RequestPool`` — minimal continuous-batching front end: requests join a
-    fixed-size batch; finished slots are refilled between decode steps.
+  * ``Server`` — holds jit'd ``prefill`` / ``decode_step`` /
+    ``decode_many`` with per-cache-type shardings; ``generate`` runs
+    greedy / temperature / top-k decoding for a batch in one fused program;
+    ``generate_stepwise`` keeps the legacy one-dispatch-per-token loop (the
+    benchmark baseline).
+  * ``RequestPool`` — continuous batching: requests occupy batch slots;
+    finished slots are refilled between fused decode chunks (single-row
+    prefill written into the batched caches) and EOS is honored.
 
 CLI (smoke-scale):
   PYTHONPATH=src python -m repro.launch.serve --arch mosa-paper \\
@@ -30,7 +38,7 @@ from repro.dist import hints
 from repro.dist.fault_tolerance import elastic_plan
 from repro.launch import mesh as mesh_lib
 from repro.nn.module import init_shapes
-from repro.nn.transformer import TransformerLM
+from repro.nn.transformer import TransformerLM, sample_logits
 
 
 class Server:
@@ -58,11 +66,56 @@ class Server:
             self.model.prefill,
             in_shardings=(self.param_sh, tok_sh, self.cache_sh),
             out_shardings=(None, self.cache_sh))
+        # decode-time ``tok`` inherits its sharding (see _decode_many below).
         self.decode_step = jax.jit(
             self.model.decode_step,
-            in_shardings=(self.param_sh, tok_sh, self.cache_sh),
+            in_shardings=(self.param_sh, None, self.cache_sh),
             out_shardings=(None, self.cache_sh),
             donate_argnums=(2,))
+        # The fused chunk decoder: n decode steps + on-device sampling in one
+        # program; caches donated so XLA updates them in place.
+        # static_argnums + positional calls: jit rejects kwargs outright when
+        # in_shardings is given (jax 0.4.x), so (n, top_k, return_logits)
+        # travel positionally.  ``temperature`` stays TRACED so sweeping it
+        # never recompiles the n-step program.  ``tok`` inherits its incoming
+        # sharding (None): it is a committed on-device array sampled from the
+        # previous chunk's (replicated) logits, and pinning it to the batch
+        # sharding makes pjit reject the replicated layout outright.
+        self._decode_many = jax.jit(
+            self.model.decode_many,
+            static_argnums=(4, 6, 7),
+            in_shardings=(self.param_sh, None, self.cache_sh, None, None),
+            out_shardings=(None, self.cache_sh),
+            donate_argnums=(2,))
+        self.sample = jax.jit(sample_logits, static_argnames=("top_k",))
+
+        def decode_many(params, tok, caches, key, n, temperature=0.0,
+                        top_k=0):
+            return self._decode_many(params, tok, caches, key, n,
+                                     jnp.float32(temperature), top_k, False)
+        self.decode_many = decode_many
+
+        # Single-row prefill + slot write: continuous batching refills one
+        # finished slot without touching the other rows' caches.
+        cache_shapes1 = jax.eval_shape(
+            lambda: self.model.init_cache(1, max_len))
+        self.cache_sh1 = shd.cache_shardings(cache_shapes1, mesh, rule_set,
+                                             seq_sharded=seq_sharded)
+        self.prefill_one = jax.jit(
+            self.model.prefill,
+            in_shardings=(self.param_sh, None, self.cache_sh1),
+            out_shardings=(None, self.cache_sh1))
+
+        def _write_slot(batched, row, b):
+            def one(path, dst, src):
+                axis = 1 if any(getattr(e, "key", None) == "scan"
+                                for e in path) else 0
+                return jax.lax.dynamic_update_slice_in_dim(
+                    dst, src.astype(dst.dtype), b, axis)
+            return jax.tree_util.tree_map_with_path(one, batched, row)
+
+        self.write_slot = jax.jit(_write_slot, donate_argnums=(0,),
+                                  out_shardings=self.cache_sh)
 
         if params is None:
             with mesh:
@@ -71,30 +124,70 @@ class Server:
                     jax.random.PRNGKey(0))
         self.params = params
 
-    def new_cache(self):
+    def new_cache(self, batch: Optional[int] = None):
+        batch = self.batch if batch is None else batch
+        sh = self.cache_sh if batch == self.batch else self.cache_sh1
         with self.mesh:
             return jax.jit(
-                lambda: self.model.init_cache(self.batch, self.max_len),
-                out_shardings=self.cache_sh)()
+                lambda: self.model.init_cache(batch, self.max_len),
+                out_shardings=sh)()
 
     def generate(self, prompts: jnp.ndarray, gen_len: int,
-                 temperature: float = 0.0, key=None):
-        """prompts: (B, P) int32 -> (B, gen_len) int32 greedy/temp sampling."""
+                 temperature: float = 0.0, key=None, top_k: int = 0):
+        """prompts: (B, P) int32 -> ((B, gen_len) int32, caches).
+
+        One prefill dispatch + ONE fused decode dispatch for the whole
+        completion; greedy when ``temperature == 0``.
+        """
         B, P = prompts.shape
         assert B == self.batch
+        assert P + gen_len - 1 <= self.max_len, (
+            f"prompt ({P}) + {gen_len - 1} decode steps exceeds max_len "
+            f"{self.max_len}: appends past the cache end are silently "
+            f"dropped (masked update never matches)")
         caches = self.new_cache()
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        k0, kd = jax.random.split(key)
         with self.mesh, hints.sharding_hints(mesh=self.mesh):
             logits, caches = self.prefill(self.params, prompts, caches)
-            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            tok0 = self.sample(logits[:, -1], k0, jnp.float32(temperature),
+                               top_k=top_k)
+            toks, caches = self.decode_many(
+                self.params, tok0[:, None], caches, kd, gen_len - 1,
+                temperature, top_k)
+        return jnp.concatenate([tok0[:, None], toks], axis=1), caches
+
+    def generate_stepwise(self, prompts: jnp.ndarray, gen_len: int,
+                          temperature: float = 0.0, key=None, top_k: int = 0):
+        """Legacy per-token loop (one jit dispatch + eagerly dispatched
+        sampling ops per token; jax's async dispatch means the host blocks
+        only at the end, so the fused path's win over this baseline is
+        per-token dispatch overhead, not removed host syncs).
+
+        Kept as the benchmark baseline for the fused path — see
+        ``benchmarks/serve_bench.py`` and DESIGN §6.  Sampling goes through
+        the same jitted ``sample_logits`` as the fused path.
+        """
+        B, P = prompts.shape
+        assert B == self.batch
+        assert P + gen_len - 1 <= self.max_len, (
+            f"prompt ({P}) + {gen_len - 1} decode steps exceeds max_len "
+            f"{self.max_len}")
+        caches = self.new_cache()
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        temp = jnp.float32(temperature)
+        with self.mesh, hints.sharding_hints(mesh=self.mesh):
+            logits, caches = self.prefill(self.params, prompts, caches)
+            key, sub = jax.random.split(key)
+            tok = self.sample(logits[:, -1], sub, temp, top_k=top_k)[:, None]
             out = [tok]
             for i in range(gen_len - 1):
                 logits, caches = self.decode_step(self.params, tok, caches)
-                if temperature > 0:
-                    key, sub = jax.random.split(key)
-                    tok = jax.random.categorical(
-                        sub, logits[:, -1] / temperature).astype(jnp.int32)[:, None]
-                else:
-                    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+                key, sub = jax.random.split(key)
+                tok = self.sample(logits[:, -1], sub, temp,
+                                  top_k=top_k)[:, None]
                 out.append(tok)
         return jnp.concatenate(out, axis=1), caches
 
@@ -109,37 +202,129 @@ class Request:
 
 
 class RequestPool:
-    """Continuous-batching-lite: fixed B slots, refill when a request ends."""
+    """Continuous batching: fixed B slots over one batched cache.
 
-    def __init__(self, server: Server, eos: int = 0):
+    Decode runs in fused chunks (``Server.decode_many``).  Between chunks,
+    requests that finished (EOS, per-request ``max_new``, or the global
+    ``max_steps`` budget) free their slot, and queued requests take it over:
+    the new prompt is prefilled batch-of-one and written into that row of
+    the batched caches (every cache keeps per-row ``length``, so rows at
+    different sequence positions coexist).  Prompts are left-padded to a
+    fixed bucket so the single-row prefill compiles once.
+
+    Length policy (clamps, not errors): each request prefills at its own
+    power-of-two bucket (``prefill_len`` pins a fixed bucket instead; both
+    capped at the server's ``max_len``), so a request's output never
+    depends on what else is queued and at most log2(max_len) prefill
+    programs compile.  Prompts longer than the bucket are LEFT-truncated to
+    their most recent tokens; shorter prompts are left-padded, and the pad
+    tokens ARE attended (same approximation as the pre-pool cohort code —
+    masked prefill is an open item).  ``max_new`` is clamped so prompt +
+    completion fits ``max_len`` — cache appends past ``max_len`` would
+    otherwise be silently dropped while decode keeps emitting tokens
+    against the stale entries.
+
+    ``eos``: token id that ends a request (included in its output); ``< 0``
+    disables EOS stopping.
+    """
+
+    def __init__(self, server: Server, eos: int = -1, chunk: int = 8,
+                 prefill_len: Optional[int] = None):
         self.server = server
         self.eos = eos
+        self.chunk = chunk
+        self.prefill_len = prefill_len
         self.queue: list = []
-        self.slots: list = [None] * server.batch
 
     def submit(self, prompt, max_new: int):
         rid = len(self.queue)
         self.queue.append(Request(rid, jnp.asarray(prompt, jnp.int32), max_new))
         return rid
 
+    def _bucket(self, prompt_len: int) -> int:
+        if self.prefill_len:
+            return min(self.prefill_len, self.server.max_len)
+        b = 1
+        while b < max(prompt_len, 1):
+            b *= 2
+        return min(b, self.server.max_len)
+
     def run(self, max_steps: int = 1000):
-        """Simplified loop: drains the queue batch-by-batch (prefill per
-        cohort, decode until every member finishes or hits max_new)."""
-        results = {}
-        while self.queue:
-            cohort = [self.queue.pop(0) for _ in
-                      range(min(self.server.batch, len(self.queue)))]
-            while len(cohort) < self.server.batch:  # pad with a dummy
-                cohort.append(Request(-1, cohort[0].prompt, 1))
-            P = max(len(r.prompt) for r in cohort)
-            prompts = jnp.stack([
-                jnp.pad(r.prompt, (P - len(r.prompt), 0)) for r in cohort])
-            gen = max(r.max_new for r in cohort)
-            toks, _ = self.server.generate(prompts, gen)
-            for b, r in enumerate(cohort):
-                if r.rid >= 0:
-                    seq = toks[b, :r.max_new]
-                    results[r.rid] = seq
+        """Serve every queued request; returns {rid: generated tokens}.
+
+        ``max_steps`` caps the total number of decode steps across the whole
+        pool — when the budget runs out, in-flight requests return whatever
+        they generated so far and the remaining queue is left unserved.
+        """
+        srv = self.server
+        B = srv.batch
+        results: dict = {}
+        slots: list = [None] * B
+        caches = srv.new_cache()
+        cur = jnp.zeros((B, 1), jnp.int32)
+        key = jax.random.PRNGKey(0)
+        steps = 0
+
+        def finish(b):
+            r = slots[b]
+            r.done = True
+            results[r.rid] = jnp.asarray(r.generated, jnp.int32)
+            slots[b] = None
+
+        with srv.mesh, hints.sharding_hints(mesh=srv.mesh):
+            while self.queue or any(s is not None for s in slots):
+                # Refill free slots: single-row prefill -> write into row b.
+                for b in range(B):
+                    if slots[b] is None and self.queue and steps < max_steps:
+                        r = self.queue.pop(0)
+                        bucket = self._bucket(len(r.prompt))
+                        # clamp so the completion fits the cache: positions
+                        # bucket..max_len-1 hold the decoded tokens' KV
+                        r.max_new = min(r.max_new,
+                                        srv.max_len - bucket + 1)
+                        pad = bucket - len(r.prompt)
+                        prompt = jnp.pad(r.prompt[-bucket:], (max(pad, 0), 0))
+                        row = srv.new_cache(batch=1)
+                        logits, row = srv.prefill_one(srv.params,
+                                                      prompt[None], row)
+                        caches = srv.write_slot(caches, row, b)
+                        tok0 = srv.sample(logits[:, -1], key)
+                        cur = cur.at[b, 0].set(tok0[0])
+                        slots[b] = r
+                        r.generated.append(int(tok0[0]))
+                        if r.max_new <= 1 or int(tok0[0]) == self.eos:
+                            finish(b)
+                if not any(s is not None for s in slots):
+                    if steps >= max_steps:
+                        break
+                    continue
+                if steps >= max_steps:
+                    for b in range(B):
+                        if slots[b] is not None:
+                            finish(b)
+                    break
+
+                # One fused decode chunk for all live rows.  Chunk length is
+                # clamped to the longest remaining request so a nearly-done
+                # cohort doesn't burn a full chunk (n stays in [1, chunk], so
+                # at most `chunk` distinct programs ever compile).
+                need = max(r.max_new - len(r.generated)
+                           for r in slots if r is not None)
+                n = max(min(self.chunk, max_steps - steps, need), 1)
+                key, sub = jax.random.split(key)
+                toks, caches = srv.decode_many(srv.params, cur, caches, sub, n)
+                steps += n
+                host = jax.device_get(toks)
+                cur = toks[:, -1:]
+                for b in range(B):
+                    r = slots[b]
+                    if r is None:
+                        continue
+                    for t in host[b]:
+                        r.generated.append(int(t))
+                        if int(t) == self.eos or len(r.generated) >= r.max_new:
+                            finish(b)
+                            break
         return results
 
 
@@ -152,6 +337,11 @@ def main(argv=None):
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=16)
     p.add_argument("--max-len", type=int, default=128)
+    p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--top-k", type=int, default=0)
+    p.add_argument("--stepwise", action="store_true",
+                   help="use the legacy per-token loop instead of the "
+                        "fused chunk decoder")
     args = p.parse_args(argv)
 
     akw = {"variant": args.variant} if args.variant else {}
@@ -160,11 +350,18 @@ def main(argv=None):
     key = jax.random.PRNGKey(0)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 2,
                                  cfg.vocab)
+    gen = server.generate_stepwise if args.stepwise else server.generate
+    toks, caches = gen(prompts, args.gen, temperature=args.temperature,
+                       key=key, top_k=args.top_k)
+    jax.block_until_ready(toks)   # warm (compile) outside the timing
     t0 = time.perf_counter()
-    toks, caches = server.generate(prompts, args.gen)
+    toks, caches = gen(prompts, args.gen, temperature=args.temperature,
+                       key=key, top_k=args.top_k)
+    jax.block_until_ready(toks)
     dt = time.perf_counter() - t0
     print(f"generated {toks.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
+          f"({args.batch * args.gen / dt:.1f} tok/s, "
+          f"{'stepwise' if args.stepwise else 'fused'})")
     print(toks[0])
     # report the paper's KV metric if the model has MoSA layers
     if cfg.mosa is not None:

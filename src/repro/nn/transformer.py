@@ -32,6 +32,31 @@ from repro.nn.module import logical
 from repro.nn.xlstm import MLSTMBlock, SLSTMBlock
 
 
+def sample_logits(logits, key, temperature=0.0, top_k: int = 0):
+    """Sample next tokens from (B, V) logits entirely on-device.
+
+    ``top_k`` is STATIC (it sizes a ``lax.top_k``); ``temperature`` may be a
+    Python float (greedy argmax is then selected at trace time) or a traced
+    scalar — a serving loop can sweep temperatures without recompiling the
+    fused decode program (``lax.cond`` picks greedy vs categorical
+    on-device).  Returns (B,) int32.
+    """
+    logits = logits.astype(jnp.float32)
+    if top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if isinstance(temperature, (int, float)):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / temperature).astype(jnp.int32)
+    temp = jnp.asarray(temperature, jnp.float32)
+    return jax.lax.cond(
+        temp > 0.0,
+        lambda: jax.random.categorical(key, logits / jnp.maximum(temp, 1e-6)),
+        lambda: jnp.argmax(logits, axis=-1)).astype(jnp.int32)
+
+
 def find_period(pattern, max_head: int = 4):
     """Locate the largest scannable periodic run, allowing a few unrolled
     *head* layers before it (e.g. deepseek's dense-FFN first layer — without
@@ -491,3 +516,39 @@ class TransformerLM:
                              params["unembed"]["w"].astype(c.cdtype),
                              preferred_element_type=jnp.float32)
         return logits, caches
+
+    def decode_many(self, params, tok, caches, key, n: int,
+                    temperature: float = 0.0, top_k: int = 0,
+                    return_logits: bool = False):
+        """Fused multi-token decode: ``n`` decode steps inside ONE program.
+
+        ``jax.lax.scan`` over :meth:`decode_step` with sampling on-device
+        (``sample_logits``), so a jitted caller pays one dispatch per *chunk*
+        instead of several per token — the decode hot path of
+        DESIGN §6.  ``tok``: (B, 1) int32, the last emitted token; ``key``:
+        PRNG key (may be ``None`` for greedy decoding).  ``n`` / ``top_k`` /
+        ``return_logits`` are static; ``temperature`` may be traced (see
+        ``sample_logits``).
+
+        Returns ``(tokens (B, n) int32, caches)``; with
+        ``return_logits=True`` returns ``(tokens, logits (B, n, V), caches)``
+        (parity testing — the logits are the ones each token was sampled
+        from).
+        """
+        if key is None:
+            key = jax.random.PRNGKey(0)
+
+        def body(carry, _):
+            tok, caches, key = carry
+            logits, caches = self.decode_step(params, tok, caches)
+            key, sub = jax.random.split(key)
+            nxt = sample_logits(logits[:, -1], sub, temperature, top_k)
+            out = (nxt, logits[:, -1]) if return_logits else nxt
+            return (nxt[:, None], caches, key), out
+
+        (_, caches, _), ys = jax.lax.scan(body, (tok, caches, key), None,
+                                          length=n)
+        if return_logits:
+            toks, logits = ys
+            return toks.T, logits.transpose(1, 0, 2), caches
+        return ys.T, caches

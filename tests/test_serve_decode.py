@@ -1,0 +1,329 @@
+"""Fused decode path, MoSA streaming invariants, cache sharding specs,
+continuous batching, and DESIGN.md reference integrity (PR 2)."""
+
+import re
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoSAConfig, get_config
+from repro.core.kv_cache import DenseKVCache, MoSAKVCache, WindowKVCache
+from repro.core.mosa import MoSAAttention
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.nn.transformer import TransformerLM
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+# ------------------------------------------------------------ fused decode
+def _fused(model):
+    return jax.jit(model.decode_many,
+                   static_argnames=("n", "temperature", "top_k",
+                                    "return_logits"))
+
+
+def test_fused_decode_logits_match_full_forward():
+    """Prefill + N fused decode steps == one full forward (dense caches)."""
+    cfg = get_config("qwen2-1.5b", preset="smoke")
+    model = TransformerLM(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    B, P, G = 2, 10, 6
+    prompts = jax.random.randint(key, (B, P), 2, cfg.vocab)
+
+    caches = model.init_cache(B, P + G, jnp.float32)
+    lp, caches = model.prefill(params, prompts, caches)
+    tok0 = jnp.argmax(lp[:, -1], -1).astype(jnp.int32)[:, None]
+    toks, logits, _ = _fused(model)(params, tok0, caches, None, n=G,
+                                    return_logits=True)
+    assert toks.shape == (B, G) and logits.shape[:2] == (B, G)
+
+    # Teacher-force the full forward with the prompt + the tokens the fused
+    # decoder actually consumed; step j's logits live at position P-1+j+1.
+    full_in = jnp.concatenate([prompts, tok0, toks[:, :-1]], axis=1)
+    logits_full, _ = model(params, full_in)
+    for j in range(G):
+        np.testing.assert_allclose(
+            np.asarray(logits[:, j], np.float32),
+            np.asarray(logits_full[:, P + j], np.float32),
+            atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("arch,kw", [("qwen2-1.5b", {}),
+                                     ("mosa-paper", {"variant": "mosa"}),
+                                     ("jamba-v0.1-52b", {})])
+def test_fused_decode_matches_stepwise(arch, kw):
+    """The scan-fused chunk emits exactly the per-token loop's tokens."""
+    cfg = get_config(arch, preset="smoke", **kw)
+    model = TransformerLM(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    B, P, G = 2, 8, 5
+    prompts = jax.random.randint(key, (B, P), 2, cfg.vocab)
+
+    caches = model.init_cache(B, 32, jnp.float32)
+    lp, c0 = model.prefill(params, prompts, caches)
+    tok0 = jnp.argmax(lp[:, -1], -1).astype(jnp.int32)[:, None]
+
+    tok, cs, step = tok0, c0, []
+    for _ in range(G):
+        lg, cs = model.decode_step(params, tok, cs)
+        tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+        step.append(tok)
+    caches = model.init_cache(B, 32, jnp.float32)
+    _, c0 = model.prefill(params, prompts, caches)
+    fused, _ = _fused(model)(params, tok0, c0, None, n=G)
+    np.testing.assert_array_equal(np.asarray(jnp.concatenate(step, 1)),
+                                  np.asarray(fused))
+
+
+# --------------------------------------------------- MoSA streaming decode
+def _mosa_layer(k_fixed=0, sparsity=4):
+    cfg = MoSAConfig(n_mosa_heads=3, sparsity=sparsity, n_dense_heads=0,
+                     d_head=8, k_fixed=k_fixed)
+    return MoSAAttention(64, cfg), cfg
+
+
+def test_mosa_streaming_cache_invariants():
+    """kv_entries constant in T; idx entries valid, unique, sorted."""
+    layer, c = _mosa_layer(k_fixed=6)
+    key = jax.random.PRNGKey(0)
+    params = layer.init(key)
+    B, P, G = 2, 12, 10
+    x = jax.random.normal(key, (B, P + G, 64), jnp.float32)
+
+    cache = MoSAKVCache.create(B, c.n_mosa_heads, 6, c.d_head, jnp.float32)
+    entries0 = cache.kv_entries
+    _, cache = layer.prefill(params, x[:, :P], cache)
+    for t in range(P, P + G):
+        _, cache = layer.decode_step(params, x[:, t:t + 1], cache)
+        assert cache.kv_entries == entries0          # O(k), never grows
+        idx = np.asarray(cache.idx)
+        assert idx.shape == (B, c.n_mosa_heads, 6)
+        for b in range(B):
+            for h in range(c.n_mosa_heads):
+                row = idx[b, h]
+                valid = row[row >= 0]
+                assert (valid <= t).all()                    # positions seen
+                assert len(np.unique(valid)) == len(valid)   # no duplicates
+                assert (np.diff(valid) > 0).all()            # sorted ascending
+                # empty slots (-1) only after the valid prefix
+                assert (row[len(valid):] == -1).all()
+    assert int(cache.length[0]) == P + G
+
+
+def test_mosa_streaming_k_equals_T_matches_training():
+    """With k = T nothing is ever evicted: streaming decode reproduces the
+    training-style (non-autoregressive) selection exactly."""
+    T = 10
+    layer, c = _mosa_layer(k_fixed=T)
+    key = jax.random.PRNGKey(1)
+    params = layer.init(key)
+    B, P = 2, 4
+    x = jax.random.normal(key, (B, T, 64), jnp.float32)
+
+    y_train = layer(params, x)                       # (B, T, 64)
+    cache = MoSAKVCache.create(B, c.n_mosa_heads, T, c.d_head, jnp.float32)
+    _, cache = layer.prefill(params, x[:, :P], cache)
+    for t in range(P, T):
+        y_t, cache = layer.decode_step(params, x[:, t:t + 1], cache)
+        np.testing.assert_allclose(np.asarray(y_t[:, 0], np.float32),
+                                   np.asarray(y_train[:, t], np.float32),
+                                   atol=2e-4, rtol=2e-4)
+    # every position ended up cached, in order
+    np.testing.assert_array_equal(
+        np.asarray(cache.idx),
+        np.broadcast_to(np.arange(T), (B, c.n_mosa_heads, T)))
+
+
+def test_mosa_decode_per_row_positions():
+    """Rows at different sequence offsets decode with their own positions
+    (continuous batching): a row's result is independent of its batchmates."""
+    layer, c = _mosa_layer(k_fixed=5)
+    key = jax.random.PRNGKey(2)
+    params = layer.init(key)
+    x = jax.random.normal(key, (2, 9, 64), jnp.float32)
+
+    # batch of two rows prefilled at different lengths
+    ca = MoSAKVCache.create(1, c.n_mosa_heads, 5, c.d_head, jnp.float32)
+    cb = MoSAKVCache.create(1, c.n_mosa_heads, 5, c.d_head, jnp.float32)
+    _, ca = layer.prefill(params, x[:1, :8], ca)
+    _, cb = layer.prefill(params, x[1:, :3], cb)
+    joint = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), ca, cb)
+    y_joint, joint2 = layer.decode_step(params, x[:, 8:9], joint)
+    y_solo, ca2 = layer.decode_step(params, x[:1, 8:9], ca)
+    np.testing.assert_allclose(np.asarray(y_joint[:1], np.float32),
+                               np.asarray(y_solo, np.float32),
+                               atol=1e-5, rtol=1e-5)
+    assert int(joint2.length[0]) == 9 and int(joint2.length[1]) == 4
+
+
+def test_window_decode_parity_past_window():
+    """Prompt longer than the window: prefill's slot layout must match
+    append_one's ring arithmetic (slot = position % W) so decode evicts the
+    oldest token and matches the full windowed forward at every step."""
+    from repro.configs.base import AttentionConfig
+    from repro.core.attention import MultiHeadAttention
+    W = 4
+    acfg = AttentionConfig(kind="gqa", n_heads=2, n_kv_heads=2, d_head=8,
+                           window=W)
+    mha = MultiHeadAttention(32, acfg, impl="naive")
+    key = jax.random.PRNGKey(5)
+    params = mha.init(key)
+    B, P, T = 2, 6, 11
+    x = jax.random.normal(key, (B, T, 32), jnp.float32)
+    y_full = mha(params, x)
+
+    cache = WindowKVCache.create(B, W, 2, 8, jnp.float32)
+    y_pre, cache = mha.prefill(params, x[:, :P], cache)
+    np.testing.assert_allclose(np.asarray(y_pre), np.asarray(y_full[:, :P]),
+                               atol=1e-4, rtol=1e-4)
+    for t in range(P, T):
+        y_t, cache = mha.decode_step(params, x[:, t:t + 1], cache)
+        np.testing.assert_allclose(np.asarray(y_t[:, 0]),
+                                   np.asarray(y_full[:, t]),
+                                   atol=1e-4, rtol=1e-4, err_msg=f"step {t}")
+        pos = np.asarray(cache.positions)
+        for b in range(B):   # ring holds exactly the last W positions
+            assert sorted(pos[b]) == list(range(t - W + 1, t + 1)), (t, pos[b])
+
+
+def test_window_cache_per_row_slots():
+    """Ring-buffer slots are per-row (length % W row by row)."""
+    cache = WindowKVCache.create(2, 4, 1, 8, jnp.float32)
+    cache = cache._replace(length=jnp.asarray([5, 0], jnp.int32))
+    k = jnp.ones((2, 1, 8), jnp.float32)
+    cache = cache.append_one(k, k)
+    pos = np.asarray(cache.positions)
+    assert pos[0, 5 % 4] == 5 and pos[1, 0] == 0
+    np.testing.assert_array_equal(np.asarray(cache.length), [6, 1])
+
+
+# ------------------------------------------------------- cache sharding
+def test_mosa_cache_head_dim_shards_over_model():
+    """Acceptance: under the ``tp`` rule set the MoSA cache head dim maps to
+    the ``model`` mesh axis (head-parallel decode, DESIGN §6)."""
+    mesh = make_host_mesh(tp=1)
+    cache = jax.eval_shape(
+        lambda: MoSAKVCache.create(2, 4, 8, 16, jnp.float32))
+    spec = shd.cache_spec(cache, mesh, "tp")
+    assert spec.k[1] == "model" and spec.v[1] == "model"
+    assert spec.scores[1] == "model" and spec.idx[1] == "model"
+    # and through the full tree path, stacked caches shift by the layer axis
+    stacked = jax.eval_shape(lambda: jax.tree.map(
+        lambda t: jnp.zeros((3,) + t.shape, t.dtype), cache))
+    sh = shd.cache_shardings({"scan": {"pos0": stacked}}, mesh, "tp")
+    assert sh["scan"]["pos0"].k.spec[2] == "model"
+
+
+def test_dense_cache_spec_seq_vs_heads():
+    mesh = make_host_mesh(tp=1)
+    cache = jax.eval_shape(
+        lambda: DenseKVCache.create(2, 32, 4, 16, jnp.float32))
+    spec = shd.cache_spec(cache, mesh, "tp")
+    assert len(spec.k) >= 3 and spec.k[2] == "model"   # kv_heads -> model
+    seq = shd.cache_spec(cache, mesh, "tp", seq_sharded=True)
+    assert seq.k[1] == "model"                         # seq wins...
+    assert len(seq.k) < 3 or seq.k[2] is None          # ...heads replicate
+
+
+def test_cache_shardings_cover_every_arch():
+    mesh = make_host_mesh(tp=1)
+    for arch in ("gemma3-4b", "deepseek-v2-lite-16b", "jamba-v0.1-52b",
+                 "xlstm-125m"):
+        cfg = get_config(arch, preset="smoke")
+        model = TransformerLM(cfg)
+        shapes = jax.eval_shape(lambda: model.init_cache(2, 32, jnp.float32))
+        sh = shd.cache_shardings(shapes, mesh, "tp")
+        assert jax.tree.structure(shapes) == jax.tree.structure(
+            jax.tree.map(lambda x: 0, sh)), arch
+
+
+# --------------------------------------------------- continuous batching
+def test_request_pool_honors_eos_and_max_steps():
+    from repro.launch.serve import RequestPool, Server
+    cfg = get_config("qwen2-1.5b", preset="smoke")
+    server = Server(cfg, batch=2, max_len=32)
+    key = jax.random.PRNGKey(3)
+    prompts = [jax.random.randint(jax.random.fold_in(key, i), (6,), 2,
+                                  cfg.vocab) for i in range(3)]
+
+    # discover a token greedy decode emits, then use it as EOS
+    probe = RequestPool(server)
+    for pr in prompts:
+        probe.submit(pr, max_new=8)
+    ref = probe.run()
+    assert all(len(v) == 8 for v in ref.values())      # eos<0: no early stop
+    eos = int(ref[0][2])
+
+    pool = RequestPool(server, eos=eos)
+    for pr in prompts:
+        pool.submit(pr, max_new=8)
+    out = pool.run()
+    assert set(out) == {0, 1, 2}
+    assert len(out[0]) <= 8 and int(out[0][-1]) == eos
+    for rid, toks in out.items():                       # eos at most once, last
+        t = np.asarray(toks)
+        assert (t[:-1] != eos).all()
+
+    # max_steps caps total decode work but still returns partial results
+    pool2 = RequestPool(server, chunk=2)
+    for pr in prompts[:2]:
+        pool2.submit(pr, max_new=12)
+    partial = pool2.run(max_steps=3)
+    assert all(1 <= len(v) <= 4 for v in partial.values())
+
+
+def test_request_pool_mixed_lengths_refill():
+    """More requests than slots, different prompt lengths: everything is
+    served to its own max_new."""
+    from repro.launch.serve import RequestPool, Server
+    cfg = get_config("mosa-paper", preset="smoke", variant="mosa")
+    server = Server(cfg, batch=2, max_len=64)
+    pool = RequestPool(server, chunk=4)
+    key = jax.random.PRNGKey(4)
+    want = {}
+    for i in range(4):
+        n = 3 + i
+        rid = pool.submit(jax.random.randint(jax.random.fold_in(key, i),
+                                             (5 + 2 * i,), 2, cfg.vocab),
+                          max_new=n)
+        want[rid] = n
+    out = pool.run()
+    assert {k: len(v) for k, v in out.items()} == want
+
+
+# ------------------------------------------------------------ docs
+def test_design_references_resolve():
+    """Every ``DESIGN §N`` / ``DESIGN.md §N`` citation in src/ names a real
+    section of DESIGN.md."""
+    design = (REPO / "DESIGN.md").read_text()
+    sections = set(re.findall(r"^#+\s*§([\w-]+)", design, re.M))
+    assert sections, "DESIGN.md has no §-numbered sections"
+    refs = []
+    for py in (REPO / "src").rglob("*.py"):
+        for m in re.finditer(r"DESIGN(?:\.md)?\s*§([\w-]+)", py.read_text()):
+            refs.append((py.name, m.group(1)))
+    assert refs, "no DESIGN references found in src/ (regex broken?)"
+    missing = [(f, s) for f, s in refs if s not in sections]
+    assert not missing, f"unresolved DESIGN references: {missing}"
+
+
+def test_bench_serve_artifact_tracks_acceptance():
+    """BENCH_serve.json exists and records the PR's acceptance numbers."""
+    import json
+    path = REPO / "BENCH_serve.json"
+    assert path.exists(), "run `make bench-smoke`"
+    res = json.loads(path.read_text())
+    assert res["config"]["max_len"] >= 256
+    v = res["variants"]
+    assert v["mosa"]["cache_bytes"] < v["dense"]["cache_bytes"]
+    # The PR-2 artifact records 2.9-4.3x; the regression gate is looser
+    # because the exact ratio is hardware-dependent (dispatch overhead vs
+    # the shrunken model's compute varies across CI machines).
+    for r in v.values():
+        assert r["fused_speedup"] >= 1.5, r
