@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test collect lint smoke bench-smoke ci
+.PHONY: test collect lint smoke test-paged bench-smoke bench-check ci
 
 # Tier-1 command from ROADMAP.md
 test:
@@ -25,12 +25,26 @@ smoke:
 	$(PY) -m pytest -q tests/test_sharding_rules.py tests/test_substrates.py \
 	    tests/test_dist_unit.py tests/test_mosa_core.py
 
+# Paged-KV parity suite (PR 3): allocator invariants, paged==contiguous
+# decode, prefix cache, preemption.  Pinned to CPU — with libtpu in the
+# image an unset JAX_PLATFORMS probes for absent TPUs and hangs.
+test-paged:
+	JAX_PLATFORMS=cpu $(PY) -m pytest -q tests/test_paged_kv.py \
+	    tests/test_paged_serving.py
+
 # Decode-path perf trajectory: refreshes the TRACKED BENCH_serve.json
-# (fused vs per-token decode tok/s + MoSA vs dense KV bytes; CPU, tiny scale).
+# (fused vs per-token decode tok/s, MoSA vs dense KV bytes, and the paged
+# family: paged vs contiguous tok/s + capacity at fixed budget; CPU, tiny
+# scale).  Each refresh appends a trajectory entry.
 bench-smoke:
 	$(PY) -m benchmarks.serve_bench --out BENCH_serve.json
 
+# Fails if the newest trajectory entry regresses fused decode throughput
+# by >10% against the previous entry.
+bench-check:
+	$(PY) -m benchmarks.serve_bench --check --out BENCH_serve.json
+
 # bench-smoke runs BEFORE test: the suite validates the regenerated
 # BENCH_serve.json, so the artifact this ci run leaves behind is the one
-# that passed.
-ci: lint collect bench-smoke test
+# that passed; bench-check then gates the refreshed trajectory.
+ci: lint collect test-paged bench-smoke bench-check test

@@ -8,7 +8,18 @@ Measures, for dense vs MoSA variants of the paper's model at smoke scale:
     the contrast measures dispatch overhead — jax async dispatch means
     neither path syncs the host per token) — DESIGN §6;
   * KV-cache footprint in bytes at the same ``max_len`` — the paper's
-    serving payoff (MoSA heads hold k entries each, independent of context).
+    serving payoff (MoSA heads hold k entries each, independent of context);
+  * the PAGED family (DESIGN §7): fused decode tok/s on block-paged caches
+    vs the contiguous slabs, and — the paged payoff — max concurrent
+    requests at a FIXED cache-memory budget.  Capacity is computed from the
+    measured byte layout of both cache families (the contiguous path
+    reserves a worst-case ``max_len`` slab per slot; the paged path pays
+    ``ceil(tokens / block) * block`` plus the bounded per-row state), with
+    the request profile = this benchmark's own prompt+gen length.
+
+``BENCH_serve.json`` carries a ``trajectory`` list (one summary entry per
+refresh); ``--check`` compares the two most recent entries and exits
+nonzero on a >10% fused-throughput regression (``make bench-check``).
 
 Two deliberate choices at smoke scale:
 
@@ -44,6 +55,9 @@ from repro.configs.base import get_config
 from repro.core.kv_cache import cache_nbytes
 from repro.dist import hints
 from repro.launch.serve import Server
+from repro.nn.transformer import TransformerLM
+from repro.serve.paged_kv import (PagedConfig, PagedDenseKVCache,
+                                  PagedWindowKVCache)
 
 # Paper Table 2 (tiny): ppl-matched hybrid — 4 dense + 17 MoSA heads, rho=32.
 TABLE2_RECIPE = {"sparsity": 32, "n_mosa_heads": 17}
@@ -120,6 +134,98 @@ def bench_variant(variant: str, batch: int, prompt_len: int, gen: int,
     return out
 
 
+def _cache_layout(cfg, max_len: int, block_size: int) -> dict:
+    """Measured byte layout of both cache families for ONE model config:
+    per-slot contiguous bytes, per-row paged overhead (tables, MoSA rows),
+    and per-block pool bytes (dense and window groups, stacked layers
+    weighted by their unit count)."""
+    model = TransformerLM(cfg)
+    paged = PagedConfig(block_size=block_size)
+
+    def nbytes(batch, pg=None):
+        shapes = jax.eval_shape(
+            lambda: model.init_cache(batch, max_len, jnp.bfloat16, paged=pg))
+        return cache_nbytes(shapes)
+
+    contig_row = nbytes(1)
+    dense_block = window_block = 0
+    wb = 0
+    shapes = jax.eval_shape(
+        lambda: model.init_cache(1, max_len, jnp.bfloat16, paged=paged))
+
+    def walk(path, leaf):
+        nonlocal dense_block, window_block, wb
+        if isinstance(leaf, (PagedDenseKVCache, PagedWindowKVCache)):
+            n_axis = 0 if leaf.k.ndim == 4 else 1     # stacked pools
+            per_block = 2 * (cache_nbytes(leaf.k) // leaf.k.shape[n_axis])
+            if isinstance(leaf, PagedDenseKVCache):
+                dense_block += per_block
+            else:
+                window_block += per_block
+                wb = leaf.block_table.shape[-1]
+        return leaf
+
+    jax.tree_util.tree_map_with_path(
+        walk, shapes,
+        is_leaf=lambda x: isinstance(x, (PagedDenseKVCache,
+                                         PagedWindowKVCache)))
+    pool_row = nbytes(1, paged)
+    # per-row paged overhead = everything that is not pool: tables, MoSA
+    # caches, window positions (pools here are the 1-row worst case).
+    nb = -(-max_len // block_size)
+    row_overhead = pool_row - nb * dense_block - wb * window_block
+    return {"contig_row": contig_row, "dense_block": dense_block,
+            "window_block": window_block, "wb": wb,
+            "row_overhead": max(row_overhead, 0), "nb": nb}
+
+
+def capacity_at_budget(cfg, max_len: int, req_tokens: int,
+                       block_size: int = 16, budget_slots: int = 8) -> dict:
+    """Max concurrent requests under a FIXED cache-memory budget (the bytes
+    ``budget_slots`` contiguous slots would reserve): the contiguous path
+    admits one request per worst-case slab; the paged path admits while
+    blocks for the request's ACTUAL tokens fit (DESIGN §7)."""
+    lay = _cache_layout(cfg, max_len, block_size)
+    budget = budget_slots * lay["contig_row"]
+    req_blocks = -(-req_tokens // block_size)
+    per_req = (lay["row_overhead"] + req_blocks * lay["dense_block"] +
+               lay["wb"] * lay["window_block"])
+    paged_max = int(budget // per_req)
+    return {"budget_bytes": int(budget), "req_tokens": req_tokens,
+            "block_size": block_size,
+            "contiguous_max_concurrent": budget_slots,
+            "paged_max_concurrent": paged_max,
+            "paged_bytes_per_request": int(per_req),
+            "capacity_ratio": round(paged_max / budget_slots, 2)}
+
+
+def bench_paged(batch: int, prompt_len: int, gen: int, max_len: int,
+                iters: int, d_model: int) -> dict:
+    """Paged-vs-contiguous family on the Table-2 MoSA recipe: fused decode
+    tok/s (same model, same sampler — the contrast isolates the paged
+    append/gather path), worst-case KV bytes, capacity at fixed budget."""
+    kw = dict(TABLE2_RECIPE)
+    cfg = _shrink(get_config("mosa-paper", preset="smoke", variant="mosa",
+                             **kw), d_model)
+    contig = Server(cfg, batch=batch, max_len=max_len)
+    paged = Server(cfg, batch=batch, max_len=max_len, params=contig.params,
+                   paged=PagedConfig(block_size=16))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len),
+                                 2, cfg.vocab)
+    fused_paged = time_decode(paged, prompts, gen, fused=True, iters=iters)
+    fused_contig = time_decode(contig, prompts, gen, fused=True, iters=iters)
+    out = {
+        "fused_tok_s": round(fused_paged, 2),
+        "fused_tok_s_contiguous": round(fused_contig, 2),
+        "paged_over_contiguous": round(fused_paged / fused_contig, 3),
+        "cache_bytes": cache_nbytes(paged.new_cache()),
+        "cache_bytes_contiguous": cache_nbytes(contig.new_cache()),
+        "capacity": capacity_at_budget(cfg, max_len,
+                                       req_tokens=prompt_len + gen),
+    }
+    return out
+
+
 def run_bench(batch: int = 2, prompt_len: int = 16, gen: int = 64,
               max_len: int = 256, iters: int = 3,
               variants=("dense", "mosa"), d_model: int = 128) -> dict:
@@ -139,7 +245,60 @@ def run_bench(batch: int = 2, prompt_len: int = 16, gen: int = 64,
         d, m = res["variants"]["dense"], res["variants"]["mosa"]
         res["kv_bytes_mosa_over_dense"] = round(
             m["cache_bytes"] / d["cache_bytes"], 4)
+    res["paged"] = bench_paged(batch, prompt_len, gen, max_len, iters,
+                               d_model)
     return res
+
+
+def _append_trajectory(res: dict, prev: dict) -> None:
+    """Grow the tracked perf trajectory: one summary entry per refresh.
+    A pre-trajectory artifact (PR 2) seeds entry 0 from its recorded
+    numbers so the very first paged refresh already has a baseline."""
+    traj = list(prev.get("trajectory", []))
+    if not traj and prev.get("variants"):
+        traj.append({"entry": 0,
+                     "fused_tok_s": {v: r.get("fused_tok_s")
+                                     for v, r in prev["variants"].items()}})
+    entry = {"entry": len(traj),
+             "fused_tok_s": {v: r["fused_tok_s"]
+                             for v, r in res["variants"].items()}}
+    if "paged" in res:
+        entry["paged_fused_tok_s"] = res["paged"]["fused_tok_s"]
+        entry["capacity_ratio"] = \
+            res["paged"]["capacity"]["capacity_ratio"]
+    traj.append(entry)
+    res["trajectory"] = traj[-12:]
+
+
+def check_regression(path: str, tol: float = 0.10) -> int:
+    """``make bench-check``: fail (nonzero) when the newest trajectory
+    entry regresses fused decode throughput by more than ``tol`` against
+    the previous entry, for any variant present in both."""
+    import os
+    if not os.path.exists(path):
+        print(f"bench-check: {path} missing — run `make bench-smoke`")
+        return 1
+    res = json.loads(open(path).read())
+    traj = res.get("trajectory", [])
+    if len(traj) < 2:
+        print("bench-check: <2 trajectory entries, nothing to compare")
+        return 0
+    prev, cur = traj[-2], traj[-1]
+    failures = []
+    pairs = dict(prev.get("fused_tok_s") or {})
+    if prev.get("paged_fused_tok_s"):
+        pairs["paged"] = prev["paged_fused_tok_s"]
+    for v, old in pairs.items():
+        new = (cur.get("paged_fused_tok_s") if v == "paged"
+               else (cur.get("fused_tok_s") or {}).get(v))
+        if old and new and new < (1.0 - tol) * old:
+            failures.append(f"{v}: {old} -> {new} tok/s")
+    for line in failures:
+        print("bench-check REGRESSION", line)
+    if not failures:
+        print(f"bench-check OK ({prev.get('fused_tok_s')} -> "
+              f"{cur.get('fused_tok_s')}, tol {tol:.0%})")
+    return 1 if failures else 0
 
 
 def main(argv=None):
@@ -153,10 +312,22 @@ def main(argv=None):
                    help="shrink the smoke model to this width "
                         "(0 = keep the full smoke config)")
     p.add_argument("--out", default="BENCH_serve.json")
+    p.add_argument("--check", action="store_true",
+                   help="compare the two newest trajectory entries and "
+                        "fail on a >10%% fused-throughput regression")
     args = p.parse_args(argv)
 
+    if args.check:
+        raise SystemExit(check_regression(args.out))
+
+    try:
+        with open(args.out) as f:
+            prev = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        prev = {}
     res = run_bench(args.batch, args.prompt_len, args.gen, args.max_len,
                     args.iters, d_model=args.d_model)
+    _append_trajectory(res, prev)
     print("name,us_per_call,derived")
     for v, r in res["variants"].items():
         print(f"decode/{v},0.0,fused={r['fused_tok_s']}tok/s;"
@@ -166,6 +337,15 @@ def main(argv=None):
     if "kv_bytes_mosa_over_dense" in res:
         print(f"decode/kv_ratio,0.0,"
               f"mosa_over_dense={res['kv_bytes_mosa_over_dense']}")
+    pg = res["paged"]
+    print(f"decode/paged,0.0,fused={pg['fused_tok_s']}tok/s;"
+          f"vs_contig={pg['paged_over_contiguous']}x")
+    cap = pg["capacity"]
+    print(f"decode/paged_capacity,0.0,"
+          f"concurrent={cap['paged_max_concurrent']}"
+          f"vs{cap['contiguous_max_concurrent']};"
+          f"ratio={cap['capacity_ratio']}x@"
+          f"{cap['budget_bytes']}B")
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -26,6 +26,8 @@ from repro.dist import hints
 from repro.core.kv_cache import DenseKVCache, MLAKVCache, WindowKVCache
 from repro.nn.layers import _trunc_normal
 from repro.nn.module import logical
+from repro.serve.paged_attention import paged_attention_decode
+from repro.serve.paged_kv import PagedDenseKVCache, PagedWindowKVCache
 
 NEG_INF = -1e30
 
@@ -244,9 +246,23 @@ class MultiHeadAttention:
                        preferred_element_type=jnp.float32).astype(cd)
 
     # ---- serving ----
-    def prefill(self, params, x, cache, positions=None):
+    def prefill(self, params, x, cache, positions=None, valid=None):
+        """``valid``: optional (B, T) bool — False marks right-pad tokens
+        (the bucketed-prefill mask, DESIGN §7).  Causality already keeps
+        right-pads out of every real token's attention; ``valid`` only
+        drives how many tokens advance the cache ``length`` (pads are then
+        progressively overwritten by decode, exactly like the contiguous
+        cache's unwritten tail).  When ``cache.length > 0`` (paged caches
+        restored from the prefix cache) the prompt suffix attends the
+        cached past through ``gather`` — continued prefill."""
+        if isinstance(cache, PagedWindowKVCache):
+            return self._prefill_window_paged(params, x, cache, positions,
+                                              valid)
+        if isinstance(cache, PagedDenseKVCache):
+            return self._prefill_dense_paged(params, x, cache, positions,
+                                             valid)
         if isinstance(cache, WindowKVCache):
-            return self._prefill_window(params, x, cache, positions)
+            return self._prefill_window(params, x, cache, positions, valid)
         c = self.cfg
         B, T, _ = x.shape
         if positions is None:
@@ -254,7 +270,9 @@ class MultiHeadAttention:
         q, k, v = self._qkv(params, x)
         q = self._rope(q, positions)
         k = self._rope(k, positions)
-        cache = cache.append(k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+        nv = None if valid is None else valid.sum(-1).astype(jnp.int32)
+        cache = cache.append(k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                             n_valid=nv)
         base_pos = positions if positions.ndim == 2 else positions[0]
         out = chunked_attention(q, k, v, base_pos, base_pos,
                                 self._scale, window=c.window, chunk=self.chunk)
@@ -265,13 +283,87 @@ class MultiHeadAttention:
                     preferred_element_type=jnp.float32).astype(cd)
         return y, cache
 
-    def _prefill_window(self, params, x, cache: "WindowKVCache", positions=None):
-        """Window prefill: run the full forward, keep the last W tokens' KV.
+    def _prefill_dense_paged(self, params, x, cache: "PagedDenseKVCache",
+                             positions=None, valid=None):
+        """Paged dense prefill, past-aware: new K/V scatter into the row's
+        pool blocks, then attention runs over the row's WHOLE gathered range
+        (cached prefix + in-flight suffix) with a validity mask — one code
+        path for fresh prefill (length == 0) and prefix-cache continuation
+        (length == shared-prefix length)."""
+        c = self.cfg
+        B, T, _ = x.shape
+        if positions is None:
+            positions = cache.length[:, None] + \
+                jnp.arange(T, dtype=jnp.int32)[None]
+        q, k, v = self._qkv(params, x)
+        q = self._rope(q, positions)
+        k = self._rope(k, positions)
+        nv = None if valid is None else valid.sum(-1).astype(jnp.int32)
+        cache = cache.append(k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                             n_valid=nv)
+        kk, vv = cache.gather()                        # (B, S, Hkv, d)
+        S = kk.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        k_valid = k_pos < cache.length[:, None]
+        base_pos = positions if positions.ndim == 2 else positions[0]
+        out = chunked_attention(q, kk.transpose(0, 2, 1, 3),
+                                vv.transpose(0, 2, 1, 3), base_pos, k_pos,
+                                self._scale, window=c.window, k_valid=k_valid,
+                                chunk=self.chunk)
+        out = out.transpose(0, 2, 1, 3).reshape(B, T, -1)
+        cd = self.compute_dtype
+        y = jnp.dot(out.astype(cd), params["wo"].astype(cd),
+                    preferred_element_type=jnp.float32).astype(cd)
+        return y, cache
+
+    def _prefill_window_paged(self, params, x, cache: "PagedWindowKVCache",
+                              positions=None, valid=None):
+        """Paged window prefill, past-aware: the pre-append ring (gathered
+        once) supplies the past keys — it holds the last W past tokens,
+        which covers every key a suffix query's window can reach (W is
+        min(cfg.window, max_len), so either the window bound or the whole
+        past fits)."""
+        c = self.cfg
+        B, T, _ = x.shape
+        if positions is None:
+            positions = cache.length[:, None] + \
+                jnp.arange(T, dtype=jnp.int32)[None]
+        base_pos = positions if positions.ndim == 2 else positions[0]
+        pk, pv = cache.gather()                        # past ring, pre-append
+        ppos = cache.positions                         # (B, W)
+        q, k, v = self._qkv(params, x)
+        q = self._rope(q, positions)
+        k = self._rope(k, positions)
+        nv = None if valid is None else valid.sum(-1).astype(jnp.int32)
+        cache = cache.append(k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                             n_valid=nv)
+        k_all = jnp.concatenate([pk.transpose(0, 2, 1, 3), k], axis=2)
+        v_all = jnp.concatenate([pv.transpose(0, 2, 1, 3), v], axis=2)
+        kpos_all = jnp.concatenate(
+            [ppos, jnp.broadcast_to(base_pos, (B, T))], axis=1)
+        new_valid = (jnp.ones((B, T), bool) if valid is None
+                     else jnp.broadcast_to(valid, (B, T)))
+        k_valid = jnp.concatenate([ppos >= 0, new_valid], axis=1)
+        out = chunked_attention(q, k_all, v_all, base_pos, kpos_all,
+                                self._scale, window=c.window, k_valid=k_valid,
+                                chunk=self.chunk)
+        out = out.transpose(0, 2, 1, 3).reshape(B, T, -1)
+        cd = self.compute_dtype
+        y = jnp.dot(out.astype(cd), params["wo"].astype(cd),
+                    preferred_element_type=jnp.float32).astype(cd)
+        return y, cache
+
+    def _prefill_window(self, params, x, cache: "WindowKVCache",
+                        positions=None, valid=None):
+        """Window prefill: run the full forward, keep the last W VALID
+        tokens' KV.
 
         Kept tokens land at slot ``position % W`` — the SAME ring arithmetic
         ``WindowKVCache.append_one`` uses (slot ``length % W``) — so the
         first decode step after a prompt longer than the window overwrites
-        the oldest kept token, not an arbitrary one.
+        the oldest kept token, not an arbitrary one.  With a ``valid`` mask
+        (right-padded bucket prefill) the pads are dropped rather than
+        cached, and ``length`` advances by the real token count only.
         """
         c = self.cfg
         B, T, _ = x.shape
@@ -282,35 +374,30 @@ class MultiHeadAttention:
         k = self._rope(k, pos).transpose(0, 2, 1, 3)          # (B,T,Hkv,d)
         v = v.transpose(0, 2, 1, 3)
         W = cache.k.shape[1]
-        take = min(W, T)
-        sl = slice(T - take, T)
+        nv = (jnp.full((B,), T, jnp.int32) if valid is None
+              else valid.sum(-1).astype(jnp.int32))
         base_pos = pos if pos.ndim == 2 else pos[0]
-        kept_pos = jnp.broadcast_to(base_pos[:, sl], (B, take)).astype(jnp.int32)
-        slots = kept_pos % W                                  # (B, take)
+        base_pos = jnp.broadcast_to(base_pos, (B, T)).astype(jnp.int32)
+        t = jnp.arange(T, dtype=jnp.int32)[None, :]
+        keep = (t < nv[:, None]) & (t >= nv[:, None] - W)
+        slots = jnp.where(keep, base_pos % W, W)              # W -> dropped
+        rows = jnp.arange(B)[:, None]
+        kw = jnp.zeros_like(cache.k).at[rows, slots].set(
+            k.astype(cache.k.dtype), mode="drop")
+        vw = jnp.zeros_like(cache.v).at[rows, slots].set(
+            v.astype(cache.v.dtype), mode="drop")
+        posw = jnp.full_like(cache.positions, -1).at[rows, slots].set(
+            base_pos, mode="drop")
+        return y, WindowKVCache(kw, vw, posw, cache.length + nv)
 
-        def put(dst, slot, val):
-            return dst.at[slot].set(val)
-
-        kw = jax.vmap(put)(jnp.zeros_like(cache.k), slots,
-                           k[:, sl].astype(cache.k.dtype))
-        vw = jax.vmap(put)(jnp.zeros_like(cache.v), slots,
-                           v[:, sl].astype(cache.v.dtype))
-        posw = jax.vmap(put)(jnp.full_like(cache.positions, -1), slots,
-                             kept_pos)
-        return y, WindowKVCache(kw, vw, posw, cache.length + T)
-
-    def _decode_window(self, params, x, cache: "WindowKVCache", positions=None):
+    def _window_attend(self, params, q, kk, vv, kpos, pos):
+        """Shared ring-decode attention: q (B,H,1,d); kk/vv (B,W,Hkv,d) in
+        the RING layout (contiguous cache arrays or a paged ``gather()`` —
+        bit-identical inputs give bit-identical outputs); kpos (B, W)."""
         c = self.cfg
-        B = x.shape[0]
-        pos = cache.length[:, None] if positions is None else positions
-        q, k, v = self._qkv(params, x)                        # (B,H,1,d)
-        q = self._rope(q, pos)
-        k = self._rope(k, pos)
-        cache = cache.append_one(k[:, :, 0], v[:, :, 0])
-        kk = cache.k.transpose(0, 2, 1, 3).astype(q.dtype)    # (B,Hkv,W,d)
-        vv = cache.v.transpose(0, 2, 1, 3).astype(q.dtype)
-        kpos = cache.positions                                # (B, W)
-        W = kk.shape[2]
+        B = q.shape[0]
+        kk = kk.transpose(0, 2, 1, 3).astype(q.dtype)         # (B,Hkv,W,d)
+        vv = vv.transpose(0, 2, 1, 3).astype(q.dtype)
         Hkv, R = c.n_kv_heads, c.n_heads // c.n_kv_heads
         qg = q.reshape(B, Hkv, R, 1, c.d_head).astype(jnp.float32)
         s = jnp.einsum("bgrqd,bgkd->bgrqk", qg,
@@ -323,12 +410,58 @@ class MultiHeadAttention:
         out = out.reshape(B, c.n_heads, 1, c.d_head)
         out = out.transpose(0, 2, 1, 3).reshape(B, 1, c.n_heads * c.d_head)
         cd = self.compute_dtype
+        return jnp.dot(out.astype(cd), params["wo"].astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd)
+
+    def _decode_window(self, params, x, cache: "WindowKVCache", positions=None):
+        B = x.shape[0]
+        pos = cache.length[:, None] if positions is None else positions
+        q, k, v = self._qkv(params, x)                        # (B,H,1,d)
+        q = self._rope(q, pos)
+        k = self._rope(k, pos)
+        cache = cache.append_one(k[:, :, 0], v[:, :, 0])
+        y = self._window_attend(params, q, cache.k, cache.v, cache.positions,
+                                pos)
+        return y, cache
+
+    def _decode_window_paged(self, params, x, cache: "PagedWindowKVCache",
+                             positions=None):
+        B = x.shape[0]
+        pos = cache.length[:, None] if positions is None else positions
+        q, k, v = self._qkv(params, x)
+        q = self._rope(q, pos)
+        k = self._rope(k, pos)
+        cache = cache.append_one(k[:, :, 0], v[:, :, 0])
+        kk, vv = cache.gather()        # ring layout == WindowKVCache.k
+        y = self._window_attend(params, q, kk, vv, cache.positions, pos)
+        return y, cache
+
+    def _decode_dense_paged(self, params, x, cache: "PagedDenseKVCache",
+                            positions=None):
+        """Paged dense decode: append into the row's pool blocks, then the
+        paged-attention kernel (block-table indirect loads on TPU; the
+        gather reference — the contiguous decode einsum bit-for-bit —
+        elsewhere).  See ``repro.serve.paged_attention``."""
+        c = self.cfg
+        B = x.shape[0]
+        pos = cache.length[:, None] if positions is None else positions
+        q, k, v = self._qkv(params, x)                     # (B, H, 1, d)
+        q = self._rope(q, pos)
+        k = self._rope(k, pos)
+        cache = cache.append(k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+        out = paged_attention_decode(q[:, :, 0], cache, scale=self._scale)
+        out = out.reshape(B, 1, c.n_heads * c.d_head)
+        cd = self.compute_dtype
         y = jnp.dot(out.astype(cd), params["wo"].astype(cd),
                     preferred_element_type=jnp.float32).astype(cd)
         return y, cache
 
     def decode_step(self, params, x, cache, positions=None):
         """x: (B, 1, h); attends over the cache + itself."""
+        if isinstance(cache, PagedWindowKVCache):
+            return self._decode_window_paged(params, x, cache, positions)
+        if isinstance(cache, PagedDenseKVCache):
+            return self._decode_dense_paged(params, x, cache, positions)
         if isinstance(cache, WindowKVCache):
             return self._decode_window(params, x, cache, positions)
         c = self.cfg
@@ -459,11 +592,13 @@ class MLAAttention:
         return jnp.dot(out.astype(cd), params["wo"].astype(cd),
                        preferred_element_type=jnp.float32).astype(cd)
 
-    def prefill(self, params, x, cache: MLAKVCache, positions=None):
+    def prefill(self, params, x, cache: MLAKVCache, positions=None,
+                valid=None):
         m = self.cfg.mla
         B, T, _ = x.shape
         lat, k_rope_raw = self._latent(params, x)
-        cache = cache.append(lat, k_rope_raw)   # store *unrotated* k_rope
+        nv = None if valid is None else valid.sum(-1).astype(jnp.int32)
+        cache = cache.append(lat, k_rope_raw, n_valid=nv)  # unrotated k_rope
         y = self(params, x, positions)
         return y, cache
 

@@ -86,28 +86,57 @@ class HybridAttention:
         return y
 
     # ---------------------------------------------------------------- serving
-    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   paged=None):
+        """``paged``: optional ``repro.serve.paged_kv.PagedConfig`` — the
+        dense/window side then uses block-paged pools (DESIGN §7).  The MoSA
+        cache stays unpaged either way: it is already O(k) per head."""
         c = self.cfg
         k = self._sparse_k(max_len)
         caches = {"sparse": MoSAKVCache.create(batch, c.n_mosa_heads,
                                                min(k, max_len), c.d_head, dtype)}
         if c.n_dense_heads > 0:
             if c.local_window > 0:
-                caches["dense"] = WindowKVCache.create(
-                    batch, c.local_window, c.n_dense_heads, c.d_head, dtype)
+                if paged is not None:
+                    from repro.serve.paged_kv import PagedWindowKVCache
+                    caches["dense"] = PagedWindowKVCache.create(
+                        batch, min(c.local_window, max_len), c.n_dense_heads,
+                        c.d_head, dtype, block_size=paged.block_size,
+                        num_blocks=paged.num_window_blocks,
+                        identity_tables=paged.num_window_blocks == 0)
+                else:
+                    caches["dense"] = WindowKVCache.create(
+                        batch, c.local_window, c.n_dense_heads, c.d_head,
+                        dtype)
+            elif paged is not None:
+                from repro.serve.paged_kv import PagedDenseKVCache
+                caches["dense"] = PagedDenseKVCache.create(
+                    batch, max_len, c.n_dense_heads, c.d_head, dtype,
+                    block_size=paged.block_size, num_blocks=paged.num_blocks,
+                    identity_tables=paged.num_blocks == 0)
             else:
                 caches["dense"] = DenseKVCache.create(
                     batch, max_len, c.n_dense_heads, c.d_head, dtype)
         return caches
 
-    def prefill(self, params, x, caches, positions=None):
+    def prefill(self, params, x, caches, positions=None, valid=None,
+                continued=False):
+        """``continued`` (static): the caches hold a restored prompt prefix
+        (prefix-cache hit) — the sparse side extends it through the exact
+        union selection of ``MoSAAttention.prefill_past``; the dense side's
+        paged prefill is past-aware through its cache ``length`` alone."""
         assert self.variant == "mosa", "serving path implemented for MoSA"
-        y, sc = self._sparse().prefill(params["sparse"], x, caches["sparse"],
-                                       positions)
+        sparse = self._sparse()
+        if continued:
+            y, sc = sparse.prefill_past(params["sparse"], x, caches["sparse"],
+                                        positions, valid)
+        else:
+            y, sc = sparse.prefill(params["sparse"], x, caches["sparse"],
+                                   positions, valid)
         out = dict(caches, sparse=sc)
         if self.cfg.n_dense_heads > 0:
             yd, dc = self._dense().prefill(params["dense"], x, caches["dense"],
-                                           positions)
+                                           positions, valid)
             y = y + yd
             out["dense"] = dc
         return y, out

@@ -26,6 +26,15 @@ Every cache keeps a per-row ``length`` so a continuous-batching server can
 hold rows at different sequence positions in one batched cache.  Sharding:
 ``repro.dist.sharding.CACHE_AXES`` declares the logical axes of every cache
 type (head-sharded MoSA decode, DESIGN §6).
+
+These are the CONTIGUOUS layouts: one ``(B, max_len, ...)`` slab per slot.
+The serving path can swap the dense and window families for the block-paged
+equivalents in ``repro.serve.paged_kv`` (``PagedDenseKVCache`` /
+``PagedWindowKVCache``): same append/gather semantics, but KV lives in
+fixed-size pool blocks addressed through per-row block tables, so memory
+scales with tokens actually held and shared prompt prefixes can share
+physical blocks (DESIGN §7).  ``MoSAKVCache`` intentionally has no paged
+counterpart — it is already O(k) per head, independent of context length.
 """
 
 from __future__ import annotations
@@ -46,7 +55,7 @@ class DenseKVCache(NamedTuple):
         z = jnp.zeros((batch, max_len, n_kv_heads, d_head), dtype)
         return cls(z, z, jnp.zeros((batch,), jnp.int32))
 
-    def append(self, k_new, v_new):
+    def append(self, k_new, v_new, n_valid=None):
         """k_new/v_new: (B, Tnew, Hkv, d).  Returns updated cache.
 
         Tnew == 1 (decode) uses a masked elementwise update — a
@@ -54,6 +63,14 @@ class DenseKVCache(NamedTuple):
         cache dim would force GSPMD to all-gather the cache (measured
         ~17 GB/dev on musicgen decode_32k; §Perf it.3).  Prefill (length==0)
         writes with a static offset, which partitions cleanly.
+
+        ``n_valid`` (B,) — real (non-right-pad) token count of a bucketed
+        prefill: all Tnew rows are written, but ``length`` advances by
+        ``n_valid``, so decode masks the pad tail (``k_pos < length``) and
+        overwrites it in place, token by token.  The masked-prefill fix —
+        see DESIGN §7 and the paged counterpart in
+        ``repro.serve.paged_kv.PagedDenseKVCache.append`` (which drops pad
+        writes outright).
         """
         B, Tnew = k_new.shape[:2]
         if Tnew == 1:
@@ -69,7 +86,8 @@ class DenseKVCache(NamedTuple):
                                          (0, self.length[0], 0, 0))
         v = jax.lax.dynamic_update_slice(self.v, v_new.astype(self.v.dtype),
                                          (0, self.length[0], 0, 0))
-        return DenseKVCache(k, v, self.length + Tnew)
+        adv = Tnew if n_valid is None else jnp.asarray(n_valid, jnp.int32)
+        return DenseKVCache(k, v, self.length + adv)
 
 
 class WindowKVCache(NamedTuple):
@@ -114,7 +132,7 @@ class MLAKVCache(NamedTuple):
                    jnp.zeros((batch, max_len, rope_dim), dtype),
                    jnp.zeros((batch,), jnp.int32))
 
-    def append(self, latent_new, k_rope_new):
+    def append(self, latent_new, k_rope_new, n_valid=None):
         B, Tnew = latent_new.shape[:2]
         if Tnew == 1:  # masked update — see DenseKVCache.append
             S = self.latent.shape[1]
@@ -130,7 +148,8 @@ class MLAKVCache(NamedTuple):
             self.latent, latent_new.astype(self.latent.dtype), (0, start, 0))
         kr = jax.lax.dynamic_update_slice(
             self.k_rope, k_rope_new.astype(self.k_rope.dtype), (0, start, 0))
-        return MLAKVCache(lat, kr, self.length + latent_new.shape[1])
+        adv = Tnew if n_valid is None else jnp.asarray(n_valid, jnp.int32)
+        return MLAKVCache(lat, kr, self.length + adv)
 
 
 def cache_nbytes(tree) -> int:

@@ -82,15 +82,29 @@ class MoSAAttention:
         return max(min(T // self.cfg.sparsity, T), min(self.cfg.min_k, T))
 
     # ------------------------------------------------------------------ train
-    def __call__(self, params, x, positions=None):
-        """x: (B, T, h) -> (B, T, h).  Full MoSA layer (all heads)."""
+    def __call__(self, params, x, positions=None, valid=None):
+        """x: (B, T, h) -> (B, T, h).  Full MoSA layer (all heads).
+
+        ``valid``: optional (B, T) bool marking right-pad tokens False
+        (bucketed serving prefill, DESIGN §7).  Unlike causal dense
+        attention, expert-choice selection is NOT causal — an attended pad
+        would steal top-k slots from real tokens — so invalid tokens' router
+        scores are masked below the sigmoid range (to -1.0, finite so no
+        NaN can leak through the 0 * -inf corner), which keeps them out of
+        every head's selection whenever k real candidates exist; selected
+        overflow slots (k > real tokens) are scaled to zero contribution.
+        """
         c, cd = self.cfg, self.compute_dtype
         B, T, h = x.shape
         H, d = c.n_mosa_heads, c.d_head
         k = self.k_for(T)
 
         scores = self.router.scores(params["router"], x)          # (B,H,T) fp32
+        if valid is not None:
+            scores = jnp.where(valid[:, None, :], scores, -1.0)
         r, idx = select_topk(scores, k, c.force_first_token)      # (B,H,k)
+        if valid is not None:
+            r = jnp.where(r > 0.0, r, 0.0)  # overflow pads: zero output
 
         if positions is None:
             pos_sel = idx
@@ -161,18 +175,28 @@ class MoSAAttention:
                 "coverage": coverage, "load": load}
 
     # ---------------------------------------------------------------- serving
-    def prefill(self, params, x, cache: MoSAKVCache, positions=None):
+    def prefill(self, params, x, cache: MoSAKVCache, positions=None,
+                valid=None):
         """Run the prompt through training-style selection and fill the cache
         with each head's top-k K/V (the prompt is fully known, so
-        non-autoregressive selection is exact here)."""
+        non-autoregressive selection is exact here).
+
+        ``valid`` (B, T) bool masks right-pad tokens out of the selection
+        (scores to -1.0, see ``__call__``); slots that still land on a pad
+        (k exceeds the real token count) are stored as the empty-slot
+        sentinels (``scores=-inf``, ``idx=-1``) — right-pads have the
+        LARGEST indices, so after the ascending-idx sort they fall exactly
+        where the empty-slots-last invariant wants them."""
         c, cd = self.cfg, self.compute_dtype
         B, T, h = x.shape
         k_cache = cache.k.shape[2]
         k = min(self.k_for(T), k_cache)
 
-        y = self(params, x, positions)
+        y = self(params, x, positions, valid)
 
         scores = self.router.scores(params["router"], x)
+        if valid is not None:
+            scores = jnp.where(valid[:, None, :], scores, -1.0)
         r, idx = select_topk(scores, k, c.force_first_token)
         xs = jax.vmap(lambda xb, ib: xb[ib])(x.astype(cd), idx)
         kk = jnp.einsum("bnkh,nhd->bnkd", xs, params["wk"].astype(cd),
@@ -180,14 +204,147 @@ class MoSAAttention:
         kk = rope_lib.apply_rope(kk, idx, self.rope_theta, self.rotary_frac)
         v = jnp.einsum("bnkh,nhd->bnkd", xs, params["wv"].astype(cd),
                        preferred_element_type=jnp.float32).astype(cd)
+        if valid is not None:
+            sel_ok = r > 0.0
+            r = jnp.where(sel_ok, r, -jnp.inf)
+            idx = jnp.where(sel_ok, idx, -1)
         pad = k_cache - k
         if pad:
             kk = jnp.pad(kk, ((0, 0), (0, 0), (0, pad), (0, 0)))
             v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
             r = jnp.pad(r, ((0, 0), (0, 0), (0, pad)), constant_values=-jnp.inf)
             idx = jnp.pad(idx, ((0, 0), (0, 0), (0, pad)), constant_values=-1)
+        nv = (jnp.full((B,), T, jnp.int32) if valid is None
+              else valid.sum(-1).astype(jnp.int32))
         cache = MoSAKVCache(kk, v, r.astype(jnp.float32), idx,
-                            cache.length + T)
+                            cache.length + nv)
+        return y, cache
+
+    def prefill_past(self, params, x, cache: MoSAKVCache, positions=None,
+                     valid=None):
+        """Continued prefill: extend a restored prefix cache with a prompt
+        suffix, reproducing training-style selection over the full prompt
+        (DESIGN §7).
+
+        Why this works and is cheap: a top-k over prefix+suffix can only
+        contain prefix tokens that are in the top-k of the prefix — which
+        is what the restored cache holds (scores, original positions,
+        K/V).  So the union of {cached entries} and {suffix tokens} is a
+        superset of the true selection whenever the selection width did
+        not grow since the boundary: EXACT under a constant-k schedule
+        (``k_fixed``, the paper's §3.4 long-sequence serving mode, or a
+        ``min_k``/capacity-clamped k).  Under the growing ``k = T / rho``
+        schedule the prefix side is limited to the boundary's top-k —
+        tokens the boundary dropped cannot re-enter — the same MoD-style
+        approximation class as streaming decode (DESIGN §5).  The
+        selection width matches one-shot prefill either way:
+        ``min(k_for(L0 + T_valid), capacity)``, computed on traced
+        lengths by rank-masking the union top-k (which ``lax.top_k``
+        already orders by score).  Suffix-token outputs attend the final
+        selection under the usual index-causal mask — identical math to
+        ``__call__`` restricted to suffix queries.  (The forced first
+        token rides along: its cache entry gets a selection boost, its
+        stored score stays real.)
+        """
+        c, cd = self.cfg, self.compute_dtype
+        B, T, h = x.shape
+        H, d = c.n_mosa_heads, c.d_head
+        kc = cache.k.shape[2]
+        L0 = cache.length                                       # (B,)
+        nv = (jnp.full((B,), T, jnp.int32) if valid is None
+              else valid.sum(-1).astype(jnp.int32))
+
+        if positions is None:
+            base_pos = L0[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+        else:
+            base_pos = positions if positions.ndim == 2 else positions[0]
+        idx_new = jnp.broadcast_to(base_pos[:, None], (B, H, T))
+
+        scores_new = self.router.scores(params["router"], x)    # (B,H,T)
+        if valid is not None:
+            scores_new = jnp.where(valid[:, None, :], scores_new, -1.0)
+
+        q_all = jnp.einsum("bth,nhd->bntd", x.astype(cd),
+                           params["wq"].astype(cd),
+                           preferred_element_type=jnp.float32).astype(cd)
+        k_all = jnp.einsum("bth,nhd->bntd", x.astype(cd),
+                           params["wk"].astype(cd),
+                           preferred_element_type=jnp.float32).astype(cd)
+        v_all = jnp.einsum("bth,nhd->bntd", x.astype(cd),
+                           params["wv"].astype(cd),
+                           preferred_element_type=jnp.float32).astype(cd)
+        q_all = rope_lib.apply_rope(q_all, idx_new, self.rope_theta,
+                                    self.rotary_frac)
+        k_all = rope_lib.apply_rope(k_all, idx_new, self.rope_theta,
+                                    self.rotary_frac)
+
+        # Union candidates: cached prefix top-k (already roped at original
+        # positions) + every suffix token.  Disjoint by construction
+        # (cached idx < L0 <= suffix idx).
+        scores_cat = jnp.concatenate([cache.scores, scores_new], axis=-1)
+        idx_cat = jnp.concatenate([cache.idx, idx_new], axis=-1)
+        k_cat = jnp.concatenate([cache.k.astype(cd), k_all], axis=2)
+        v_cat = jnp.concatenate([cache.v.astype(cd), v_all], axis=2)
+
+        sel_scores = scores_cat
+        if c.force_first_token:
+            sel_scores = jnp.where(idx_cat == 0, 2.0, sel_scores)  # boost
+        _, j = jax.lax.top_k(sel_scores, kc)
+        r_sel = jnp.take_along_axis(scores_cat, j, axis=-1)
+        idx_sel = jnp.take_along_axis(idx_cat, j, axis=-1)
+        k_sel = jnp.take_along_axis(k_cat, j[..., None], axis=2)
+        v_sel = jnp.take_along_axis(v_cat, j[..., None], axis=2)
+
+        sel_ok = r_sel > 0.0          # -inf empties / -1.0 pads drop out
+        # One-shot selection width on traced lengths: top_k ordered the
+        # union by (boosted) score, so rank == position.
+        total = L0 + nv
+        if c.k_fixed > 0:
+            k_eff = jnp.minimum(c.k_fixed, total)
+        else:
+            k_eff = jnp.maximum(jnp.minimum(total // c.sparsity, total),
+                                jnp.minimum(c.min_k, total))
+        k_eff = jnp.minimum(k_eff, kc)
+        sel_ok = sel_ok & (jnp.arange(kc) < k_eff[:, None, None])
+        r_st = jnp.where(sel_ok, r_sel, -jnp.inf)
+        idx_st = jnp.where(sel_ok, idx_sel, -1)
+        order = jnp.argsort(jnp.where(idx_st < 0,
+                                      jnp.iinfo(jnp.int32).max, idx_st), -1)
+        idx_st = jnp.take_along_axis(idx_st, order, -1)
+        r_st = jnp.take_along_axis(r_st, order, -1)
+        k_sel = jnp.take_along_axis(k_sel, order[..., None], 2)
+        v_sel = jnp.take_along_axis(v_sel, order[..., None], 2)
+
+        # Suffix-query outputs over the final selection (index-causal mask,
+        # router-score scaling) — __call__ restricted to suffix queries.
+        is_suffix = (idx_st >= L0[:, None, None]) & (idx_st >= 0)  # (B,H,kc)
+        t_j = jnp.clip(idx_st - L0[:, None, None], 0, T - 1)
+        q_sel = jnp.take_along_axis(q_all, t_j[..., None], axis=2)
+        s = jnp.einsum("bnqd,bnkd->bnqk", q_sel, k_sel,
+                       preferred_element_type=jnp.float32) * (d ** -0.5)
+        mask = selection_mask(idx_st, idx_st) & (idx_st >= 0)[:, :, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+        att = jnp.einsum("bnqk,bnkd->bnqd", p.astype(cd), v_sel,
+                         preferred_element_type=jnp.float32)
+        r_q = jnp.where(is_suffix, jnp.maximum(r_st, 0.0), 0.0)
+        att = att * r_q[..., None]
+        y_heads = jnp.einsum("bnkd,ndh->bnkh", att.astype(cd),
+                             params["wo"].astype(cd),
+                             preferred_element_type=jnp.float32).astype(cd)
+
+        tgt = jnp.where(is_suffix, t_j, T)          # T -> dropped
+
+        def scatter_one(yh, tb):
+            return jnp.zeros((T, h), cd).at[tb.reshape(-1)].add(
+                yh.reshape(-1, h), mode="drop")
+
+        y = jax.vmap(scatter_one)(y_heads, tgt)
+        y = hints.constrain(y, ("dp", "tp", None))
+
+        cache = MoSAKVCache(k_sel.astype(cache.k.dtype),
+                            v_sel.astype(cache.v.dtype),
+                            r_st.astype(jnp.float32), idx_st, L0 + nv)
         return y, cache
 
     def decode_step(self, params, x, cache: MoSAKVCache, positions=None):

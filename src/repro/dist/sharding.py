@@ -230,8 +230,15 @@ CACHE_AXES: Mapping[type, Mapping[str, tuple]] = {
         "length": ("batch",),
     },
 }
+# The paged cache types of ``repro.serve.paged_kv`` register their entries
+# here at import time (``register_cache_axes``) — serve depends on dist,
+# never the reverse; any code holding a paged cache instance has necessarily
+# imported the module that registered it.
 
-_CACHE_TYPES = tuple(CACHE_AXES)
+
+def register_cache_axes(cache_type, table) -> None:
+    """Add a cache family's logical-axis table (used by serve.paged_kv)."""
+    CACHE_AXES[cache_type] = dict(table)
 
 
 def cache_spec(cache, mesh: Mesh, rule_set: str = "fsdp_tp",
@@ -309,7 +316,7 @@ def cache_shardings(cache_shapes, mesh: Mesh, rule_set: str = "fsdp_tp",
     tp = tp_axis(mesh)
 
     def is_cache(x):
-        return isinstance(x, _CACHE_TYPES)
+        return type(x) in CACHE_AXES
 
     def one(path, leaf):
         stacked = any(getattr(entry, "key", None) == "scan" for entry in path)

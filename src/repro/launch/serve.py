@@ -12,10 +12,17 @@ Library entry points:
     ``decode_many`` with per-cache-type shardings; ``generate`` runs
     greedy / temperature / top-k decoding for a batch in one fused program;
     ``generate_stepwise`` keeps the legacy one-dispatch-per-token loop (the
-    benchmark baseline).
-  * ``RequestPool`` — continuous batching: requests occupy batch slots;
-    finished slots are refilled between fused decode chunks (single-row
-    prefill written into the batched caches) and EOS is honored.
+    benchmark baseline).  ``Server(paged=PagedConfig(...))`` switches the
+    dense/window KV caches to the block-paged pools of
+    ``repro.serve.paged_kv`` and exposes the per-row ops
+    (``prefill_row`` / ``snapshot_row`` / ``restore_row`` /
+    ``grow_tables``) the paged scheduler drives (DESIGN §7).
+  * ``RequestPool`` — contiguous-slab continuous batching: requests occupy
+    batch slots; finished slots are refilled between fused decode chunks
+    (single-row masked prefill written into the batched caches) and EOS is
+    honored.  This is the NON-PAGED fallback; the paged path is
+    ``repro.serve.Scheduler`` (block-granular admission, prefix cache,
+    preempt-to-recompute), re-exported here as ``Scheduler``.
 
 CLI (smoke-scale):
   PYTHONPATH=src python -m repro.launch.serve --arch mosa-paper \\
@@ -39,12 +46,153 @@ from repro.dist.fault_tolerance import elastic_plan
 from repro.launch import mesh as mesh_lib
 from repro.nn.module import init_shapes
 from repro.nn.transformer import TransformerLM, sample_logits
+from repro.serve.paged_kv import (PAGED_CACHE_TYPES, POOL_FIELDS,
+                                  PagedConfig, PagedDenseKVCache,
+                                  PagedWindowKVCache)
+from repro.serve.scheduler import Scheduler  # noqa: F401  (re-export)
+
+
+# ---------------------------------------------------- batch-row cache ops
+# The serving caches are one pytree holding B rows; continuous batching
+# needs to prefill / snapshot / restore ONE row without touching the
+# others.  For contiguous caches a row is just index b of every leaf; for
+# paged caches the POOL fields (see ``paged_kv.POOL_FIELDS``) are shared by
+# all rows and pass through whole, while tables / positions / lengths are
+# per-row.  Layer-stacked ``scan`` caches shift the batch dim right by the
+# layer axis (DESIGN §2), handled here by vmapping the per-type op over the
+# layer axis.
+
+def _is_stacked(path) -> bool:
+    return any(getattr(e, "key", None) == "scan" for e in path)
+
+
+def _is_paged(x) -> bool:
+    return isinstance(x, PAGED_CACHE_TYPES)
+
+
+def row_slice(caches, b):
+    """A batch-of-1 view of row ``b``: row fields sliced, pools shared —
+    ``model.prefill`` on the view writes through to the shared pools."""
+    def one(path, leaf):
+        ax = 1 if _is_stacked(path) else 0
+        if _is_paged(leaf):
+            return type(leaf)(*(
+                arr if name in POOL_FIELDS
+                else jax.lax.dynamic_slice_in_dim(arr, b, 1, ax)
+                for name, arr in zip(leaf._fields, leaf)))
+        return jax.lax.dynamic_slice_in_dim(leaf, b, 1, ax)
+    return jax.tree_util.tree_map_with_path(one, caches, is_leaf=_is_paged)
+
+
+def row_write(caches, row, b):
+    """Write a batch-of-1 row view back at row ``b``.  Paged pools REPLACE
+    the batched pools (the view's writes only touched this row's blocks);
+    row fields update in place."""
+    def one(path, dst, src):
+        ax = 1 if _is_stacked(path) else 0
+        if _is_paged(dst):
+            return type(dst)(*(
+                s if name in POOL_FIELDS
+                else jax.lax.dynamic_update_slice_in_dim(
+                    d, s.astype(d.dtype), b, ax)
+                for name, d, s in zip(dst._fields, dst, src)))
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), b, ax)
+    return jax.tree_util.tree_map_with_path(one, caches, row,
+                                            is_leaf=_is_paged)
+
+
+def _snap_paged(leaf, b):
+    """Row snapshot of one UNSTACKED paged cache: per-row metadata plus —
+    for the window ring, whose blocks are mutated in place and therefore
+    never shared — the gathered ring CONTENT (bounded by W)."""
+    if isinstance(leaf, PagedDenseKVCache):
+        return {"block_table": leaf.block_table[b], "length": leaf.length[b]}
+    bt = jnp.clip(leaf.block_table[b], 0)
+    k = leaf.k[bt].reshape(leaf.window, *leaf.k.shape[2:])
+    v = leaf.v[bt].reshape(leaf.window, *leaf.v.shape[2:])
+    return {"block_table": leaf.block_table[b], "k": k, "v": v,
+            "positions": leaf.positions[b], "length": leaf.length[b]}
+
+
+def _restore_paged(leaf, snap, b):
+    """Inverse of ``_snap_paged`` at row ``b``.  The caller (Scheduler) has
+    rewritten ``snap["block_table"]`` to freshly owned / incref'd block ids;
+    window ring content is scattered into the NEW blocks."""
+    if isinstance(leaf, PagedDenseKVCache):
+        return leaf._replace(
+            block_table=leaf.block_table.at[b].set(snap["block_table"]),
+            length=leaf.length.at[b].set(snap["length"]))
+    W, bs = leaf.window, leaf.block_size
+    slots = jnp.arange(W, dtype=jnp.int32)
+    blk = snap["block_table"][slots // bs]
+    blk = jnp.where(blk < 0, leaf.k.shape[0], blk)
+    off = slots % bs
+    return leaf._replace(
+        k=leaf.k.at[blk, off].set(snap["k"].astype(leaf.k.dtype),
+                                  mode="drop"),
+        v=leaf.v.at[blk, off].set(snap["v"].astype(leaf.v.dtype),
+                                  mode="drop"),
+        block_table=leaf.block_table.at[b].set(snap["block_table"]),
+        positions=leaf.positions.at[b].set(snap["positions"]),
+        length=leaf.length.at[b].set(snap["length"]))
+
+
+def row_snapshot(caches, b):
+    """Host-restorable state of row ``b``: paged metadata + ring content,
+    full rows of every unpaged leaf (MoSA caches, SSM states).  Everything
+    bounded — the quadratic dense KV stays behind block ids."""
+    def one(path, leaf):
+        if _is_paged(leaf):
+            if _is_stacked(path):
+                return jax.vmap(_snap_paged, in_axes=(0, None))(leaf, b)
+            return _snap_paged(leaf, b)
+        ax = 1 if _is_stacked(path) else 0
+        return jax.lax.dynamic_slice_in_dim(leaf, b, 1, ax)
+    return jax.tree_util.tree_map_with_path(one, caches, is_leaf=_is_paged)
+
+
+def row_restore(caches, snap, b):
+    """Write a ``row_snapshot`` back at row ``b`` (admission reset, prefix
+    restore, preempt-resume)."""
+    def one(path, dst, s):
+        if _is_paged(dst):
+            if _is_stacked(path):
+                return jax.vmap(_restore_paged, in_axes=(0, 0, None))(
+                    dst, s, b)
+            return _restore_paged(dst, s, b)
+        ax = 1 if _is_stacked(path) else 0
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, s.astype(dst.dtype), b, ax)
+    return jax.tree_util.tree_map_with_path(one, caches, snap,
+                                            is_leaf=_is_paged)
+
+
+def set_dense_tables(caches, dense_row, b):
+    """Point row ``b``'s dense block tables (every paged dense layer shares
+    one logical chain) at ``dense_row`` — the decode-time growth write."""
+    def one(path, leaf):
+        if not isinstance(leaf, PagedDenseKVCache):
+            return leaf
+        if _is_stacked(path):
+            bt = leaf.block_table.at[:, b].set(dense_row[None])
+        else:
+            bt = leaf.block_table.at[b].set(dense_row)
+        return leaf._replace(block_table=bt)
+    return jax.tree_util.tree_map_with_path(one, caches, is_leaf=_is_paged)
 
 
 class Server:
     def __init__(self, model_cfg, mesh=None, rule_set: str = "tp",
                  max_len: int = 256, batch: int = 4, params=None,
-                 seq_sharded: bool = False):
+                 seq_sharded: bool = False,
+                 paged: Optional[PagedConfig] = None):
+        """``paged``: switch the dense/window KV caches to the block-paged
+        pools of ``repro.serve.paged_kv`` (DESIGN §7).  With the default
+        auto-sized pools (``num_blocks == 0``) every row owns a worst-case
+        identity chain and ``generate`` works unchanged; with explicit
+        budgets the block tables start unallocated and admission is the
+        ``repro.serve.Scheduler``'s job."""
         self.model_cfg = model_cfg
         self.model = TransformerLM(model_cfg)
         if mesh is None:
@@ -53,11 +201,12 @@ class Server:
         self.mesh = mesh
         self.max_len = max_len
         self.batch = batch
+        self.paged = paged
 
         shapes = init_shapes(self.model)
         self.param_sh = shd.param_shardings(self.model, mesh, rule_set, shapes)
         cache_shapes = jax.eval_shape(
-            lambda: self.model.init_cache(batch, max_len))
+            lambda: self.model.init_cache(batch, max_len, paged=paged))
         self.cache_sh = shd.cache_shardings(cache_shapes, mesh, rule_set,
                                             seq_sharded=seq_sharded)
         tok_sh = shd.batch_sharding(mesh, rule_set, batch=batch)
@@ -96,26 +245,53 @@ class Server:
         self.decode_many = decode_many
 
         # Single-row prefill + slot write: continuous batching refills one
-        # finished slot without touching the other rows' caches.
+        # finished slot without touching the other rows' caches.  The
+        # prompt arrives RIGHT-padded to its bucket with a ``valid`` mask
+        # and per-row ``last_pos`` — causality keeps pads out of real
+        # tokens' attention, MoSA masks them out of selection, and cache
+        # lengths advance by real tokens only (the masked-prefill fix;
+        # DESIGN §7).
         cache_shapes1 = jax.eval_shape(
             lambda: self.model.init_cache(1, max_len))
         self.cache_sh1 = shd.cache_shardings(cache_shapes1, mesh, rule_set,
                                              seq_sharded=seq_sharded)
+
+        def _prefill_one(params, tokens, caches, valid, last_pos):
+            return self.model.prefill(params, tokens, caches, None, None,
+                                      valid, last_pos)
+
         self.prefill_one = jax.jit(
-            self.model.prefill,
-            in_shardings=(self.param_sh, None, self.cache_sh1),
+            _prefill_one,
+            in_shardings=(self.param_sh, None, self.cache_sh1, None, None),
             out_shardings=(None, self.cache_sh1))
 
         def _write_slot(batched, row, b):
-            def one(path, dst, src):
-                axis = 1 if any(getattr(e, "key", None) == "scan"
-                                for e in path) else 0
-                return jax.lax.dynamic_update_slice_in_dim(
-                    dst, src.astype(dst.dtype), b, axis)
-            return jax.tree_util.tree_map_with_path(one, batched, row)
+            return row_write(batched, row, b)
 
         self.write_slot = jax.jit(_write_slot, donate_argnums=(0,),
                                   out_shardings=self.cache_sh)
+
+        # Paged row ops (Scheduler path, DESIGN §7): prefill one row IN
+        # PLACE of the batched caches — the row view shares the pools, so
+        # appended KV lands directly in this row's allocated blocks —
+        # plus snapshot / restore / table-growth writes.
+        def _prefill_row(params, prompt, caches, b, valid, last_pos,
+                         continued):
+            row = row_slice(caches, b)
+            logits, row = self.model.prefill(params, prompt, row, None, None,
+                                             valid, last_pos, continued)
+            return logits, row_write(caches, row, b)
+
+        self.prefill_row = jax.jit(
+            _prefill_row, static_argnums=(6,),
+            in_shardings=(self.param_sh, None, self.cache_sh, None, None,
+                          None),
+            out_shardings=(None, self.cache_sh), donate_argnums=(2,))
+        self.snapshot_row = jax.jit(row_snapshot)
+        self.restore_row = jax.jit(row_restore, donate_argnums=(0,),
+                                   out_shardings=self.cache_sh)
+        self.grow_tables = jax.jit(set_dense_tables, donate_argnums=(0,),
+                                   out_shardings=self.cache_sh)
 
         if params is None:
             with mesh:
@@ -127,9 +303,11 @@ class Server:
     def new_cache(self, batch: Optional[int] = None):
         batch = self.batch if batch is None else batch
         sh = self.cache_sh if batch == self.batch else self.cache_sh1
+        paged = self.paged if batch == self.batch else None
         with self.mesh:
             return jax.jit(
-                lambda: self.model.init_cache(batch, self.max_len),
+                lambda: self.model.init_cache(batch, self.max_len,
+                                              paged=paged),
                 out_shardings=sh)()
 
     def generate(self, prompts: jnp.ndarray, gen_len: int,
@@ -141,6 +319,10 @@ class Server:
         """
         B, P = prompts.shape
         assert B == self.batch
+        assert self.paged is None or (self.paged.num_blocks == 0 and
+                                      self.paged.num_window_blocks == 0), (
+            "generate needs auto-sized paged pools (identity block tables);"
+            " budgeted pools are managed by repro.serve.Scheduler")
         assert P + gen_len - 1 <= self.max_len, (
             f"prompt ({P}) + {gen_len - 1} decode steps exceeds max_len "
             f"{self.max_len}: appends past the cache end are silently "
@@ -217,12 +399,21 @@ class RequestPool:
     capped at the server's ``max_len``), so a request's output never
     depends on what else is queued and at most log2(max_len) prefill
     programs compile.  Prompts longer than the bucket are LEFT-truncated to
-    their most recent tokens; shorter prompts are left-padded, and the pad
-    tokens ARE attended (same approximation as the pre-pool cohort code —
-    masked prefill is an open item).  ``max_new`` is clamped so prompt +
-    completion fits ``max_len`` — cache appends past ``max_len`` would
-    otherwise be silently dropped while decode keeps emitting tokens
-    against the stale entries.
+    their most recent tokens; shorter prompts are RIGHT-padded with a
+    ``valid`` mask and per-row ``last_pos`` — causality keeps pads out of
+    every real token's attention, MoSA masks them out of expert-choice
+    selection, and cache lengths advance by real tokens only, so decode
+    overwrites the pad tail in place (masked prefill, DESIGN §7; the
+    former LEFT-pad scheme attended pads and is gone).  ``max_new`` is
+    clamped so prompt + completion fits ``max_len`` — against the REAL
+    prompt length, so padding no longer costs cache capacity.
+
+    This pool is the NON-PAGED fallback: slots reserve worst-case
+    contiguous slabs and the pow2 bucket doubles as the admission
+    granularity.  With ``Server(paged=...)`` use ``repro.serve.Scheduler``
+    instead — admission there is block-granular (the bucket only caps how
+    many prefill programs compile) and exhaustion preempts-to-recompute
+    rather than queueing forever.
 
     ``eos``: token id that ends a request (included in its output); ``< 0``
     disables EOS stopping.
@@ -230,6 +421,9 @@ class RequestPool:
 
     def __init__(self, server: Server, eos: int = -1, chunk: int = 8,
                  prefill_len: Optional[int] = None):
+        assert server.paged is None, (
+            "RequestPool is the contiguous-slab fallback; a paged Server "
+            "is driven by repro.serve.Scheduler instead")
         self.server = server
         self.eos = eos
         self.chunk = chunk
@@ -242,6 +436,10 @@ class RequestPool:
         return rid
 
     def _bucket(self, prompt_len: int) -> int:
+        """Pow2 prefill bucket — kept ONLY for this non-paged pool, where
+        the bucket doubles as the slot's cache reservation.  The paged
+        ``repro.serve.Scheduler`` admits block-granularly and buckets only
+        to bound how many prefill programs compile."""
         if self.prefill_len:
             return min(self.prefill_len, self.server.max_len)
         b = 1
@@ -278,15 +476,18 @@ class RequestPool:
                     if slots[b] is None and self.queue and steps < max_steps:
                         r = self.queue.pop(0)
                         bucket = self._bucket(len(r.prompt))
+                        prompt = r.prompt[-bucket:]
+                        P = len(prompt)
                         # clamp so the completion fits the cache: positions
-                        # bucket..max_len-1 hold the decoded tokens' KV
-                        r.max_new = min(r.max_new,
-                                        srv.max_len - bucket + 1)
-                        pad = bucket - len(r.prompt)
-                        prompt = jnp.pad(r.prompt[-bucket:], (max(pad, 0), 0))
+                        # P..max_len-1 hold the decoded tokens' KV (pads
+                        # cost nothing — decode overwrites them)
+                        r.max_new = min(r.max_new, srv.max_len - P + 1)
+                        prompt = jnp.pad(prompt, (0, bucket - P))
+                        valid = (jnp.arange(bucket) < P)[None]
                         row = srv.new_cache(batch=1)
-                        logits, row = srv.prefill_one(srv.params,
-                                                      prompt[None], row)
+                        logits, row = srv.prefill_one(
+                            srv.params, prompt[None], row, valid,
+                            jnp.full((1,), P - 1, jnp.int32))
                         caches = srv.write_slot(caches, row, b)
                         tok0 = srv.sample(logits[:, -1], key)
                         cur = cur.at[b, 0].set(tok0[0])

@@ -171,33 +171,63 @@ class Block:
         return x, aux
 
     # ---------------------------------------------------------------- serving
-    def init_cache(self, batch, max_len, dtype):
+    def init_cache(self, batch, max_len, dtype, paged=None):
+        """``paged``: optional ``repro.serve.paged_kv.PagedConfig`` — dense
+        and window caches become block-paged pools (DESIGN §7).  MLA keeps
+        its contiguous latent cache (already rank-compressed; paging it is
+        an open item), MoSA and SSM states are O(k)/O(1) by construction.
+        """
         c = self.cfg
         kind = self.spec.mixer
         m = self.mixer_module()
         if kind == "mosa":
-            return m.init_cache(batch, max_len, dtype)
+            return m.init_cache(batch, max_len, dtype, paged=paged)
         if kind in ("attn", "attn_local"):
             if c.attention.kind == "mla":
                 ml = c.attention.mla
                 return MLAKVCache.create(batch, max_len, ml.kv_lora_rank,
                                          ml.rope_head_dim, dtype)
             if m.cfg.window:
-                return WindowKVCache.create(batch, min(m.cfg.window, max_len),
+                W = min(m.cfg.window, max_len)
+                if paged is not None:
+                    from repro.serve.paged_kv import PagedWindowKVCache
+                    return PagedWindowKVCache.create(
+                        batch, W, c.attention.n_kv_heads, c.attention.d_head,
+                        dtype, block_size=paged.block_size,
+                        num_blocks=paged.num_window_blocks,
+                        identity_tables=paged.num_window_blocks == 0)
+                return WindowKVCache.create(batch, W,
                                             c.attention.n_kv_heads,
                                             c.attention.d_head, dtype)
+            if paged is not None:
+                from repro.serve.paged_kv import PagedDenseKVCache
+                return PagedDenseKVCache.create(
+                    batch, max_len, c.attention.n_kv_heads,
+                    c.attention.d_head, dtype, block_size=paged.block_size,
+                    num_blocks=paged.num_blocks,
+                    identity_tables=paged.num_blocks == 0)
             return DenseKVCache.create(batch, max_len, c.attention.n_kv_heads,
                                        c.attention.d_head, dtype)
         if kind in ("mamba", "mlstm", "slstm"):
             return m.init_state(batch)
         raise ValueError(kind)
 
-    def prefill(self, params, x, cache, positions=None):
+    def prefill(self, params, x, cache, positions=None, valid=None,
+                continued=False):
         norm = self._norm()
         m = self.mixer_module()
         kind = self.spec.mixer
         xin = norm(params["norm1"], x)
-        h, cache = m.prefill(params["mixer"], xin, cache, positions)
+        if kind == "mosa":
+            h, cache = m.prefill(params["mixer"], xin, cache, positions,
+                                 valid=valid, continued=continued)
+        elif kind in ("attn", "attn_local"):
+            h, cache = m.prefill(params["mixer"], xin, cache, positions,
+                                 valid=valid)
+        else:
+            # SSM/xLSTM prefill has no pad story (recurrent state would need
+            # a step-masked scan) — callers right-pad only attention stacks.
+            h, cache = m.prefill(params["mixer"], xin, cache, positions)
         x = x + h
         ffn = self.ffn_module()
         aux = jnp.zeros((), jnp.float32)
@@ -422,7 +452,8 @@ class TransformerLM:
                       "tokens": denom}
 
     # ---------------------------------------------------------------- serving
-    def init_cache(self, batch, max_len, dtype=None):
+    def init_cache(self, batch, max_len, dtype=None, paged=None):
+        """``paged``: optional ``PagedConfig`` — see ``Block.init_cache``."""
         dtype = dtype or self.cfg.cdtype
         head, p, units, tail_start, pattern = self._layout()
         blocks = self._blocks()
@@ -430,19 +461,22 @@ class TransformerLM:
         if units:
             scan_c = {}
             for j in range(p):
-                one = blocks[head + j].init_cache(batch, max_len, dtype)
+                one = blocks[head + j].init_cache(batch, max_len, dtype,
+                                                  paged=paged)
                 scan_c[f"pos{j}"] = jax.tree.map(
                     lambda t: jnp.broadcast_to(t[None], (units,) + t.shape)
                     if hasattr(t, "shape") else t, one)
             caches["scan"] = scan_c
         tail = {}
         for i in self._unrolled_indices():
-            tail[f"layer{i}"] = blocks[i].init_cache(batch, max_len, dtype)
+            tail[f"layer{i}"] = blocks[i].init_cache(batch, max_len, dtype,
+                                                     paged=paged)
         if tail:
             caches["tail"] = tail
         return caches
 
-    def _serving_pass(self, params, x, caches, positions, step_fn_name):
+    def _serving_pass(self, params, x, caches, positions, step_fn_name,
+                      **step_kw):
         head, p, units, tail_start, pattern = self._layout()
         blocks = self._blocks()
 
@@ -451,7 +485,7 @@ class TransformerLM:
         def run_unrolled(i, x, caches):
             fn = getattr(blocks[i], step_fn_name)
             res = fn(params["layers"]["tail"][f"layer{i}"], x,
-                     caches["tail"][f"layer{i}"], positions)
+                     caches["tail"][f"layer{i}"], positions, **step_kw)
             if step_fn_name == "prefill":
                 x, c_new, _ = res
             else:
@@ -471,7 +505,7 @@ class TransformerLM:
                 for j in range(p):
                     fn = getattr(unit_blocks[j], step_fn_name)
                     res = fn(unit_params[f"pos{j}"], x,
-                             unit_caches[f"pos{j}"], positions)
+                             unit_caches[f"pos{j}"], positions, **step_kw)
                     if step_fn_name == "prefill":
                         x, c_new, _ = res
                     else:
@@ -489,15 +523,30 @@ class TransformerLM:
             caches = dict(caches, tail={**caches["tail"], **new_tail})
         return x, caches
 
-    def prefill(self, params, tokens, caches, positions=None, inputs_embeds=None):
+    def prefill(self, params, tokens, caches, positions=None,
+                inputs_embeds=None, valid=None, last_pos=None,
+                continued=False):
+        """``valid``: (B, T) bool — False marks right-pad tokens (bucketed
+        prefill; pads never enter MoSA selection and never advance cache
+        lengths).  ``last_pos``: (B,) int32 — per-row index of the last REAL
+        token, whose logits are returned (None = T-1, the unpadded case).
+        ``continued`` (static): caches hold a restored prompt prefix and the
+        tokens are the suffix (prefix-cache hit, DESIGN §7)."""
         c = self.cfg
         x = self._embed_tokens(params, tokens, inputs_embeds)
-        x, caches = self._serving_pass(params, x, caches, positions, "prefill")
+        x, caches = self._serving_pass(params, x, caches, positions,
+                                       "prefill", valid=valid,
+                                       continued=continued)
         x = self._final_norm()(params["final_norm"], x)
-        if c.tie_embeddings:
-            logits = self._embed().attend(params["embed"], x[:, -1:])
+        if last_pos is None:
+            xl = x[:, -1:]
         else:
-            logits = jnp.dot(x[:, -1:].astype(c.cdtype),
+            xl = jnp.take_along_axis(
+                x, last_pos.astype(jnp.int32)[:, None, None], axis=1)
+        if c.tie_embeddings:
+            logits = self._embed().attend(params["embed"], xl)
+        else:
+            logits = jnp.dot(xl.astype(c.cdtype),
                              params["unembed"]["w"].astype(c.cdtype),
                              preferred_element_type=jnp.float32)
         return logits, caches

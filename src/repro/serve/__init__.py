@@ -1,0 +1,45 @@
+"""Paged KV-cache serving subsystem (DESIGN §7).
+
+Layered like the serving stacks of production attention engines:
+
+  * ``paged_kv``       — fixed-size block pools, the host-side ``BlockPool``
+                         allocator (free list, refcounts, copy-on-write), and
+                         the ``PagedDenseKVCache`` / ``PagedWindowKVCache``
+                         device pytrees whose ``append`` / ``gather`` match
+                         the contiguous caches in ``repro.core.kv_cache``
+                         bit-for-bit;
+  * ``paged_attention`` — the Pallas paged-attention decode kernel
+                         (block-table indirect loads, online softmax) and its
+                         JAX gather reference for CPU;
+  * ``prefix_cache``   — hash-trie over prompt token blocks mapping shared
+                         prefixes to shared physical blocks;
+  * ``scheduler``      — block-granular admission / preempt-to-recompute
+                         continuous batching over a paged ``Server``.
+
+Layering: nothing in this package imports ``repro.launch`` (the scheduler
+takes the server as a duck-typed argument), so ``repro.launch.serve`` can
+build on it without an import cycle.  ``paged_kv`` / ``paged_attention``
+are LEAF modules (jax + ``dist.sharding`` registration only) that
+``repro.core.attention`` dispatches on; the package exports below resolve
+lazily (PEP 562) so importing a leaf never drags in the scheduler stack.
+"""
+
+_EXPORTS = {
+    "BlockPool": "paged_kv",
+    "PagedConfig": "paged_kv",
+    "PagedDenseKVCache": "paged_kv",
+    "PagedWindowKVCache": "paged_kv",
+    "paged_attention_decode": "paged_attention",
+    "PrefixCache": "prefix_cache",
+    "Scheduler": "scheduler",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+        mod = importlib.import_module(f"repro.serve.{_EXPORTS[name]}")
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")

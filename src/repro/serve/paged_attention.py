@@ -1,0 +1,211 @@
+"""Paged-attention decode: block-table indirect loads + online softmax.
+
+Decode attention over a ``PagedDenseKVCache``: queries are a single token per
+row, keys/values live in pool blocks addressed through the row's block table.
+Two implementations share the mask/scale conventions of
+``repro.core.attention.MultiHeadAttention.decode_step`` (NEG_INF where-mask,
+fp32 running max/denom), so both are numerically exact against the
+contiguous decode path:
+
+  * ``paged_attention_ref``    — gather the row's blocks back to the
+    contiguous ``(B, S, Hkv, d)`` layout and run the identical einsum; the
+    CPU/reference path and the oracle the kernel is tested against.
+  * ``paged_attention_kernel`` — Pallas TPU kernel: grid ``(B, num_blocks)``,
+    the block table and per-row lengths ride in scalar-prefetch SMEM so each
+    grid step DMAs exactly one physical block ``pool[table[b, i]]`` into
+    VMEM (the indirect load), with flash-style online softmax carried in
+    VMEM scratch across the block-grid dimension.  No gather buffer is ever
+    materialized.
+
+``paged_attention_decode`` is the public dispatcher (same platform logic as
+``repro.kernels.ops``: native on TPU, interpreter elsewhere unless
+``REPRO_PALLAS_INTERPRET`` overrides).  The windowed ring cache always takes
+the gather path — its KV is bounded by W, so there is no quadratic gather to
+avoid (DESIGN §7).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pltpu is importable without TPU hardware; kernels interpret on CPU
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+from repro.serve.paged_kv import PagedDenseKVCache
+
+NEG_INF = -1e30
+LANE = 128
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------- reference
+def paged_attention_ref(q, k_pool, v_pool, block_table, lengths, scale):
+    """q: (B, Hq, d); pools (N, bs, Hkv, d); block_table (B, nb);
+    lengths (B,).  Returns (B, Hq, d) in q.dtype.
+
+    Exactly ``MultiHeadAttention.decode_step``'s cache attention on the
+    gathered layout: all positions ``< length`` attend (decode is causal by
+    construction — every pooled token precedes the query)."""
+    B, Hq, d = q.shape
+    nb, bs = block_table.shape[1], k_pool.shape[1]
+    Hkv = k_pool.shape[2]
+    R = Hq // Hkv
+    S = nb * bs
+
+    bt = jnp.clip(block_table, 0)
+    kk = jax.vmap(lambda t: k_pool[t].reshape(S, Hkv, d))(bt)   # (B,S,Hkv,d)
+    vv = jax.vmap(lambda t: v_pool[t].reshape(S, Hkv, d))(bt)
+
+    qg = q.reshape(B, Hkv, R, 1, d).astype(jnp.float32)
+    s = jnp.einsum("bgrqd,bsgd->bgrqs", qg, kk.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    k_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    ok = (k_pos < lengths[:, None])[:, None, None, None, :]
+    s = jnp.where(ok, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    out = jnp.einsum("bgrqs,bsgd->bgrqd", p, vv.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(p.sum(-1), 1e-30)[..., None]
+    return out.reshape(B, Hq, d).astype(q.dtype)
+
+
+# ------------------------------------------------------------------- kernel
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, bs: int, scale: float):
+    """Grid (B, nb).  bt/len are scalar-prefetch SMEM; k/v blocks arrive
+    already indirected by the index map (``pool[bt[b, i]]``)."""
+    b, i = pl.program_id(0), pl.program_id(1)
+    nb = pl.num_programs(1)
+    Hq, d = q_ref.shape[1], q_ref.shape[2]
+    Hkv = k_ref.shape[2]
+    R = Hq // Hkv
+    length = len_ref[b]
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(i * bs < length)
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale                # (Hq, d)
+        k = k_ref[0].astype(jnp.float32)                        # (bs, Hkv, d)
+        v = v_ref[0].astype(jnp.float32)
+        qg = q.reshape(Hkv, R, d)
+        kg = k.transpose(1, 0, 2)                               # (Hkv, bs, d)
+        vg = v.transpose(1, 0, 2)
+        s = jax.lax.dot_general(qg, kg, (((2,), (2,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32)
+        pos = i * bs + jax.lax.broadcasted_iota(jnp.int32, (Hkv, R, bs), 2)
+        s = jnp.where(pos < length, s, NEG_INF)                 # (Hkv, R, bs)
+
+        m_prev = m_ref[:, :1].reshape(Hkv, R)
+        l_prev = l_ref[:, :1].reshape(Hkv, R)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(pos < length, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=-1)
+        acc = acc_ref[...].reshape(Hkv, R, d)
+        acc = acc * corr[..., None] + jax.lax.dot_general(
+            p, vg, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(
+            m_new.reshape(Hq, 1), m_ref.shape).astype(m_ref.dtype)
+        l_ref[...] = jnp.broadcast_to(
+            l_new.reshape(Hq, 1), l_ref.shape).astype(l_ref.dtype)
+        acc_ref[...] = acc.reshape(Hq, d)
+
+    @pl.when(i == nb - 1)
+    def _finish():
+        l = l_ref[:, :1]                                        # (Hq, 1)
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention_kernel(q, k_pool, v_pool, block_table, lengths, *,
+                           scale: float, interpret: bool = False):
+    """Pallas paged decode.  q: (B, Hq, d) with d a multiple of 128 (the
+    wrapper pads); pools (N, bs, Hkv, d); block_table (B, nb); lengths (B,).
+    """
+    B, Hq, d = q.shape
+    nb = block_table.shape[1]
+    bs = k_pool.shape[1]
+    Hkv = k_pool.shape[2]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # block_table, lengths
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, Hq, d), lambda b, i, bt, ln: (b, 0, 0)),
+            # THE indirect load: the i-th logical block of row b is DMA'd
+            # from physical block bt[b, i] (clamped; unallocated blocks are
+            # masked out by `pos < length` in the kernel body).
+            pl.BlockSpec((1, bs, Hkv, d),
+                         lambda b, i, bt, ln: (jnp.maximum(bt[b, i], 0),
+                                               0, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, d),
+                         lambda b, i, bt, ln: (jnp.maximum(bt[b, i], 0),
+                                               0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, d), lambda b, i, bt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hq, LANE), jnp.float32),   # running max (replicated)
+            pltpu.VMEM((Hq, LANE), jnp.float32),   # running denom
+            pltpu.VMEM((Hq, d), jnp.float32),      # output accumulator
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, bs=bs, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, d), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, q, k_pool, v_pool)
+
+
+def _pad_lane(x):
+    pad = (-x.shape[-1]) % LANE
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[-1] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------- dispatch
+def paged_attention_decode(q, cache: PagedDenseKVCache, *, scale: float,
+                           impl: str | None = None,
+                           interpret: bool | None = None):
+    """Decode attention of one token per row over a paged dense cache.
+
+    q: (B, Hq, d).  ``impl``: ``"kernel"`` | ``"ref"`` | None (kernel on
+    TPU, ref elsewhere — the gather ref is faster than an interpreted kernel
+    on CPU and bit-identical to the contiguous decode path).
+    """
+    if impl is None:
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return paged_attention_ref(q, cache.k, cache.v, cache.block_table,
+                                   cache.length, scale)
+    interpret = _interpret_default() if interpret is None else interpret
+    d = q.shape[-1]
+    out = paged_attention_kernel(
+        _pad_lane(q), _pad_lane(cache.k), _pad_lane(cache.v),
+        cache.block_table, cache.length, scale=scale, interpret=interpret)
+    return out[..., :d]

@@ -1,0 +1,430 @@
+"""Block-granular continuous batching over a paged ``Server`` (DESIGN §7).
+
+Replaces ``launch.serve.RequestPool``'s pow2-bucket slot logic for the paged
+path.  Where the pool reserves a worst-case contiguous slab per slot (so
+capacity is ``HBM / slab``, no matter how short requests actually are), the
+scheduler admits requests while FREE BLOCKS suffice and grows each row's
+dense block chain one block at a time as decode proceeds:
+
+  * **Admission** — a request needs ``ceil(P / bs)`` dense blocks for its
+    prompt (minus any prefix-cache hit) plus the window ring blocks; if the
+    pools cannot cover that after LRU-evicting unused prefix-cache entries,
+    the request waits in the queue.
+  * **Decode growth** — before each fused chunk, rows crossing a block
+    boundary get a fresh block (``Server.grow_tables``).
+  * **Preempt-to-recompute** — when growth cannot be satisfied, the
+    latest-admitted victim releases all its blocks and re-enters the queue
+    with ``prompt + generated`` as its new prompt (recompute, not swap:
+    MoSA's O(k) caches make recompute cheap relative to reserving swap
+    space), so the oldest requests always run to completion — no livelock.
+    For dense/window models preemption is token-invisible (recompute is
+    exact; asserted in tests); on MoSA hybrids the recomputed prefill
+    replaces the streamed selection — the same approximation family as
+    decode itself.
+  * **Prefix cache** — prompts are matched against the block trie
+    (``repro.serve.prefix_cache``); a hit increfs the shared dense blocks,
+    restores the boundary snapshot (MoSA caches, window ring content), and
+    prefills ONLY the unshared suffix (``continued=True`` — the exact union
+    selection of ``MoSAAttention.prefill_past``).  On a miss the prefill is
+    split at the shareable boundary so the inserted snapshot is a function
+    of the prefix tokens alone — the causality prefix reuse requires.
+    Chunk-causal note: for models with MoSA layers this split is the same
+    approximation family as streaming decode (training-style expert choice
+    is non-causal and therefore CANNOT be prefix-cached); for dense/window
+    models the split is exact.  ``prefix_cache=False`` restores one-shot
+    training-style prefill.
+
+Prefill still pads to pow2 buckets, but ONLY to bound how many programs
+compile — right-padded with a valid mask (the masked-prefill fix), never
+reserving cache space.
+
+No imports from ``repro.launch`` (the server arrives duck-typed), so the
+launch layer can re-export this scheduler without a cycle.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kv_cache import MoSAKVCache
+from repro.dist import hints
+from repro.serve.paged_kv import (BlockPool, PagedDenseKVCache,
+                                  PagedWindowKVCache)
+from repro.serve.prefix_cache import PrefixCache
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    prompt: jnp.ndarray
+    max_new: int
+    generated: list = dataclasses.field(default_factory=list)
+
+
+def _cache_leaves(caches):
+    is_leaf = (lambda x: isinstance(x, (PagedDenseKVCache,
+                                        PagedWindowKVCache, MoSAKVCache)))
+    return jax.tree_util.tree_leaves(caches, is_leaf=is_leaf)
+
+
+def _paged_entries(snap):
+    """The paged-cache dicts inside a host row snapshot (they are the only
+    dicts carrying a ``block_table`` key — see ``launch.serve.row_snapshot``
+    for the structure)."""
+    out = []
+
+    def walk(x):
+        if isinstance(x, dict):
+            if "block_table" in x:
+                out.append(x)
+                return
+            for v in x.values():
+                walk(v)
+        elif hasattr(x, "_fields"):
+            for v in x:
+                walk(v)
+
+    walk(snap)
+    return out
+
+
+def _set_snapshot_tables(snap, dense_row, window_row):
+    """Point a host snapshot's block tables at ``dense_row`` /
+    ``window_row`` (np int32, -1 padded).  Window entries are the ones
+    carrying ring content (``"k"``); stacked tables broadcast the row over
+    the layer axis."""
+    for e in _paged_entries(snap):
+        row = window_row if "k" in e else dense_row
+        bt = e["block_table"]
+        if bt.ndim == row.ndim + 1:          # layer-stacked (scan) cache
+            e["block_table"] = np.broadcast_to(
+                row, bt.shape).astype(np.int32).copy()
+        else:
+            e["block_table"] = row.astype(np.int32).copy()
+
+
+def _table_row(ids: List[int], width: int) -> np.ndarray:
+    row = np.full((width,), -1, np.int32)
+    row[:len(ids)] = ids
+    return row
+
+
+class Scheduler:
+    """Continuous batching with block-granular admission.
+
+    ``server``: a ``launch.serve.Server`` built with
+    ``paged=PagedConfig(num_blocks=..., num_window_blocks=...)`` — explicit
+    budgets; the worst-case auto sizing would make admission vacuous.
+    """
+
+    def __init__(self, server, eos: int = -1, chunk: int = 8,
+                 prefill_len: Optional[int] = None,
+                 prefix_cache: bool = True):
+        paged = server.paged
+        assert paged is not None and paged.num_blocks > 0, (
+            "Scheduler needs Server(paged=PagedConfig(num_blocks=...)) with "
+            "an explicit dense-block budget")
+        self.server = server
+        self.eos = eos
+        self.chunk = chunk
+        self.prefill_len = prefill_len
+        self.bs = paged.block_size
+        self.queue: List[_Request] = []
+        self.results: dict = {}
+
+        self.caches = server.new_cache()
+        leaves = _cache_leaves(self.caches)
+        dense = [x for x in leaves if isinstance(x, PagedDenseKVCache)]
+        window = [x for x in leaves if isinstance(x, PagedWindowKVCache)]
+        assert dense, "paged scheduler needs at least one paged dense layer"
+        self.nb_max = dense[0].block_table.shape[-1]
+        self.has_window = bool(window)
+        self.wb = window[0].block_table.shape[-1] if window else 0
+        if self.has_window:
+            assert paged.num_window_blocks > 0, (
+                "model has window layers: pass num_window_blocks")
+        # A hit must restore per-row state beyond dense blocks (MoSA top-k
+        # sets, window rings, SSM states) -> only snapshot nodes usable.
+        self.need_snapshot = any(
+            not isinstance(x, PagedDenseKVCache) for x in leaves)
+
+        self.dense_pool = BlockPool(paged.num_blocks, self.bs)
+        self.window_pool = (BlockPool(paged.num_window_blocks, self.bs)
+                            if self.has_window else None)
+        self.prefix = PrefixCache(self.bs) if prefix_cache else None
+        self._empty_row = jax.device_get(server.snapshot_row(self.caches, 0))
+        self.stats = {"prefix_hits": 0, "prefix_hit_tokens": 0,
+                      "prefilled_tokens": 0, "preemptions": 0,
+                      "max_concurrent": 0}
+
+        B = server.batch
+        self._slots: List[Optional[dict]] = [None] * B
+        self._admit_seq = 0
+
+    # ----------------------------------------------------------- interface
+    def submit(self, prompt, max_new: int) -> int:
+        rid = len(self.results) + len(self.queue) + \
+            sum(s is not None for s in self._slots)
+        self.queue.append(_Request(rid, jnp.asarray(prompt, jnp.int32),
+                                   max_new))
+        return rid
+
+    # ------------------------------------------------------------- helpers
+    def _bucket(self, n: int) -> int:
+        if self.prefill_len:
+            return min(self.prefill_len, self.server.max_len)
+        b = 1
+        while b < max(n, 1):
+            b *= 2
+        return min(b, self.server.max_len)
+
+    def _alloc_dense(self, n: int):
+        """All-or-nothing dense alloc, LRU-evicting prefix entries first."""
+        while True:
+            ids = self.dense_pool.alloc(n)
+            if ids is not None:
+                return ids
+            if self.prefix is None or not self.prefix.evict_lru(
+                    self.dense_pool):
+                return None
+
+    def _prefill(self, b, prompt_np, valid_count, continued):
+        """Bucketed right-pad prefill of ``prompt_np`` into row ``b``."""
+        srv = self.server
+        bucket = self._bucket(valid_count)
+        padded = np.zeros((bucket,), np.int32)
+        padded[:valid_count] = prompt_np[:valid_count]
+        valid = (np.arange(bucket) < valid_count)[None]
+        logits, self.caches = srv.prefill_row(
+            srv.params, jnp.asarray(padded)[None], self.caches,
+            jnp.int32(b), jnp.asarray(valid),
+            jnp.full((1,), valid_count - 1, jnp.int32), continued)
+        self.stats["prefilled_tokens"] += valid_count
+        return logits
+
+    def _free_slot(self, b):
+        """Release row ``b``'s blocks AND clear its device state.  The
+        clear is not hygiene theater: ``decode_many`` keeps stepping every
+        row, so a stale block table would scatter the dead row's KV into
+        freed blocks the allocator may already have handed to a live
+        request — silent cross-request corruption.  Restoring the empty
+        template (-1 tables, zero lengths) makes the dead row's writes
+        drop instead."""
+        s = self._slots[b]
+        self.dense_pool.decref(s["dense_ids"])
+        if self.window_pool is not None:
+            self.window_pool.decref(s["window_ids"])
+        self._slots[b] = None
+        self.caches = self.server.restore_row(
+            self.caches, copy.deepcopy(self._empty_row), jnp.int32(b))
+
+    def _finish(self, b):
+        r = self._slots[b]["req"]
+        self.results[r.rid] = jnp.asarray(r.generated, jnp.int32)
+        self._free_slot(b)
+
+    def _preempt(self, b):
+        """Preempt-to-recompute: release every block, requeue with
+        prompt + generated as the new prompt."""
+        s = self._slots[b]
+        r = s["req"]
+        if r.generated:
+            r.prompt = jnp.concatenate(
+                [r.prompt, jnp.asarray(r.generated, jnp.int32)])
+        self._free_slot(b)
+        self.queue.insert(0, r)
+        self.stats["preemptions"] += 1
+
+    # ------------------------------------------------------------ admission
+    def _admit(self, b, r: _Request, key) -> Optional[int]:
+        """Admit ``r`` into row ``b``; returns its first sampled token, or
+        None when the block pools cannot cover the prompt."""
+        srv = self.server
+        prompt_np = np.asarray(r.prompt)
+        P = min(len(prompt_np), srv.max_len)
+        prompt_np = prompt_np[-P:]
+        remaining_cap = srv.max_len - P + 1
+        r.max_new = min(r.max_new, len(r.generated) + remaining_cap)
+
+        node, depth, chain_ids = None, 0, []
+        if self.prefix is not None:
+            node, depth = self.prefix.lookup(prompt_np, self.need_snapshot)
+        n_prompt_blocks = -(-P // self.bs)
+        n_new_blocks = n_prompt_blocks - depth // self.bs
+
+        if node is not None:
+            chain_ids = self.prefix.acquire(node, self.dense_pool)
+        suffix_ids = self._alloc_dense(n_new_blocks)
+        if suffix_ids is None:
+            if chain_ids:
+                self.dense_pool.decref(chain_ids)
+            return None
+        window_ids: List[int] = []
+        if self.window_pool is not None:
+            window_ids = self.window_pool.alloc(self.wb)
+            if window_ids is None:
+                self.dense_pool.decref(chain_ids + suffix_ids)
+                return None
+        dense_ids = chain_ids + suffix_ids
+
+        if node is not None:
+            if node.snapshot is not None:
+                snap = copy.deepcopy(node.snapshot)
+            else:
+                # snapshot-free hit (pure paged-dense model, any depth):
+                # the only per-row state is the table + length
+                snap = copy.deepcopy(self._empty_row)
+                for e in _paged_entries(snap):
+                    if "k" not in e:
+                        e["length"] = np.full_like(e["length"], depth)
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_hit_tokens"] += depth
+        else:
+            snap = copy.deepcopy(self._empty_row)
+        _set_snapshot_tables(snap, _table_row(dense_ids, self.nb_max),
+                             _table_row(window_ids, max(self.wb, 1)))
+        self.caches = srv.restore_row(self.caches, snap, jnp.int32(b))
+
+        if node is not None:
+            logits = self._prefill(b, prompt_np[depth:], P - depth, True)
+        elif self.prefix is not None and (P - 1) // self.bs > 0:
+            # Miss: split at the shareable boundary so the inserted
+            # snapshot depends on the prefix tokens alone (see module
+            # docstring), then finish the tail as a continued prefill.
+            n_share = ((P - 1) // self.bs) * self.bs
+            self._prefill(b, prompt_np[:n_share], n_share, False)
+            snap1 = jax.device_get(srv.snapshot_row(self.caches,
+                                                    jnp.int32(b)))
+            chain, tip = self.prefix.insert(
+                prompt_np[:n_share], dense_ids[:n_share // self.bs],
+                self.dense_pool)
+            _set_snapshot_tables(snap1, _table_row(chain, self.nb_max),
+                                 _table_row([], max(self.wb, 1)))
+            self.prefix.attach_snapshot(tip, snap1)
+            logits = self._prefill(b, prompt_np[n_share:], P - n_share, True)
+        else:
+            logits = self._prefill(b, prompt_np, P, False)
+
+        tok0 = srv.sample(logits[:, -1], key)
+        self._slots[b] = {"req": r, "dense_ids": dense_ids,
+                          "window_ids": window_ids, "length": P,
+                          "seq": self._admit_seq}
+        self._admit_seq += 1
+        self.stats["max_concurrent"] = max(
+            self.stats["max_concurrent"],
+            sum(s is not None for s in self._slots))
+        r.generated.append(int(tok0[0]))
+        if len(r.generated) >= r.max_new or int(tok0[0]) == self.eos:
+            self._finish(b)
+        return int(tok0[0])
+
+    # ---------------------------------------------------------------- run
+    def run(self, max_steps: int = 1000):
+        """Serve every queued request; returns {rid: generated tokens}.
+        Semantics mirror ``RequestPool.run`` (EOS, per-request ``max_new``,
+        global ``max_steps`` decode budget)."""
+        srv = self.server
+        B = srv.batch
+        cur = jnp.zeros((B, 1), jnp.int32)
+        key = jax.random.PRNGKey(0)
+        steps = 0
+
+        with srv.mesh, hints.sharding_hints(mesh=srv.mesh):
+            while self.queue or any(s is not None for s in self._slots):
+                for b in range(B):
+                    if self._slots[b] is None and self.queue \
+                            and steps < max_steps:
+                        r = self.queue[0]
+                        key, sub = jax.random.split(key)
+                        tok = self._admit(b, r, sub)
+                        if tok is None:
+                            break               # blocks exhausted: wait
+                        self.queue.pop(0)
+                        cur = cur.at[b, 0].set(tok)
+                live = [b for b in range(B) if self._slots[b] is not None]
+                if not live:
+                    if steps >= max_steps:
+                        break
+                    if self.queue and not any(self._slots):
+                        # nothing live and head-of-queue cannot be admitted
+                        raise RuntimeError(
+                            "request needs more blocks than the pool has: "
+                            f"free={self.dense_pool.free_blocks} of "
+                            f"{self.dense_pool.num_blocks}")
+                    continue
+                if steps >= max_steps:
+                    for b in live:
+                        self._finish(b)
+                    break
+
+                need = max(self._slots[b]["req"].max_new -
+                           len(self._slots[b]["req"].generated)
+                           for b in live)
+                n = max(min(self.chunk, max_steps - steps, need), 1)
+
+                # Grow dense chains to cover the next n appended tokens;
+                # preempt latest-admitted rows when the pool runs dry.
+                for b in sorted(live,
+                                key=lambda x: self._slots[x]["seq"]):
+                    s = self._slots[b]
+                    if s is None:
+                        continue
+                    needed = -(-(s["length"] + n) // self.bs)
+                    needed = min(needed, self.nb_max)
+                    extra = needed - len(s["dense_ids"])
+                    if extra <= 0:
+                        continue
+                    ids = self._alloc_dense(extra)
+                    while ids is None:
+                        # Latest-admitted victim only: preempting a row
+                        # OLDER than b would break the monotone-progress
+                        # guarantee (the oldest request must never lose
+                        # its blocks to a newer one) — when nothing newer
+                        # than b exists, b preempts itself.
+                        victims = [x for x in live
+                                   if self._slots[x] is not None and x != b
+                                   and self._slots[x]["seq"] > s["seq"]]
+                        if not victims:
+                            break
+                        victim = max(victims,
+                                     key=lambda x: self._slots[x]["seq"])
+                        self._preempt(victim)
+                        ids = self._alloc_dense(extra)
+                    if ids is None:
+                        self._preempt(b)
+                        continue
+                    s["dense_ids"].extend(ids)
+                    self.caches = srv.grow_tables(
+                        self.caches,
+                        jnp.asarray(_table_row(s["dense_ids"],
+                                               self.nb_max)),
+                        jnp.int32(b))
+                live = [b for b in range(B) if self._slots[b] is not None]
+                if not live:
+                    continue
+
+                key, sub = jax.random.split(key)
+                toks, self.caches = srv.decode_many(srv.params, cur,
+                                                    self.caches, sub, n)
+                steps += n
+                host = jax.device_get(toks)
+                cur = toks[:, -1:]
+                for b in live:
+                    s = self._slots[b]
+                    if s is None:
+                        continue
+                    r = s["req"]
+                    for t in host[b]:
+                        r.generated.append(int(t))
+                        s["length"] += 1
+                        if int(t) == self.eos or \
+                                len(r.generated) >= r.max_new:
+                            self._finish(b)
+                            break
+        return dict(self.results)

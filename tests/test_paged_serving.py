@@ -1,0 +1,391 @@
+"""Paged serving path end-to-end: greedy parity vs the contiguous stack,
+masked (right-pad) prefill, the block-granular Scheduler, prefix-cache
+reuse, and preempt-to-recompute (PR 3, DESIGN §7)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import BlockSpec, get_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import RequestPool, Scheduler, Server
+from repro.dist import sharding as shd
+from repro.nn.transformer import TransformerLM
+from repro.serve.paged_kv import (PagedConfig, PagedDenseKVCache,
+                                  PagedWindowKVCache)
+
+
+def hybrid_cfg(window: int = 16, sparsity: int = 4, k_fixed: int = 0):
+    """The acceptance config: dense + window + MoSA layers in one stack."""
+    cfg = get_config("mosa-paper", preset="smoke", variant="mosa",
+                     sparsity=sparsity)
+    mosa = cfg.mosa if not k_fixed else dataclasses.replace(cfg.mosa,
+                                                            k_fixed=k_fixed)
+    return dataclasses.replace(
+        cfg, n_layers=3, mosa=mosa,
+        attention=dataclasses.replace(cfg.attention, window=window),
+        pattern=(BlockSpec("attn", "dense"), BlockSpec("attn_local", "dense"),
+                 BlockSpec("mosa", "dense")))
+
+
+def dense_window_cfg(window: int = 16):
+    """Stateless-prefix config (no MoSA): prefix-cache hits are exact."""
+    cfg = get_config("mosa-paper", preset="smoke", variant="dense")
+    return dataclasses.replace(
+        cfg, n_layers=2,
+        attention=dataclasses.replace(cfg.attention, window=window),
+        pattern=(BlockSpec("attn", "dense"),
+                 BlockSpec("attn_local", "dense")))
+
+
+# --------------------------------------------------------- decode parity
+def test_paged_generate_greedy_parity_hybrid():
+    """Acceptance: paged decode is numerically exact vs contiguous decode —
+    greedy token parity on the hybrid config (dense + window + MoSA)."""
+    cfg = hybrid_cfg()
+    B, ML, P, G = 2, 64, 11, 12
+    contig = Server(cfg, batch=B, max_len=ML)
+    paged = Server(cfg, batch=B, max_len=ML, params=contig.params,
+                   paged=PagedConfig(block_size=8))
+    prompts = jax.random.randint(jax.random.PRNGKey(0), (B, P), 2, cfg.vocab)
+    t1, _ = contig.generate(prompts, G)
+    t2, _ = paged.generate(prompts, G)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_paged_decode_many_matches_stepwise():
+    """The fused chunk decoder emits the per-token loop's tokens on paged
+    caches too (scan-fused decode over paged appends + kernel/ref path)."""
+    cfg = hybrid_cfg()
+    model = TransformerLM(cfg)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    B, P, G = 2, 8, 5
+    prompts = jax.random.randint(key, (B, P), 2, cfg.vocab)
+    paged = PagedConfig(block_size=8)
+
+    caches = model.init_cache(B, 32, jnp.float32, paged=paged)
+    lp, c0 = model.prefill(params, prompts, caches)
+    tok0 = jnp.argmax(lp[:, -1], -1).astype(jnp.int32)[:, None]
+    tok, cs, step = tok0, c0, []
+    for _ in range(G):
+        lg, cs = model.decode_step(params, tok, cs)
+        tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+        step.append(tok)
+    caches = model.init_cache(B, 32, jnp.float32, paged=paged)
+    _, c0 = model.prefill(params, prompts, caches)
+    fused, _ = jax.jit(model.decode_many, static_argnames=("n",))(
+        params, tok0, c0, None, n=G)
+    np.testing.assert_array_equal(np.asarray(jnp.concatenate(step, 1)),
+                                  np.asarray(fused))
+
+
+# ------------------------------------------------------- masked prefill
+def test_masked_prefill_padded_equals_unpadded():
+    """Regression for the left-pad bug: a right-padded bucket prefill with
+    a valid mask produces the SAME logits and greedy continuation as the
+    unpadded prompt (pads out of attention, selection, and cache lengths).
+    k_fixed pins the MoSA selection width so bucketing cannot change k."""
+    cfg = hybrid_cfg(k_fixed=8)
+    model = TransformerLM(cfg)
+    key = jax.random.PRNGKey(2)
+    params = model.init(key)
+    B, P, ML, bucket, G = 2, 10, 64, 16, 8
+    prompts = jax.random.randint(key, (B, P), 2, cfg.vocab)
+
+    c1 = model.init_cache(B, ML, jnp.float32)
+    l1, c1 = model.prefill(params, prompts, c1)
+    padded = jnp.pad(prompts, ((0, 0), (0, bucket - P)))
+    valid = jnp.broadcast_to(jnp.arange(bucket)[None] < P, (B, bucket))
+    c2 = model.init_cache(B, ML, jnp.float32)
+    l2, c2 = model.prefill(params, padded, c2, valid=valid,
+                           last_pos=jnp.full((B,), P - 1))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               atol=2e-5, rtol=2e-5)
+    t1 = jnp.argmax(l1[:, -1], -1).astype(jnp.int32)[:, None]
+    t2 = jnp.argmax(l2[:, -1], -1).astype(jnp.int32)[:, None]
+    for i in range(G):
+        g1, c1 = model.decode_step(params, t1, c1)
+        g2, c2 = model.decode_step(params, t2, c2)
+        t1 = jnp.argmax(g1[:, -1], -1).astype(jnp.int32)[:, None]
+        t2 = jnp.argmax(g2[:, -1], -1).astype(jnp.int32)[:, None]
+        np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2),
+                                      err_msg=f"step {i}")
+
+
+def test_request_pool_right_pad_serves_mosa():
+    """The continuous-batching pool path (bucketed single-row prefill ->
+    write_slot) on a MoSA config: served output matches an unpadded
+    whole-batch generate for a prompt whose bucket adds pads."""
+    cfg = get_config("mosa-paper", preset="smoke", variant="mosa")
+    cfg = dataclasses.replace(cfg, mosa=dataclasses.replace(cfg.mosa,
+                                                            k_fixed=8))
+    server = Server(cfg, batch=1, max_len=32)
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (5,), 2, cfg.vocab)
+    want, _ = server.generate(prompt[None], 6)          # unpadded reference
+    pool = RequestPool(server)                          # buckets 5 -> 8
+    rid = pool.submit(prompt, max_new=6)
+    out = pool.run()
+    np.testing.assert_array_equal(np.asarray(out[rid]),
+                                  np.asarray(want[0]))
+
+
+# ------------------------------------------------------------- scheduler
+def test_scheduler_serves_mixed_lengths():
+    cfg = hybrid_cfg()
+    B = 2
+    server = Server(cfg, batch=B, max_len=64,
+                    paged=PagedConfig(block_size=8, num_blocks=24,
+                                      num_window_blocks=2 * B))
+    sched = Scheduler(server, chunk=4)
+    want = {}
+    for i in range(4):
+        rid = sched.submit(jax.random.randint(jax.random.fold_in(
+            jax.random.PRNGKey(4), i), (5 + 3 * i,), 2, cfg.vocab),
+            max_new=3 + i)
+        want[rid] = 3 + i
+    out = sched.run()
+    assert {k: len(v) for k, v in out.items()} == want
+    # every block returns except the prefix-trie's retained entries
+    assert sched.dense_pool.free_blocks + sched.prefix.n_nodes == \
+        sched.dense_pool.num_blocks
+    assert sched.window_pool.free_blocks == sched.window_pool.num_blocks
+
+
+def test_scheduler_prefix_hit_exact_and_no_recompute():
+    """Acceptance: a shared-prefix batch is served WITHOUT recomputing the
+    shared blocks, and (on a stateless-prefix dense+window model) the hit
+    path emits exactly the no-prefix-cache tokens."""
+    cfg = dense_window_cfg()
+    B = 2
+    paged = PagedConfig(block_size=8, num_blocks=32, num_window_blocks=2 * B)
+    server = Server(cfg, batch=B, max_len=64, paged=paged)
+    shared = jax.random.randint(jax.random.PRNGKey(5), (17,), 2, cfg.vocab)
+    sufs = [jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(6), i),
+                               (3,), 2, cfg.vocab) for i in range(3)]
+
+    on = Scheduler(server, chunk=4, prefix_cache=True)
+    for s in sufs:
+        on.submit(jnp.concatenate([shared, s]), max_new=5)
+    got = on.run()
+    assert on.stats["prefix_hits"] >= 2
+    assert on.stats["prefix_hit_tokens"] >= 2 * 16
+    # shared span prefilled once, not three times
+    assert on.stats["prefilled_tokens"] <= 20 + 3 * 8
+
+    server2 = Server(cfg, batch=B, max_len=64, paged=paged,
+                     params=server.params)
+    off = Scheduler(server2, chunk=4, prefix_cache=False)
+    for s in sufs:
+        off.submit(jnp.concatenate([shared, s]), max_new=5)
+    want = off.run()
+    for rid in want:
+        np.testing.assert_array_equal(np.asarray(got[rid]),
+                                      np.asarray(want[rid]),
+                                      err_msg=f"request {rid}")
+
+
+def test_scheduler_preempts_to_recompute_and_completes():
+    """Exhausting the dense pool mid-decode preempts the latest-admitted
+    request (blocks freed, prompt+generated requeued) and everything still
+    runs to its full max_new."""
+    cfg = hybrid_cfg()
+    B = 2
+    server = Server(cfg, batch=B, max_len=64,
+                    paged=PagedConfig(block_size=8, num_blocks=5,
+                                      num_window_blocks=2 * B))
+    sched = Scheduler(server, chunk=4, prefix_cache=False)
+    for i in range(2):
+        sched.submit(jax.random.randint(jax.random.fold_in(
+            jax.random.PRNGKey(7), i), (10,), 2, cfg.vocab), max_new=12)
+    out = sched.run()
+    assert {k: len(v) for k, v in out.items()} == {0: 12, 1: 12}
+    assert sched.stats["preemptions"] >= 1
+    assert sched.dense_pool.free_blocks == sched.dense_pool.num_blocks
+
+
+def test_mosa_prefill_past_matches_one_shot():
+    """Layer-level: prefill(prefix) + prefill_past(suffix) reproduces the
+    one-shot training-style prefill — exactly under a constant-k schedule
+    (k_fixed), and at the one-shot selection WIDTH (k_for(total)) under
+    the growing T/rho schedule."""
+    from repro.configs.base import MoSAConfig
+    from repro.core.kv_cache import MoSAKVCache
+    from repro.core.mosa import MoSAAttention
+
+    key = jax.random.PRNGKey(12)
+    B, P, n = 2, 14, 8
+    x = jax.random.normal(key, (B, P, 64), jnp.float32)
+
+    # constant k: bitwise-equal selection, close K/V and suffix outputs
+    cfgk = MoSAConfig(n_mosa_heads=3, sparsity=4, n_dense_heads=0,
+                      d_head=8, k_fixed=6)
+    layer = MoSAAttention(64, cfgk)
+    params = layer.init(key)
+    c1 = MoSAKVCache.create(B, 3, 6, 8, jnp.float32)
+    y1, c1 = layer.prefill(params, x, c1)
+    c2 = MoSAKVCache.create(B, 3, 6, 8, jnp.float32)
+    _, c2 = layer.prefill(params, x[:, :n], c2)
+    y2s, c2 = layer.prefill_past(params, x[:, n:], c2)
+    np.testing.assert_array_equal(np.asarray(c1.idx), np.asarray(c2.idx))
+    np.testing.assert_allclose(np.asarray(c1.scores), np.asarray(c2.scores),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c1.k), np.asarray(c2.k),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(y1[:, n:]), np.asarray(y2s),
+                               atol=1e-4, rtol=1e-4)
+
+    # growing k = T/rho: continued prefill selects k_for(total) entries
+    # (not the full cache capacity)
+    cfgg = MoSAConfig(n_mosa_heads=3, sparsity=4, n_dense_heads=0,
+                      d_head=8, min_k=2)
+    layerg = MoSAAttention(64, cfgg)
+    paramsg = layerg.init(key)
+    kc = 8                                  # capacity > k_for(14) == 3
+    cg = MoSAKVCache.create(B, 3, kc, 8, jnp.float32)
+    _, cg = layerg.prefill(paramsg, x[:, :n], cg)
+    _, cg = layerg.prefill_past(paramsg, x[:, n:], cg)
+    n_sel = (np.asarray(cg.idx) >= 0).sum(-1)
+    assert (n_sel == layerg.k_for(P)).all(), n_sel
+
+
+def test_scheduler_preemption_tokens_exact_dense_window():
+    """Preempt-to-recompute must be INVISIBLE in the output for causal
+    (dense+window) models: a run forced through preemption emits exactly
+    the tokens of an uncontended run.  This also guards the freed-block
+    hygiene — a finished or preempted row whose device block table still
+    pointed at freed (then reallocated) blocks would corrupt a live row's
+    KV and change its greedy tokens."""
+    cfg = dense_window_cfg()
+    B = 2
+    prompts = [jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(11),
+                                                     i), (10,), 2, cfg.vocab)
+               for i in range(3)]
+    big = Server(cfg, batch=B, max_len=64,
+                 paged=PagedConfig(block_size=8, num_blocks=32,
+                                   num_window_blocks=2 * B))
+    ref_sched = Scheduler(big, chunk=4, prefix_cache=False)
+    for pr in prompts:
+        ref_sched.submit(pr, max_new=14)
+    want = ref_sched.run()
+    assert ref_sched.stats["preemptions"] == 0
+
+    tight = Server(cfg, batch=B, max_len=64, params=big.params,
+                   paged=PagedConfig(block_size=8, num_blocks=5,
+                                     num_window_blocks=2 * B))
+    sched = Scheduler(tight, chunk=4, prefix_cache=False)
+    for pr in prompts:
+        sched.submit(pr, max_new=14)
+    out = sched.run()
+    assert sched.stats["preemptions"] >= 1
+    for rid in want:
+        np.testing.assert_array_equal(np.asarray(out[rid]),
+                                      np.asarray(want[rid]),
+                                      err_msg=f"request {rid}")
+
+
+def test_scheduler_honors_eos():
+    cfg = hybrid_cfg()
+    server = Server(cfg, batch=2, max_len=64,
+                    paged=PagedConfig(block_size=8, num_blocks=24,
+                                      num_window_blocks=4))
+    probe = Scheduler(server, prefix_cache=False)
+    prompt = jax.random.randint(jax.random.PRNGKey(8), (6,), 2, cfg.vocab)
+    probe.submit(prompt, max_new=8)
+    ref = probe.run()
+    eos = int(ref[0][2])
+
+    server2 = Server(cfg, batch=2, max_len=64, params=server.params,
+                     paged=PagedConfig(block_size=8, num_blocks=24,
+                                       num_window_blocks=4))
+    sched = Scheduler(server2, eos=eos, prefix_cache=False)
+    sched.submit(prompt, max_new=8)
+    out = sched.run()
+    t = np.asarray(out[0])
+    assert t[-1] == eos and (t[:-1] != eos).all() and len(t) <= 8
+
+
+def test_scheduler_prefix_pure_dense_snapshot_free_depth():
+    """Pure paged-dense model: per-row state is table + length only, so a
+    hit can land on ANY chain depth — including mid-chain nodes that carry
+    no snapshot — and stays exact."""
+    cfg = dataclasses.replace(
+        get_config("mosa-paper", preset="smoke", variant="dense"),
+        n_layers=2)
+    B = 2
+    paged = PagedConfig(block_size=8, num_blocks=32, num_window_blocks=0)
+    server = Server(cfg, batch=B, max_len=64, paged=paged)
+    shared = jax.random.randint(jax.random.PRNGKey(9), (17,), 2, cfg.vocab)
+    tail = jax.random.randint(jax.random.PRNGKey(10), (2,), 2, cfg.vocab)
+    prompts = [shared,                                  # inserts the chain
+               jnp.concatenate([shared[:12], tail])]    # mid-chain hit @8
+
+    on = Scheduler(server, chunk=4, prefix_cache=True)
+    assert not on.need_snapshot
+    for pr in prompts:
+        on.submit(pr, max_new=5)
+    got = on.run()
+    assert on.stats["prefix_hits"] >= 1
+
+    server2 = Server(cfg, batch=B, max_len=64, paged=paged,
+                     params=server.params)
+    off = Scheduler(server2, chunk=4, prefix_cache=False)
+    for pr in prompts:
+        off.submit(pr, max_new=5)
+    want = off.run()
+    for rid in want:
+        np.testing.assert_array_equal(np.asarray(got[rid]),
+                                      np.asarray(want[rid]))
+
+
+# --------------------------------------------------------------- artifact
+def test_bench_serve_records_paged_acceptance():
+    """Acceptance: BENCH_serve.json records >=1.5x max concurrent requests
+    at a fixed cache-memory budget vs the contiguous slab path, and the
+    trajectory has grown a second datapoint."""
+    import json
+    from pathlib import Path
+    path = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+    assert path.exists(), "run `make bench-smoke`"
+    res = json.loads(path.read_text())
+    cap = res["paged"]["capacity"]
+    assert cap["capacity_ratio"] >= 1.5, cap
+    assert cap["paged_max_concurrent"] >= \
+        1.5 * cap["contiguous_max_concurrent"]
+    assert len(res.get("trajectory", [])) >= 2
+
+
+# --------------------------------------------------------------- sharding
+def test_paged_cache_axes_head_shard_over_model():
+    """Paged pools head-shard over ``model`` like their contiguous
+    counterparts; the block dim stays replicated; tables follow batch."""
+    mesh = make_host_mesh(tp=1)
+    dense = jax.eval_shape(lambda: PagedDenseKVCache.create(
+        2, 32, 4, 16, jnp.float32, block_size=8))
+    spec = shd.cache_spec(dense, mesh, "tp")
+    assert spec.k[0] is None and spec.k[2] == "model"
+    assert spec.block_table[0] is not None            # batch axes
+    win = jax.eval_shape(lambda: PagedWindowKVCache.create(
+        2, 16, 4, 16, jnp.float32, block_size=8))
+    wspec = shd.cache_spec(win, mesh, "tp")
+    assert wspec.k[2] == "model" and wspec.positions[0] is not None
+
+    # through the full tree path, stacked caches shift by the layer axis
+    stacked = jax.eval_shape(lambda: jax.tree.map(
+        lambda t: jnp.zeros((3,) + t.shape, t.dtype), dense))
+    sh = shd.cache_shardings({"scan": {"pos0": stacked}}, mesh, "tp")
+    assert sh["scan"]["pos0"].k.spec[3] == "model"
+
+
+def test_paged_server_cache_tree_shardings_resolve():
+    cfg = hybrid_cfg()
+    mesh = make_host_mesh(tp=1)
+    model = TransformerLM(cfg)
+    shapes = jax.eval_shape(lambda: model.init_cache(
+        2, 32, jnp.float32, paged=PagedConfig(block_size=8)))
+    sh = shd.cache_shardings(shapes, mesh, "tp")
+    assert jax.tree.structure(shapes) == jax.tree.structure(
+        jax.tree.map(lambda x: 0, sh))
