@@ -4,7 +4,8 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test collect lint smoke test-paged bench-smoke bench-check ci
+.PHONY: test collect lint smoke test-paged test-train bench-smoke \
+    bench-train bench-check ci
 
 # Tier-1 command from ROADMAP.md
 test:
@@ -32,6 +33,14 @@ test-paged:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -q tests/test_paged_kv.py \
 	    tests/test_paged_serving.py
 
+# Training subsystem suite (PR 4, DESIGN §8): fused-kernel VJP parity vs
+# jax.grad of the reference (interpret mode), microbatch/mixed-precision/
+# remat invariance, SIGTERM resume parity, IsoFLOP smoke sweep.  CPU-pinned
+# like test-paged (libtpu probe hangs).
+test-train:
+	JAX_PLATFORMS=cpu $(PY) -m pytest -q tests/test_train_grad.py \
+	    tests/test_train_subsystem.py
+
 # Decode-path perf trajectory: refreshes the TRACKED BENCH_serve.json
 # (fused vs per-token decode tok/s, MoSA vs dense KV bytes, and the paged
 # family: paged vs contiguous tok/s + capacity at fixed budget; CPU, tiny
@@ -39,12 +48,20 @@ test-paged:
 bench-smoke:
 	$(PY) -m benchmarks.serve_bench --out BENCH_serve.json
 
-# Fails if the newest trajectory entry regresses fused decode throughput
-# by >10% against the previous entry.
+# Train-step perf trajectory: refreshes the TRACKED BENCH_train.json
+# (dense vs MoSA-reference vs MoSA-fused-VJP step time + tokens/s, grad-
+# accumulation overhead; CPU, tiny scale — DESIGN §8 honesty note).
+bench-train:
+	JAX_PLATFORMS=cpu $(PY) -m benchmarks.train_bench --out BENCH_train.json
+
+# Fails if the newest trajectory entry regresses throughput by >10%
+# against the previous entry (serve: fused decode variants; train: the
+# compiled dense / mosa_ref step paths).
 bench-check:
 	$(PY) -m benchmarks.serve_bench --check --out BENCH_serve.json
+	$(PY) -m benchmarks.train_bench --check --out BENCH_train.json
 
-# bench-smoke runs BEFORE test: the suite validates the regenerated
-# BENCH_serve.json, so the artifact this ci run leaves behind is the one
-# that passed; bench-check then gates the refreshed trajectory.
-ci: lint collect test-paged bench-smoke bench-check test
+# bench-smoke/bench-train run BEFORE test: the suite validates the
+# regenerated artifacts, so what this ci run leaves behind is what passed;
+# bench-check then gates the refreshed trajectories.
+ci: lint collect test-paged test-train bench-smoke bench-train bench-check test

@@ -1,0 +1,91 @@
+"""Machine-speed calibration for the tracked perf trajectories.
+
+The BENCH_*.json regression gates compare absolute tokens/s across bench
+refreshes that may run days apart on a shared box whose effective speed
+drifts (cgroup cpu-shares, noisy neighbors, thermal state) — measured
+swings of +-20% on identical code, which is ABOVE the 10% gate tolerance.
+
+Fix: every refresh records ``calib_ms``, the median time of a fixed
+numpy matmul workload taken right before the measurements.  ``--check``
+then scales the previous entry's throughput by (prev_calib / cur_calib)
+before applying the tolerance: if the machine measures 20% slower today,
+yesterday's baseline is discounted 20% and only a CODE regression trips
+the gate.  An entry PREDATING calibration cannot be normalized at all — the
+gate skips that single transition pair (printing why) rather than compare
+numbers from unknown machine states; every later pair is normalized.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def calibrate_ms(n: int = 384, reps: int = 30) -> float:
+    """Median wall time (ms) of a fixed f32 matmul — the machine-speed
+    yardstick stored with each trajectory entry."""
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((n, n), dtype=np.float32)
+    b = rng.standard_normal((n, n), dtype=np.float32)
+    a @ b                                   # warm the BLAS path
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        a @ b
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e3
+
+
+def comparable(prev_entry: dict, cur_entry: dict) -> bool:
+    """Both entries carry a calibration — the pair can be normalized."""
+    return bool(prev_entry.get("calib_ms")) and \
+        bool(cur_entry.get("calib_ms"))
+
+
+def scale_baseline(old_tok_s: float, prev_entry: dict, cur_entry: dict):
+    """Discount a previous entry's throughput by the measured machine-speed
+    ratio.  Callers guard with ``comparable`` first."""
+    pc, cc = prev_entry.get("calib_ms"), cur_entry.get("calib_ms")
+    if not pc or not cc:
+        return old_tok_s, 1.0
+    ratio = pc / cc                          # <1 = machine slower now
+    return old_tok_s * ratio, ratio
+
+
+def check_gate(traj, values_of, tol: float, label: str) -> int:
+    """The shared ``--check`` gate both bench families run (serve + train).
+
+    ``traj``: the artifact's trajectory list; ``values_of(entry)`` ->
+    ``{variant: tok_s}`` extracts the gated throughputs of one entry.
+    Compares the two newest entries with the calibration-normalized
+    baseline; returns a process exit code (1 = regression) and prints the
+    verdict."""
+    if len(traj) < 2:
+        print(f"bench-check({label}): <2 trajectory entries, nothing to "
+              "compare")
+        return 0
+    prev, cur = traj[-2], traj[-1]
+    if not comparable(prev, cur):
+        print(f"bench-check({label}): previous entry predates machine-"
+              "speed calibration (benchmarks.calib) — absolute tok/s from "
+              "an unknown machine state is not comparable; skipping this "
+              "one transition pair")
+        return 0
+    old_vals, new_vals = values_of(prev), values_of(cur)
+    failures = []
+    ratio = 1.0
+    for v, old in old_vals.items():
+        new = new_vals.get(v)
+        if not (old and new):
+            continue
+        baseline, ratio = scale_baseline(old, prev, cur)
+        if new < (1.0 - tol) * baseline:
+            failures.append(f"{v}: {old} (machine-adjusted "
+                            f"{baseline:.0f}) -> {new} tok/s")
+    for line in failures:
+        print(f"bench-check({label}) REGRESSION", line)
+    if not failures:
+        print(f"bench-check({label}) OK ({old_vals} -> {new_vals}, "
+              f"machine-speed ratio {ratio:.2f}, tol {tol:.0%})")
+    return 1 if failures else 0

@@ -20,6 +20,10 @@ Measures, for dense vs MoSA variants of the paper's model at smoke scale:
 ``BENCH_serve.json`` carries a ``trajectory`` list (one summary entry per
 refresh); ``--check`` compares the two most recent entries and exits
 nonzero on a >10% fused-throughput regression (``make bench-check``).
+Entries carry a machine-speed calibration (``benchmarks.calib``) and the
+gate normalizes the baseline by it, so cross-refresh machine drift —
+measured at +-20% on this shared box, above the gate tolerance — cannot
+masquerade as a code regression.
 
 Two deliberate choices at smoke scale:
 
@@ -51,6 +55,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from benchmarks.calib import calibrate_ms, check_gate
 from repro.configs.base import get_config
 from repro.core.kv_cache import cache_nbytes
 from repro.dist import hints
@@ -236,6 +241,7 @@ def run_bench(batch: int = 2, prompt_len: int = 16, gen: int = 64,
                    "d_model": d_model, "mosa_recipe": TABLE2_RECIPE},
         "env": {"jax": jax.__version__, "backend": jax.default_backend(),
                 "devices": len(jax.devices())},
+        "calib_ms": round(calibrate_ms(), 3),
         "variants": {},
     }
     for v in variants:
@@ -260,6 +266,7 @@ def _append_trajectory(res: dict, prev: dict) -> None:
                      "fused_tok_s": {v: r.get("fused_tok_s")
                                      for v, r in prev["variants"].items()}})
     entry = {"entry": len(traj),
+             "calib_ms": res.get("calib_ms"),
              "fused_tok_s": {v: r["fused_tok_s"]
                              for v, r in res["variants"].items()}}
     if "paged" in res:
@@ -270,35 +277,25 @@ def _append_trajectory(res: dict, prev: dict) -> None:
     res["trajectory"] = traj[-12:]
 
 
+def _gated_values(entry: dict) -> dict:
+    vals = dict(entry.get("fused_tok_s") or {})
+    if entry.get("paged_fused_tok_s"):
+        vals["paged"] = entry["paged_fused_tok_s"]
+    return vals
+
+
 def check_regression(path: str, tol: float = 0.10) -> int:
     """``make bench-check``: fail (nonzero) when the newest trajectory
     entry regresses fused decode throughput by more than ``tol`` against
-    the previous entry, for any variant present in both."""
+    the previous entry's machine-speed-adjusted baseline (the shared gate
+    in ``benchmarks.calib``)."""
     import os
     if not os.path.exists(path):
         print(f"bench-check: {path} missing — run `make bench-smoke`")
         return 1
     res = json.loads(open(path).read())
-    traj = res.get("trajectory", [])
-    if len(traj) < 2:
-        print("bench-check: <2 trajectory entries, nothing to compare")
-        return 0
-    prev, cur = traj[-2], traj[-1]
-    failures = []
-    pairs = dict(prev.get("fused_tok_s") or {})
-    if prev.get("paged_fused_tok_s"):
-        pairs["paged"] = prev["paged_fused_tok_s"]
-    for v, old in pairs.items():
-        new = (cur.get("paged_fused_tok_s") if v == "paged"
-               else (cur.get("fused_tok_s") or {}).get(v))
-        if old and new and new < (1.0 - tol) * old:
-            failures.append(f"{v}: {old} -> {new} tok/s")
-    for line in failures:
-        print("bench-check REGRESSION", line)
-    if not failures:
-        print(f"bench-check OK ({prev.get('fused_tok_s')} -> "
-              f"{cur.get('fused_tok_s')}, tol {tol:.0%})")
-    return 1 if failures else 0
+    return check_gate(res.get("trajectory", []), _gated_values, tol,
+                      "serve")
 
 
 def main(argv=None):

@@ -1,0 +1,196 @@
+"""Train-step benchmark family — the training-path perf trajectory
+(DESIGN §8).
+
+Measures, at CPU smoke scale, the full donated train step (fwd + bwd +
+AdamW) built by ``repro.train.step.make_train_step``:
+
+  * ``dense``      — the dense baseline;
+  * ``mosa_ref``   — MoSA hybrid through the einsum reference path (the
+    dense-gather fallback every training step paid before the fused VJP
+    kernels existed);
+  * ``mosa_fused`` — the same model through ``impl="pallas"``: fused fwd
+    kernel + custom-VJP Pallas backward.
+
+plus a ``microbatch`` entry (same global batch split 2x) measuring the
+grad-accumulation overhead of the scan-based accumulator.
+
+Honesty note (same convention as BENCH_serve.json's paged family): on CPU
+the Pallas kernels run through the INTERPRETER, so ``fused_over_ref`` here
+tracks correctness/trajectory, not the TPU speedup — the ratio is recorded
+as measured, a value < 1 on CPU is expected, and the regression gate
+(``--check``) gates the compiled paths (dense / mosa_ref) only.  On a TPU
+host the same script lowers the kernels natively and the ratio becomes the
+paper-relevant number (the "no optimized kernel" caveat, closed).
+
+Writes ``BENCH_train.json`` (tracked; ``make bench-train`` refreshes it,
+``trajectory`` grows one entry per refresh, ``make bench-check`` gates).
+
+    PYTHONPATH=src python -m benchmarks.train_bench --steps 3
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.calib import calibrate_ms, check_gate
+from repro.configs.base import get_config
+from repro.nn.transformer import TransformerLM
+from repro.optim import schedules
+from repro.optim.optimizer import adamw
+from repro.train.step import make_train_step
+
+# Table-2 ppl-matched recipe at smoke scale (see serve_bench.py).
+TABLE2_RECIPE = {"sparsity": 32, "n_mosa_heads": 17}
+
+
+def _median(ts):
+    ts = sorted(ts)
+    return ts[len(ts) // 2]
+
+
+def _shrink(cfg, d_model: int):
+    if not d_model or d_model == cfg.d_model:
+        return cfg
+    d_head = max(d_model // 8, 8)
+    kw = {"attention": dataclasses.replace(cfg.attention, d_head=d_head)}
+    if cfg.mosa is not None:
+        kw["mosa"] = dataclasses.replace(cfg.mosa, d_head=d_head)
+    return dataclasses.replace(cfg, d_model=d_model, d_ff=2 * d_model, **kw)
+
+
+def _build_cfg(variant: str, seq: int, d_model: int, impl: str = "einsum"):
+    kw = dict(TABLE2_RECIPE) if variant == "mosa" else {}
+    cfg = _shrink(get_config("mosa-paper", preset="smoke", variant=variant,
+                             seq_len=seq, **kw), d_model)
+    if cfg.mosa is not None:
+        cfg = dataclasses.replace(
+            cfg, mosa=dataclasses.replace(cfg.mosa, impl=impl))
+    return cfg
+
+
+def time_step(cfg, batch: int, seq: int, steps: int = 3,
+              microbatches: int = 1) -> dict:
+    """Median full-train-step time (jit-warmed) and tokens/s."""
+    model = TransformerLM(cfg)
+    optimizer = adamw(schedules.linear_warmup(1e-3, 10), clip_norm=1.0)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = optimizer.init(params)
+    step = jnp.zeros((), jnp.int32)
+    fn = jax.jit(make_train_step(model, optimizer,
+                                 microbatches=microbatches),
+                 donate_argnums=(0, 1))
+    key = jax.random.PRNGKey(1)
+    tokens = jax.random.randint(key, (batch, seq), 2, cfg.vocab)
+    batch_d = {"tokens": tokens, "labels": tokens}
+    ts = []
+    for it in range(steps + 1):                 # iteration 0 warms compile
+        t0 = time.perf_counter()
+        params, opt_state, step, metrics = fn(params, opt_state, step,
+                                              batch_d)
+        jax.block_until_ready(metrics["loss"])
+        if it:
+            ts.append(time.perf_counter() - t0)
+    dt = _median(ts)
+    return {"step_ms": round(dt * 1e3, 2),
+            "tok_s": round(batch * seq / dt, 1),
+            "loss": float(metrics["loss"])}
+
+
+def run_bench(batch: int = 4, seq: int = 64, d_model: int = 64,
+              steps: int = 3) -> dict:
+    res = {
+        "benchmark": "train_step",
+        "config": {"arch": "mosa-paper", "preset": "smoke", "batch": batch,
+                   "seq": seq, "d_model": d_model,
+                   "mosa_recipe": TABLE2_RECIPE},
+        "env": {"jax": jax.__version__, "backend": jax.default_backend(),
+                "devices": len(jax.devices())},
+        "note": ("fused runs through the Pallas interpreter on non-TPU "
+                 "backends; fused_over_ref < 1 is expected on CPU (see "
+                 "module docstring)"),
+        "calib_ms": round(calibrate_ms(), 3),
+        "variants": {},
+    }
+    res["variants"]["dense"] = time_step(
+        _build_cfg("dense", seq, d_model), batch, seq, steps)
+    res["variants"]["mosa_ref"] = time_step(
+        _build_cfg("mosa", seq, d_model, impl="einsum"), batch, seq, steps)
+    res["variants"]["mosa_fused"] = time_step(
+        _build_cfg("mosa", seq, d_model, impl="pallas"), batch, seq, steps)
+    res["variants"]["microbatch2"] = time_step(
+        _build_cfg("mosa", seq, d_model), batch, seq, steps, microbatches=2)
+    ref = res["variants"]["mosa_ref"]
+    res["fused_over_ref"] = round(
+        res["variants"]["mosa_fused"]["tok_s"] / ref["tok_s"], 3)
+    res["accum_overhead"] = round(
+        ref["tok_s"] / res["variants"]["microbatch2"]["tok_s"], 3)
+    return res
+
+
+def _append_trajectory(res: dict, prev: dict) -> None:
+    traj = list(prev.get("trajectory", []))
+    entry = {"entry": len(traj),
+             "calib_ms": res.get("calib_ms"),
+             "tok_s": {v: r["tok_s"] for v, r in res["variants"].items()},
+             "fused_over_ref": res["fused_over_ref"]}
+    traj.append(entry)
+    res["trajectory"] = traj[-12:]
+
+
+# Gated variants: compiled paths only — mosa_fused is interpreter-bound off
+# TPU and its CPU timing noise would make the gate flap (module docstring).
+GATED = ("dense", "mosa_ref")
+
+
+def check_regression(path: str, tol: float = 0.10) -> int:
+    import os
+    if not os.path.exists(path):
+        print(f"bench-check: {path} missing — run `make bench-train`")
+        return 1
+    res = json.loads(open(path).read())
+    return check_gate(
+        res.get("trajectory", []),
+        lambda e: {v: (e.get("tok_s") or {}).get(v) for v in GATED},
+        tol, "train")
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--d-model", type=int, default=64,
+                   help="shrink the smoke model to this width")
+    p.add_argument("--steps", type=int, default=3)
+    p.add_argument("--out", default="BENCH_train.json")
+    p.add_argument("--check", action="store_true")
+    args = p.parse_args(argv)
+
+    if args.check:
+        raise SystemExit(check_regression(args.out))
+
+    try:
+        with open(args.out) as f:
+            prev = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        prev = {}
+    res = run_bench(args.batch, args.seq, args.d_model, args.steps)
+    _append_trajectory(res, prev)
+    print("name,us_per_call,derived")
+    for v, r in res["variants"].items():
+        print(f"train/{v},0.0,step={r['step_ms']}ms;tok_s={r['tok_s']}")
+    print(f"train/fused_over_ref,0.0,ratio={res['fused_over_ref']}")
+    print(f"train/accum_overhead,0.0,ratio={res['accum_overhead']}")
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

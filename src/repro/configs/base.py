@@ -63,6 +63,8 @@ class MoSAConfig:
     min_k: int = 2                # downstream-eval floor (paper §3.5)
     local_window: int = 0         # >0: dense heads become sliding-window (paper §3.4)
     k_fixed: int = 0              # >0: constant k regardless of T (paper §3.4 long-seq)
+    impl: str = "einsum"          # inner-attention impl: einsum | pallas
+                                  # (pallas = fused fwd + custom-VJP bwd kernels)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -55,7 +55,7 @@ def config(preset: str = "full", size: str = "tiny", variant: str = "dense",
            **kw):
     if preset == "smoke":
         cfg = paper_config("tiny", variant, sparsity=kw.pop("sparsity", 8),
-                           seq_len=128, **kw)
+                           seq_len=kw.pop("seq_len", 128), **kw)
         return dataclasses.replace(cfg, n_layers=2, vocab=512,
                                    name=cfg.name + "-smoke",
                                    pattern=cfg.pattern[:2] if cfg.pattern else ())

@@ -85,6 +85,14 @@ class HybridAttention:
             y = y + self._dense()(params["dense"], x, positions)
         return y
 
+    def router_health(self, params, x):
+        """Expert-choice health of the sparse side (train-loop telemetry);
+        None for the fixed/routing baselines, which have no learned router."""
+        sparse = self._sparse()
+        if not hasattr(sparse, "router_health"):
+            return None
+        return sparse.router_health(params["sparse"], x)
+
     # ---------------------------------------------------------------- serving
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
                    paged=None):

@@ -24,6 +24,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+from jax import ad_checkpoint
 
 from repro.configs.base import MoSAConfig
 from repro.core import rope as rope_lib
@@ -117,6 +118,12 @@ class MoSAAttention:
         # made it replicate B and all-reduce 16 GiB buffers per layer
         # (§Perf cell-2 it.8).
         xs = jax.vmap(lambda xb, ib: xb[ib])(x.astype(cd), idx)
+        # checkpoint_name: under remat="mosa" (train/step.py) the gathered
+        # activations and the selection are SAVED while projections and the
+        # kxk attention recompute — the gather/scatter pair is the one part
+        # of this layer whose recompute is memory-bound, not FLOP-bound.
+        xs = ad_checkpoint.checkpoint_name(xs, "mosa_gather")
+        r = ad_checkpoint.checkpoint_name(r, "mosa_router")
 
         q = jnp.einsum("bnkh,nhd->bnkd", xs, params["wq"].astype(cd),
                        preferred_element_type=jnp.float32).astype(cd)
@@ -173,6 +180,17 @@ class MoSAAttention:
         load = sel.sum(1).mean() / k             # avg #heads per token / k
         return {"score_mean": scores.mean(), "score_std": scores.std(),
                 "coverage": coverage, "load": load}
+
+    def router_health(self, params, x):
+        """Per-step router health for the train loop (see
+        ``repro.core.router.router_health_stats``): selection entropy,
+        token-drop rate, head utilization."""
+        from repro.core.router import router_health_stats
+        B, T, _ = x.shape
+        k = self.k_for(T)
+        scores = self.router.scores(params["router"], x)
+        r, idx = select_topk(scores, k, self.cfg.force_first_token)
+        return router_health_stats(r, idx, T)
 
     # ---------------------------------------------------------------- serving
     def prefill(self, params, x, cache: MoSAKVCache, positions=None,

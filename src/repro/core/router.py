@@ -70,6 +70,35 @@ def select_topk(scores, k: int, force_first: bool = True):
     return r, idx
 
 
+def router_health_stats(r, idx, T: int):
+    """Health metrics of one expert-choice selection (train-loop telemetry).
+
+    r, idx: (B, H, k) — ``select_topk`` output for a (B, H, T) score tensor.
+
+      * ``sel_entropy``   — entropy of the aggregate selection distribution
+        over token positions, normalized by log T.  Low = the heads
+        concentrate their k-budgets on few positions (router collapse —
+        every head picking the same tokens); ~uniform coverage scores near
+        the ceiling (the ceiling itself is (log B*H*k)/log T when
+        B*H*k < T).
+      * ``drop_rate``     — fraction of tokens selected by NO head; these
+        positions get zero sparse-attention output AND zero router gradient
+        this step (the paper's hybrid keeps dense heads partly for this).
+      * ``head_util``     — mean router score over selected tokens: how
+        strongly heads use their budget (scores sliding toward 0 = heads
+        going dead; the sigmoid scale makes 0.5 the indifference point).
+    """
+    B, H, k = idx.shape
+    sel = jax.nn.one_hot(idx, T, dtype=jnp.float32).sum(2)         # (B,H,T)
+    counts = sel.sum(1)                                            # (B,T)
+    drop_rate = (counts == 0).astype(jnp.float32).mean()
+    p = sel.sum((0, 1)) / (B * H * k)                              # (T,)
+    ent = -jnp.sum(jnp.where(p > 0, p * jnp.log(jnp.maximum(p, 1e-20)), 0.0))
+    return {"sel_entropy": ent / jnp.log(float(T)),
+            "drop_rate": drop_rate,
+            "head_util": r.mean()}
+
+
 def selection_mask(idx_q, idx_k):
     """Causal mask from original indices: allow iff I_q >= I_k.
 

@@ -188,6 +188,32 @@ def param_shardings(model, mesh: Mesh, rule_set: str = "fsdp_tp",
     return named_shardings(shapes, model.specs(), rules, mesh)
 
 
+def opt_shardings(param_sh, opt_shapes, mesh: Mesh):
+    """NamedSharding tree for an optimizer state built over ``param_sh``.
+
+    Moment-style states (``{"mu": ..., "nu": ...}`` — AdamW, or ``{"mom"}``
+    — SGD) carry one fp32 buffer per parameter and shard EXACTLY like the
+    parameter they track (so the update is local everywhere the param is);
+    anything unrecognized replicates.
+    """
+    moment_keys = {"mu", "nu", "mom"}
+    if isinstance(opt_shapes, dict) and set(opt_shapes) <= moment_keys:
+        return {k: param_sh for k in opt_shapes}
+    return jax.tree.map(lambda _: replicated(mesh), opt_shapes)
+
+
+def train_state_shardings(model, mesh: Mesh, rule_set: str, optimizer,
+                          shapes=None):
+    """(param_sh, opt_sh, scalar_sh) for the donated train step — the one
+    call ``repro.train.loop`` needs to place the whole training state."""
+    if shapes is None:
+        shapes = init_shapes(model)
+    param_sh = param_shardings(model, mesh, rule_set, shapes)
+    opt_shapes = jax.eval_shape(optimizer.init, shapes)
+    return param_sh, opt_shardings(param_sh, opt_shapes, mesh), \
+        replicated(mesh)
+
+
 # ------------------------------------------------------- cache spec table
 # Per-cache-type logical axes, one name (or None) per tensor dim, mirroring
 # each NamedTuple's field layout in ``repro.core.kv_cache``.  Resolution:

@@ -1,3 +1,30 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel package: fused MoSA attention (fwd + custom-VJP bwd) and
+flash attention, with pure-jnp oracles in ``ref``.
+
+Exports resolve lazily (PEP 562, the ``repro.serve`` pattern): importing
+``repro.core`` — whose MoSA layer only *conditionally* dispatches here under
+``impl="pallas"`` — must never pull ``jax.experimental.pallas`` eagerly.
+Leaf modules stay importable directly (``repro.kernels.ops`` etc.).
+"""
+
+_EXPORTS = {
+    "mosa_attention": "ops",
+    "flash_attention": "ops",
+    "mosa_attention_pallas": "mosa_attention",
+    "mosa_attention_fwd_res": "mosa_attention",
+    "mosa_attention_bwd_pallas": "mosa_backward",
+    "mosa_attention_trainable": "mosa_vjp",
+    "flash_attention_pallas": "flash_attention",
+    "mosa_attention_ref": "ref",
+    "flash_attention_ref": "ref",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+        mod = importlib.import_module(f"repro.kernels.{_EXPORTS[name]}")
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro.kernels' has no attribute {name!r}")

@@ -16,6 +16,13 @@ off by the wrapper.
 VMEM budget per grid step (defaults bq=bk=128, d<=128 padded):
   q block 128x128x4B = 64 KiB; k/v blocks 2x64 KiB; scores 128x128x4B = 64 KiB
   + accumulators — well under the ~16 MiB/core VMEM of v5e.
+
+Two entry points:
+  * ``mosa_attention_pallas``      — inference forward (router scaling fused),
+  * ``mosa_attention_fwd_res``     — training forward: emits the PRE-scale
+    output ``o_pre`` (fp32) and the per-query log-sum-exp ``lse`` (fp32), the
+    residuals the recompute-style backward kernels in ``mosa_backward.py``
+    need.  ``mosa_vjp.py`` stitches the two into a ``jax.custom_vjp``.
 """
 
 from __future__ import annotations
@@ -81,6 +88,55 @@ def _mosa_kernel(idx_ref, r_ref, q_ref, k_ref, v_ref, o_ref, *,
     o_ref[0] = out.astype(o_ref.dtype)
 
 
+def _mosa_fwd_res_kernel(idx_ref, r_ref, q_ref, k_ref, v_ref,
+                         o_ref, lse_ref, *, block_k: int, scale: float):
+    """Training forward: same streaming softmax as ``_mosa_kernel`` but emits
+    the residuals the backward pass needs — the UNSCALED output ``o_pre``
+    (router scaling applied outside so ``o_pre`` survives ``r == 0`` rows)
+    and ``lse = m + log(l)`` per query.  ``r_ref`` rides along unused so both
+    forward kernels share one BlockSpec layout."""
+    del r_ref
+    block_q, d = q_ref.shape[1], q_ref.shape[2]
+    S = k_ref.shape[1]
+    n_kb = S // block_k
+
+    q = q_ref[0].astype(jnp.float32) * scale                  # (bq, d)
+    qi = pl.program_id(1)
+    idx_q = jax.lax.dynamic_slice(idx_ref[0], (qi * block_q,), (block_q,))
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = jax.lax.dynamic_slice(
+            k_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice(
+            v_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
+        idx_k = jax.lax.dynamic_slice(idx_ref[0], (kb * block_k,), (block_k,))
+
+        s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        mask = (idx_q[:, None] >= idx_k[None, :]) & (idx_k >= 0)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1)
+        acc = acc * corr[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+
+    l_safe = jnp.maximum(l, 1e-30)
+    o_ref[0] = acc / l_safe[:, None]
+    lse_ref[0] = m + jnp.log(l_safe)
+
+
 @functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
                                              "interpret"))
 def mosa_attention_pallas(q, k, v, idx, r, *, block_q: int = 128,
@@ -118,3 +174,53 @@ def mosa_attention_pallas(q, k, v, idx, r, *, block_q: int = 128,
         interpret=interpret,
     )(idxf, rf, qf, kf, vf)
     return out.reshape(B, H, S, d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
+                                             "interpret"))
+def mosa_attention_fwd_res(q, k, v, idx, r, *, block_q: int = 128,
+                           block_k: int = 128, scale: float | None = None,
+                           interpret: bool = False):
+    """Training-path forward.  Same preconditions as ``mosa_attention_pallas``
+    (padded shapes from ops.py); returns ``(o_pre, lse)``:
+
+      o_pre: (B, H, S, d) fp32 — softmax(QK^T masked) V, BEFORE router scaling
+      lse:   (B, H, S)    fp32 — per-query log-sum-exp of the masked scores
+
+    The caller applies ``out = o_pre * r`` (XLA fuses the scale into the
+    kernel's consumer) and keeps both tensors as VJP residuals.
+    """
+    B, H, S, d = q.shape
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    scale = scale if scale is not None else d ** -0.5
+    BH = B * H
+    qf = q.reshape(BH, S, d)
+    kf = k.reshape(BH, S, d)
+    vf = v.reshape(BH, S, d)
+    idxf = idx.reshape(BH, S)
+    rf = r.reshape(BH, S).astype(jnp.float32)
+
+    grid = (BH, S // block_q)
+    kernel = functools.partial(_mosa_fwd_res_kernel, block_k=block_k,
+                               scale=scale)
+    o_pre, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, S), lambda b, i: (b, 0)),            # idx
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),      # r (unused)
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),  # q
+            pl.BlockSpec((1, S, d), lambda b, i: (b, 0, 0)),      # k
+            pl.BlockSpec((1, S, d), lambda b, i: (b, 0, 0)),      # v
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, d), jnp.float32),
+            jax.ShapeDtypeStruct((BH, S), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idxf, rf, qf, kf, vf)
+    return o_pre.reshape(B, H, S, d), lse.reshape(B, H, S)

@@ -1,0 +1,218 @@
+"""Pallas TPU backward kernels for the fused MoSA inner attention.
+
+Recompute-style (flash-attention bwd): neither kernel reads the O(S^2)
+probability matrix from memory — scores are recomputed from Q/K and the
+saved per-query log-sum-exp (``lse``), so the only extra residuals the
+forward keeps are ``o_pre`` (B,H,S,d fp32) and ``lse`` (B,H,S fp32).
+
+Math (S_ij = scale * q_i.k_j masked by I_q >= I_k; P = softmax rows;
+o_pre_i = sum_j P_ij v_j; out_i = r_i * o_pre_i; g = d out):
+
+  dr_i   = g_i . o_pre_i                       (router-score gradient — the
+                                                expert-choice learning path)
+  g~_i   = r_i * g_i
+  dV_j   = sum_i P_ij g~_i
+  dS_ij  = P_ij * (g~_i . v_j - delta_i),  delta_i = g~_i . o_pre_i
+  dQ_i   = scale * sum_j dS_ij k_j
+  dK_j   = scale * sum_i dS_ij q_i
+
+``delta`` and ``dr`` are O(S*d) elementwise reductions computed in plain jnp
+by the wrapper (``mosa_vjp.py``); the two kernels here carry the O(S^2*d)
+work and parallelize the same way the forward does — one (batch*head) slice
+per grid step, the dq kernel blocked over QUERIES, the dk/dv kernel blocked
+over KEYS, each streaming the opposite operand through VMEM:
+
+  _mosa_bwd_dq_kernel   grid (BH, S // block_q) -> dq block
+  _mosa_bwd_dkv_kernel  grid (BH, S // block_k) -> dk, dv blocks
+
+Masking note: rows ops.py padded (idx = +INT_MAX) see a garbage-but-finite
+``lse``; their cotangent ``g~`` arrives as exact zeros (the output slice
+pads cotangents with 0), so every term they touch vanishes — but ``P`` must
+still be recomputed with the explicit mask, because exp(NEG_INF - lse) is
+NOT ~0 when lse itself is ~NEG_INF (the empty-row case).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _mosa_bwd_dq_kernel(idx_ref, q_ref, k_ref, v_ref, gt_ref, lse_ref,
+                        delta_ref, dq_ref, *, block_k: int, scale: float):
+    """Grid (BH, S // block_q).  Refs (VMEM blocks):
+
+    idx_ref:   (1, S)
+    q_ref:     (1, block_q, d)
+    k_ref:     (1, S, d)
+    v_ref:     (1, S, d)
+    gt_ref:    (1, block_q, d) — g~ = r * g, fp32
+    lse_ref:   (1, block_q)    fp32
+    delta_ref: (1, block_q)    fp32
+    dq_ref:    (1, block_q, d)
+    """
+    block_q, d = q_ref.shape[1], q_ref.shape[2]
+    S = k_ref.shape[1]
+    n_kb = S // block_k
+
+    q = q_ref[0].astype(jnp.float32)                           # (bq, d)
+    gt = gt_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+    qi = pl.program_id(1)
+    idx_q = jax.lax.dynamic_slice(idx_ref[0], (qi * block_q,), (block_q,))
+
+    def body(kb, acc):
+        k_blk = jax.lax.dynamic_slice(
+            k_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice(
+            v_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
+        idx_k = jax.lax.dynamic_slice(idx_ref[0], (kb * block_k,), (block_k,))
+
+        s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = (idx_q[:, None] >= idx_k[None, :]) & (idx_k >= 0)[None, :]
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)    # (bq, bk)
+        dp = jax.lax.dot_general(gt, v_blk, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None])
+        return acc + jax.lax.dot_general(
+            ds, k_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    dq = jax.lax.fori_loop(0, n_kb, body, acc0) * scale
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+
+
+def _mosa_bwd_dkv_kernel(idx_ref, q_ref, k_ref, v_ref, gt_ref, lse_ref,
+                         delta_ref, dk_ref, dv_ref, *, block_q: int,
+                         scale: float):
+    """Grid (BH, S // block_k).  Refs:
+
+    idx_ref:   (1, S)
+    q_ref:     (1, S, d) — all queries
+    k_ref:     (1, block_k, d)
+    v_ref:     (1, block_k, d)
+    gt_ref:    (1, S, d) fp32
+    lse_ref:   (1, S)    fp32
+    delta_ref: (1, S)    fp32
+    dk_ref:    (1, block_k, d)
+    dv_ref:    (1, block_k, d)
+    """
+    block_k, d = k_ref.shape[1], k_ref.shape[2]
+    S = q_ref.shape[1]
+    n_qb = S // block_q
+
+    k = k_ref[0].astype(jnp.float32)                           # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    ki = pl.program_id(1)
+    idx_k = jax.lax.dynamic_slice(idx_ref[0], (ki * block_k,), (block_k,))
+
+    def body(qb, carry):
+        dk_acc, dv_acc = carry
+        q_blk = jax.lax.dynamic_slice(
+            q_ref[0], (qb * block_q, 0), (block_q, d)).astype(jnp.float32)
+        gt_blk = jax.lax.dynamic_slice(
+            gt_ref[0], (qb * block_q, 0), (block_q, d)).astype(jnp.float32)
+        lse_blk = jax.lax.dynamic_slice(lse_ref[0], (qb * block_q,),
+                                        (block_q,))
+        delta_blk = jax.lax.dynamic_slice(delta_ref[0], (qb * block_q,),
+                                          (block_q,))
+        idx_q = jax.lax.dynamic_slice(idx_ref[0], (qb * block_q,), (block_q,))
+
+        s = jax.lax.dot_general(q_blk, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = (idx_q[:, None] >= idx_k[None, :]) & (idx_k >= 0)[None, :]
+        p = jnp.where(mask, jnp.exp(s - lse_blk[:, None]), 0.0)  # (bq, bk)
+        dv_acc = dv_acc + jax.lax.dot_general(
+            p, gt_blk, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(gt_blk, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_blk[:, None])
+        dk_acc = dk_acc + jax.lax.dot_general(
+            ds, q_blk, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return dk_acc, dv_acc
+
+    z = jnp.zeros((block_k, d), jnp.float32)
+    dk, dv = jax.lax.fori_loop(0, n_qb, body, (z, z))
+    dk_ref[0] = (dk * scale).astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
+                                             "interpret"))
+def mosa_attention_bwd_pallas(q, k, v, idx, gt, lse, delta, *,
+                              block_q: int = 128, block_k: int = 128,
+                              scale: float | None = None,
+                              interpret: bool = False):
+    """Backward dispatch: two pallas_calls sharing one residual layout.
+
+    q, k, v: (B, H, S, d) (padded, see ops.py); idx: (B, H, S) int32;
+    gt (= r * g): (B, H, S, d) fp32; lse, delta: (B, H, S) fp32.
+    Returns (dq, dk, dv) in the dtypes of (q, k, v).
+    """
+    B, H, S, d = q.shape
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    scale = scale if scale is not None else d ** -0.5
+    BH = B * H
+    qf, kf, vf = (x.reshape(BH, S, d) for x in (q, k, v))
+    gtf = gt.reshape(BH, S, d).astype(jnp.float32)
+    idxf = idx.reshape(BH, S)
+    lsef = lse.reshape(BH, S)
+    deltaf = delta.reshape(BH, S)
+
+    row = lambda b, i: (b, 0)
+    blk1 = lambda b, i: (b, i)
+    rowd = lambda b, i: (b, 0, 0)
+    blkd = lambda b, i: (b, i, 0)
+
+    dq = pl.pallas_call(
+        functools.partial(_mosa_bwd_dq_kernel, block_k=block_k, scale=scale),
+        grid=(BH, S // block_q),
+        in_specs=[
+            pl.BlockSpec((1, S), row),                 # idx
+            pl.BlockSpec((1, block_q, d), blkd),       # q
+            pl.BlockSpec((1, S, d), rowd),             # k
+            pl.BlockSpec((1, S, d), rowd),             # v
+            pl.BlockSpec((1, block_q, d), blkd),       # gt
+            pl.BlockSpec((1, block_q), blk1),          # lse
+            pl.BlockSpec((1, block_q), blk1),          # delta
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), blkd),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        interpret=interpret,
+    )(idxf, qf, kf, vf, gtf, lsef, deltaf)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_mosa_bwd_dkv_kernel, block_q=block_q, scale=scale),
+        grid=(BH, S // block_k),
+        in_specs=[
+            pl.BlockSpec((1, S), row),                 # idx
+            pl.BlockSpec((1, S, d), rowd),             # q
+            pl.BlockSpec((1, block_k, d), blkd),       # k
+            pl.BlockSpec((1, block_k, d), blkd),       # v
+            pl.BlockSpec((1, S, d), rowd),             # gt
+            pl.BlockSpec((1, S), row),                 # lse
+            pl.BlockSpec((1, S), row),                 # delta
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, d), blkd),
+            pl.BlockSpec((1, block_k, d), blkd),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, d), k.dtype),
+            jax.ShapeDtypeStruct((BH, S, d), v.dtype),
+        ],
+        interpret=interpret,
+    )(idxf, qf, kf, vf, gtf, lsef, deltaf)
+
+    return (dq.reshape(B, H, S, d), dk.reshape(B, H, S, d),
+            dv.reshape(B, H, S, d))

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.mosa_attention import mosa_attention_pallas
+from repro.kernels.mosa_vjp import mosa_attention_trainable
 
 LANE = 128
 
@@ -43,6 +43,12 @@ def mosa_attention(q, k, v, idx, r, *, block_q: int = 128, block_k: int = 128,
 
     q,k,v: (B,H,S,d); idx: (B,H,S) sorted ascending; r: (B,H,S) fp32.
     Returns (B,H,S,d) in q.dtype.
+
+    Differentiable: routed through the ``jax.custom_vjp`` in
+    ``kernels/mosa_vjp.py`` — forward-only callers run the original fused
+    kernel; under ``jax.grad`` the Pallas backward kernels produce
+    dq/dk/dv/dr (pad/slice shape hygiene here differentiates transparently:
+    cotangents of the output slice arrive zero-padded).
     """
     interpret = _interpret_default() if interpret is None else interpret
     B, H, S, d = q.shape
@@ -58,8 +64,9 @@ def mosa_attention(q, k, v, idx, r, *, block_q: int = 128, block_k: int = 128,
     idxp = _pad_to(idx, 2, bq, value=jnp.iinfo(jnp.int32).max)
     rp = _pad_to(r, 2, bq, value=0.0)
 
-    out = mosa_attention_pallas(qp, kp, vp, idxp, rp, block_q=bq, block_k=bk,
-                                scale=scale, interpret=interpret)
+    out = mosa_attention_trainable(qp, kp, vp, idxp, rp, block_q=bq,
+                                   block_k=bk, scale=scale,
+                                   interpret=interpret)
     return out[:, :, :S, :d]
 
 

@@ -182,6 +182,21 @@ def set_dense_tables(caches, dense_row, b):
     return jax.tree_util.tree_map_with_path(one, caches, is_leaf=_is_paged)
 
 
+def set_window_tables(caches, window_row, b):
+    """Point row ``b``'s window-ring block tables at ``window_row`` — the
+    lazy-ring growth write (rings allocate blocks on first write, not at
+    admission; -1 tail entries mean 'not yet written this far')."""
+    def one(path, leaf):
+        if not isinstance(leaf, PagedWindowKVCache):
+            return leaf
+        if _is_stacked(path):
+            bt = leaf.block_table.at[:, b].set(window_row[None])
+        else:
+            bt = leaf.block_table.at[b].set(window_row)
+        return leaf._replace(block_table=bt)
+    return jax.tree_util.tree_map_with_path(one, caches, is_leaf=_is_paged)
+
+
 class Server:
     def __init__(self, model_cfg, mesh=None, rule_set: str = "tp",
                  max_len: int = 256, batch: int = 4, params=None,
@@ -292,6 +307,9 @@ class Server:
                                    out_shardings=self.cache_sh)
         self.grow_tables = jax.jit(set_dense_tables, donate_argnums=(0,),
                                    out_shardings=self.cache_sh)
+        self.grow_window_tables = jax.jit(set_window_tables,
+                                          donate_argnums=(0,),
+                                          out_shardings=self.cache_sh)
 
         if params is None:
             with mesh:

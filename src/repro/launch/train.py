@@ -1,201 +1,27 @@
-"""End-to-end distributed training driver.
+"""CLI face of the training subsystem (``repro.train``, DESIGN §8).
 
-Builds the full stack for one (arch, shape, mesh) choice:
-  data pipeline -> sharded init -> pjit'd train_step (fwd+bwd+AdamW) ->
-  checkpoint/restart -> straggler monitor -> preemption handling.
-
-Usable as a library (``Trainer``) and as a CLI:
+The driver itself — resumable loop, donated train step, microbatch
+accumulation, mixed precision, router telemetry — lives in
+``repro.train.loop`` / ``repro.train.step``; this module parses flags,
+builds a ``TrainConfig``, and runs it.  ``TrainConfig`` / ``Trainer`` /
+``make_train_step`` are re-exported here for compatibility (they moved in
+the PR that introduced ``repro.train``).
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \\
       --preset smoke --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+
+  # the paper's IsoFLOP smoke sweep (dense vs MoSA at one matched budget):
+  PYTHONPATH=src python -m repro.launch.train --isoflop --steps 20 \\
+      --batch 4 --seq 64
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
-import os
-import time
-from functools import partial
-from typing import Any, Optional
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.checkpoint import checkpoint as ckpt_lib
-from repro.configs.base import ModelConfig, get_config
-from repro.data.pipeline import PackedLMDataset, Prefetcher, SyntheticCorpus
-from repro.dist import sharding as shd
-from repro.dist import hints
-from repro.dist.fault_tolerance import (Heartbeat, PreemptionHandler,
-                                        StragglerMonitor, elastic_plan)
-from repro.launch import mesh as mesh_lib
-from repro.nn.module import init_shapes
-from repro.nn.transformer import TransformerLM
-from repro.optim import schedules
-from repro.optim.optimizer import adamw, apply_updates
-
-
-@dataclasses.dataclass
-class TrainConfig:
-    arch: str = "mosa-paper"
-    preset: str = "full"
-    seq_len: int = 1024
-    global_batch: int = 64
-    steps: int = 100
-    lr: float = 2.5e-4
-    warmup: int = 400
-    clip_norm: float = 0.25
-    weight_decay: float = 0.0
-    seed: int = 0
-    rule_set: str = "tp"
-    ckpt_dir: Optional[str] = None
-    ckpt_every: int = 200
-    keep_last: int = 3
-    log_every: int = 10
-    mesh_shape: Optional[tuple] = None   # None = all local devices
-    arch_kwargs: dict = dataclasses.field(default_factory=dict)
-
-
-def make_train_step(model: TransformerLM, optimizer):
-    def train_step(params, opt_state, step, batch):
-        (loss, metrics), grads = jax.value_and_grad(
-            model.loss, has_aux=True)(params, batch)
-        updates, opt_state, opt_m = optimizer.update(grads, opt_state,
-                                                     params, step)
-        params = apply_updates(params, updates)
-        metrics = {**metrics, **opt_m, "loss": loss}
-        return params, opt_state, step + 1, metrics
-
-    return train_step
-
-
-class Trainer:
-    def __init__(self, cfg: TrainConfig, model_cfg: Optional[ModelConfig] = None):
-        self.cfg = cfg
-        self.model_cfg = model_cfg or get_config(cfg.arch, preset=cfg.preset,
-                                                 **cfg.arch_kwargs)
-        self.model = TransformerLM(self.model_cfg)
-        if cfg.mesh_shape:
-            axes = ("pod", "data", "model")[-len(cfg.mesh_shape):]
-            self.mesh = mesh_lib.make_mesh(cfg.mesh_shape, axes)
-        else:
-            plan = elastic_plan(len(jax.devices()), tp=1)
-            self.mesh = mesh_lib.make_mesh(plan["shape"], plan["axes"])
-        self.optimizer = adamw(
-            schedules.linear_warmup(cfg.lr, cfg.warmup),
-            weight_decay=cfg.weight_decay, clip_norm=cfg.clip_norm)
-
-        # shardings
-        shapes = init_shapes(self.model)
-        self.param_sh = shd.param_shardings(self.model, self.mesh,
-                                            cfg.rule_set, shapes)
-        opt_shapes = jax.eval_shape(self.optimizer.init, shapes)
-        self.opt_sh = {
-            "mu": self.param_sh, "nu": self.param_sh,
-        } if set(opt_shapes) == {"mu", "nu"} else jax.tree.map(
-            lambda _: shd.replicated(self.mesh), opt_shapes)
-        self.batch_sh = shd.batch_sharding(self.mesh, cfg.rule_set)
-        self.scalar_sh = shd.replicated(self.mesh)
-
-        step_fn = make_train_step(self.model, self.optimizer)
-        self.train_step = jax.jit(
-            step_fn,
-            in_shardings=(self.param_sh, self.opt_sh, self.scalar_sh,
-                          jax.tree.map(lambda _: self.batch_sh,
-                                       {"tokens": 0, "labels": 0})),
-            out_shardings=(self.param_sh, self.opt_sh, self.scalar_sh, None),
-            donate_argnums=(0, 1),
-        )
-
-        # data
-        n_data = 1
-        for a in ("pod", "data"):
-            n_data *= self.mesh.shape.get(a, 1)
-        self.dataset = PackedLMDataset(
-            SyntheticCorpus(vocab=self.model_cfg.vocab, seed=cfg.seed),
-            seq_len=cfg.seq_len, global_batch=cfg.global_batch,
-            shard_index=0, shard_count=1)  # single-host: full batch here
-
-        self.monitor = StragglerMonitor()
-        self.preempt: Optional[PreemptionHandler] = None
-
-    # ------------------------------------------------------------------ state
-    def init_state(self):
-        key = jax.random.PRNGKey(self.cfg.seed)
-        with self.mesh, hints.sharding_hints(mesh=self.mesh):
-            params = jax.jit(self.model.init,
-                             out_shardings=self.param_sh)(key)
-            opt_state = jax.jit(self.optimizer.init,
-                                out_shardings=self.opt_sh)(params)
-        step = jnp.zeros((), jnp.int32)
-        return params, opt_state, step
-
-    def restore_or_init(self):
-        cfg = self.cfg
-        if cfg.ckpt_dir and ckpt_lib.latest_step(cfg.ckpt_dir) is not None:
-            shapes = init_shapes(self.model)
-            opt_shapes = jax.eval_shape(self.optimizer.init, shapes)
-            tree = {"params": shapes, "opt": opt_shapes}
-            sh = {"params": self.param_sh, "opt": self.opt_sh}
-            restored, extra = ckpt_lib.restore(cfg.ckpt_dir, tree,
-                                               shardings=sh)
-            step = jnp.asarray(extra.get("step", 0), jnp.int32)
-            return restored["params"], restored["opt"], step, int(extra.get("step", 0))
-        params, opt, step = self.init_state()
-        return params, opt, step, 0
-
-    # ------------------------------------------------------------------ train
-    def run(self, steps: Optional[int] = None, install_signals: bool = True):
-        cfg = self.cfg
-        steps = steps if steps is not None else cfg.steps
-        params, opt_state, step, start = self.restore_or_init()
-        self.preempt = PreemptionHandler() if install_signals else None
-        checkpointer = (ckpt_lib.AsyncCheckpointer(cfg.ckpt_dir, cfg.keep_last)
-                        if cfg.ckpt_dir else None)
-        hb = Heartbeat(cfg.ckpt_dir, rank=0) if cfg.ckpt_dir else None
-        prefetch = Prefetcher(self.dataset, start_step=start)
-        history = []
-        try:
-            with self.mesh, hints.sharding_hints(mesh=self.mesh):
-                for i in range(start, steps):
-                    data_step, batch = prefetch.next()
-                    batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                    t0 = time.perf_counter()
-                    params, opt_state, step, metrics = self.train_step(
-                        params, opt_state, step, batch)
-                    metrics = {k: float(v) for k, v in metrics.items()}
-                    dt = time.perf_counter() - t0
-                    straggler = self.monitor.record(i, dt)
-                    if hb:
-                        hb.beat(i)
-                    if i % cfg.log_every == 0 or i == steps - 1:
-                        history.append({"step": i, "dt": dt, **metrics})
-                        print(f"step {i:6d} loss {metrics['loss']:.4f} "
-                              f"ppl {metrics['ppl']:.2f} "
-                              f"gnorm {metrics['grad_norm']:.3f} "
-                              f"{dt*1e3:.0f}ms"
-                              + (" [straggler]" if straggler else ""))
-                    want_ckpt = checkpointer and (
-                        (i + 1) % cfg.ckpt_every == 0 or i == steps - 1 or
-                        (self.preempt and self.preempt.requested))
-                    if want_ckpt:
-                        checkpointer.save(
-                            i + 1, {"params": params, "opt": opt_state},
-                            extra_meta={"step": i + 1,
-                                        "model": self.model_cfg.name})
-                    if self.preempt and self.preempt.requested:
-                        print(f"preemption requested; checkpointed at {i+1}")
-                        break
-        finally:
-            prefetch.close()
-            if checkpointer:
-                checkpointer.wait()
-            if self.preempt:
-                self.preempt.restore()
-        return params, opt_state, history
+from repro.train.loop import TrainConfig, Trainer          # noqa: F401
+from repro.train.step import make_train_step               # noqa: F401
 
 
 def main(argv=None):
@@ -214,7 +40,37 @@ def main(argv=None):
     p.add_argument("--ckpt-every", type=int, default=200)
     p.add_argument("--rule-set", default="tp")
     p.add_argument("--log-every", type=int, default=10)
+    p.add_argument("--microbatch", type=int, default=1,
+                   help="gradient-accumulation splits per step")
+    p.add_argument("--compute", default=None, choices=[None, "bfloat16",
+                                                       "float32"],
+                   help="bfloat16 = bf16-compute/fp32-master")
+    p.add_argument("--remat", default=None,
+                   choices=[None, "none", "full", "dots_saveable", "mosa"])
+    p.add_argument("--mosa-impl", default=None,
+                   choices=[None, "einsum", "pallas"],
+                   help="pallas = fused fwd + custom-VJP bwd kernels")
+    p.add_argument("--isoflop", action="store_true",
+                   help="run the FLOP-matched dense-vs-MoSA sweep instead "
+                        "of a single config")
     args = p.parse_args(argv)
+
+    if args.isoflop:
+        from repro.train.isoflop import isoflop_sweep, run_isoflop
+        points = isoflop_sweep(
+            preset=args.preset, T=args.seq,
+            sparsities=(args.sparsity,) if args.sparsity else (8,))
+        results = run_isoflop(
+            points, steps=args.steps, seq_len=args.seq,
+            global_batch=args.batch, ckpt_root=args.ckpt_dir,
+            train_kw={"lr": args.lr, "warmup": args.warmup,
+                      "rule_set": args.rule_set,
+                      "log_every": args.log_every,
+                      "microbatch": args.microbatch,
+                      "compute": args.compute, "remat": args.remat,
+                      "mosa_impl": args.mosa_impl})
+        print(json.dumps(results, indent=2, default=float))
+        return
 
     akw = {}
     if args.variant is not None:
@@ -225,7 +81,9 @@ def main(argv=None):
                       global_batch=args.batch, seq_len=args.seq, lr=args.lr,
                       warmup=args.warmup, ckpt_dir=args.ckpt_dir,
                       ckpt_every=args.ckpt_every, rule_set=args.rule_set,
-                      log_every=args.log_every, arch_kwargs=akw)
+                      log_every=args.log_every, arch_kwargs=akw,
+                      microbatch=args.microbatch, compute=args.compute,
+                      remat=args.remat, mosa_impl=args.mosa_impl)
     trainer = Trainer(cfg)
     _, _, history = trainer.run()
     print(json.dumps({"final": history[-1] if history else None,

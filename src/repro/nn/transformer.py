@@ -117,7 +117,8 @@ class Block:
             return HybridAttention(c.d_model, c.mosa, c.attention.rope_theta,
                                    rotary_frac=0.5, param_dtype=c.pdtype,
                                    compute_dtype=c.cdtype,
-                                   variant=c.sparse_variant)
+                                   variant=c.sparse_variant,
+                                   impl=c.mosa.impl)
         if kind == "mamba":
             return MambaBlock(c.d_model, c.mamba, c.pdtype, c.cdtype)
         if kind == "mlstm":
@@ -359,10 +360,23 @@ class TransformerLM:
             return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
         if self.cfg.remat == "dots_saveable":
             return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+        if self.cfg.remat == "mosa":
+            # Checkpoint AROUND the sparse gather (repro.core.mosa tags the
+            # gathered activations and selected router scores with
+            # checkpoint_name): the gather/scatter pair is memory-bound and
+            # saved; projections, the kxk attention, and the FFN recompute.
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.save_only_these_names(
+                    "mosa_gather", "mosa_router"))
         return fn
 
     def backbone(self, params, x, positions=None):
-        """(B, T, h) -> (B, T, h) hidden states + aux loss."""
+        """(B, T, h) -> (B, T, h) hidden states + aux loss.
+
+        NOTE: ``router_health`` below mirrors this head/scan/tail walk
+        (it must read each layer's REAL input without perturbing the
+        remat'd hot path here) — keep param addressing and scan structure
+        changes in sync with it."""
         head, p, units, tail_start, pattern = self._layout()
         blocks = self._blocks()
         aux_total = jnp.zeros((), jnp.float32)
@@ -400,6 +414,78 @@ class TransformerLM:
             x = self._constrain(x)
             aux_total = aux_total + a
         return x, aux_total
+
+    def router_health(self, params, tokens=None, positions=None,
+                      inputs_embeds=None):
+        """Expert-choice router health averaged over every MoSA layer
+        (selection entropy, token-drop rate, head utilization — see
+        ``repro.core.router.router_health_stats``).  Walks the backbone with
+        the REAL layer inputs (each layer's health reflects the activations
+        it actually routes), collecting stats from each hybrid mixer's
+        sparse side; scanned super-blocks accumulate through the carry.
+        Returns {} for models with no learned sparse router.
+
+        Mirrors ``backbone``'s head/scan/tail traversal (see the note
+        there); a hook inside ``backbone`` itself would drag telemetry
+        into the remat'd training graph.
+        """
+        head, p, units, tail_start, pattern = self._layout()
+        blocks = self._blocks()
+        x = self._embed_tokens(params, tokens, inputs_embeds)
+        KEYS = ("sel_entropy", "drop_rate", "head_util")
+
+        def is_routed(block):      # static: spec + variant decide it
+            if block.spec.mixer != "mosa":
+                return False
+            m = block.mixer_module()
+            return hasattr(m, "router_health") and \
+                hasattr(m._sparse(), "router_health")
+
+        def block_stats(block, bp, x):
+            xin = block._norm()(bp["norm1"], x)
+            return block.mixer_module().router_health(bp["mixer"], xin)
+
+        totals = {k: jnp.zeros((), jnp.float32) for k in KEYS}
+        n_layers = 0
+
+        for i in range(head):
+            bp = params["layers"]["tail"][f"layer{i}"]
+            if is_routed(blocks[i]):
+                s = block_stats(blocks[i], bp, x)
+                totals = {k: totals[k] + s[k] for k in KEYS}
+                n_layers += 1
+            x, _ = blocks[i](bp, x, positions)
+
+        if units:
+            unit_blocks = blocks[head:head + p]
+            mosa_pos = [j for j in range(p) if is_routed(unit_blocks[j])]
+
+            def scan_body(carry, unit_params):
+                x, tot = carry
+                for j in range(p):
+                    if j in mosa_pos:
+                        s = block_stats(unit_blocks[j],
+                                        unit_params[f"pos{j}"], x)
+                        tot = {k: tot[k] + s[k] for k in KEYS}
+                    x, _ = unit_blocks[j](unit_params[f"pos{j}"], x,
+                                          positions)
+                return (x, tot), None
+
+            (x, totals), _ = jax.lax.scan(
+                scan_body, (x, totals), params["layers"]["scan"])
+            n_layers += units * len(mosa_pos)
+
+        for i in range(tail_start, len(pattern)):
+            bp = params["layers"]["tail"][f"layer{i}"]
+            if is_routed(blocks[i]):
+                s = block_stats(blocks[i], bp, x)
+                totals = {k: totals[k] + s[k] for k in KEYS}
+                n_layers += 1
+            x, _ = blocks[i](bp, x, positions)
+
+        if not n_layers:
+            return {}
+        return {k: v / n_layers for k, v in totals.items()}
 
     def _embed_tokens(self, params, tokens=None, inputs_embeds=None):
         c = self.cfg

@@ -7,11 +7,20 @@ scheduler admits requests while FREE BLOCKS suffice and grows each row's
 dense block chain one block at a time as decode proceeds:
 
   * **Admission** — a request needs ``ceil(P / bs)`` dense blocks for its
-    prompt (minus any prefix-cache hit) plus the window ring blocks; if the
-    pools cannot cover that after LRU-evicting unused prefix-cache entries,
-    the request waits in the queue.
-  * **Decode growth** — before each fused chunk, rows crossing a block
-    boundary get a fresh block (``Server.grow_tables``).
+    prompt (minus any prefix-cache hit) plus ring blocks covering the ring
+    slots the prompt actually WRITES (``ceil(min(P, W) / bs)`` — lazy ring
+    allocation; a short prompt on a large window holds a sliver of the
+    ring, not all of it); if the pools cannot cover that after LRU-evicting
+    unused prefix-cache entries, the request waits in the queue.
+  * **Decode growth** — before each fused chunk, rows crossing a dense
+    block boundary get a fresh block (``Server.grow_tables``), and rows
+    whose next ``n`` tokens reach unallocated ring slots get those ring
+    blocks (``Server.grow_window_tables``); once a row has seen ``W``
+    tokens its ring is complete and never grows again.  The allocate-
+    before-write discipline is the safety invariant: a window write
+    through a ``-1`` table entry would drop the KV but still record the
+    slot's position, making decode read junk — guarded by
+    tests/test_paged_kv.py's lazy-ring invariant test.
   * **Preempt-to-recompute** — when growth cannot be satisfied, the
     latest-admitted victim releases all its blocks and re-enters the queue
     with ``prompt + generated`` as its new prompt (recompute, not swap:
@@ -194,6 +203,14 @@ class Scheduler:
                     self.dense_pool):
                 return None
 
+    def _window_blocks_for(self, tokens: int) -> int:
+        """Ring blocks needed once ``tokens`` tokens have been written:
+        positions ``0..tokens-1`` land on ring slots ``0..min(tokens,W)-1``
+        (monotone fill until the ring wraps), so coverage is a PREFIX of the
+        block table — lazy allocation extends it, never punches holes."""
+        W = self.wb * self.bs
+        return -(-min(tokens, W) // self.bs)
+
     def _prefill(self, b, prompt_np, valid_count, continued):
         """Bucketed right-pad prefill of ``prompt_np`` into row ``b``."""
         srv = self.server
@@ -267,7 +284,8 @@ class Scheduler:
             return None
         window_ids: List[int] = []
         if self.window_pool is not None:
-            window_ids = self.window_pool.alloc(self.wb)
+            # Lazy ring: only the blocks the prompt's P tokens will write.
+            window_ids = self.window_pool.alloc(self._window_blocks_for(P))
             if window_ids is None:
                 self.dense_pool.decref(chain_ids + suffix_ids)
                 return None
@@ -324,6 +342,62 @@ class Scheduler:
             self._finish(b)
         return int(tok0[0])
 
+    # ------------------------------------------------------------- growth
+    def _alloc_or_preempt(self, alloc_fn, n: int, b: int, live):
+        """``alloc_fn(n)``, preempting latest-admitted victims on failure.
+        Latest-admitted only: preempting a row OLDER than ``b`` would break
+        the monotone-progress guarantee (the oldest request must never lose
+        its blocks to a newer one); when nothing newer than ``b`` exists,
+        the caller preempts ``b`` itself."""
+        ids = alloc_fn(n)
+        while ids is None:
+            s = self._slots[b]
+            victims = [x for x in live
+                       if self._slots[x] is not None and x != b
+                       and self._slots[x]["seq"] > s["seq"]]
+            if not victims:
+                return None
+            victim = max(victims, key=lambda x: self._slots[x]["seq"])
+            self._preempt(victim)
+            ids = alloc_fn(n)
+        return ids
+
+    def _grow_row(self, b: int, n: int, live) -> bool:
+        """Cover the next ``n`` decode tokens of row ``b``: dense chain
+        blocks plus the window ring blocks those tokens' ring slots need
+        (lazy-ring invariant: allocation always precedes the write).
+        Returns False iff ``b`` itself had to be preempted."""
+        srv = self.server
+        s = self._slots[b]
+        needed = min(-(-(s["length"] + n) // self.bs), self.nb_max)
+        extra = needed - len(s["dense_ids"])
+        if extra > 0:
+            ids = self._alloc_or_preempt(self._alloc_dense, extra, b, live)
+            if ids is None:
+                self._preempt(b)
+                return False
+            s["dense_ids"].extend(ids)
+            self.caches = srv.grow_tables(
+                self.caches,
+                jnp.asarray(_table_row(s["dense_ids"], self.nb_max)),
+                jnp.int32(b))
+        if self.window_pool is not None:
+            extra_w = self._window_blocks_for(s["length"] + n) \
+                - len(s["window_ids"])
+            if extra_w > 0:
+                ids = self._alloc_or_preempt(self.window_pool.alloc,
+                                             extra_w, b, live)
+                if ids is None:
+                    self._preempt(b)
+                    return False
+                s["window_ids"].extend(ids)
+                self.caches = srv.grow_window_tables(
+                    self.caches,
+                    jnp.asarray(_table_row(s["window_ids"],
+                                           max(self.wb, 1))),
+                    jnp.int32(b))
+        return True
+
     # ---------------------------------------------------------------- run
     def run(self, max_steps: int = 1000):
         """Serve every queued request; returns {rid: generated tokens}.
@@ -368,43 +442,14 @@ class Scheduler:
                            for b in live)
                 n = max(min(self.chunk, max_steps - steps, need), 1)
 
-                # Grow dense chains to cover the next n appended tokens;
-                # preempt latest-admitted rows when the pool runs dry.
+                # Grow dense chains and (lazily) window rings to cover the
+                # next n appended tokens; preempt latest-admitted rows when
+                # a pool runs dry.
                 for b in sorted(live,
                                 key=lambda x: self._slots[x]["seq"]):
-                    s = self._slots[b]
-                    if s is None:
+                    if self._slots[b] is None:
                         continue
-                    needed = -(-(s["length"] + n) // self.bs)
-                    needed = min(needed, self.nb_max)
-                    extra = needed - len(s["dense_ids"])
-                    if extra <= 0:
-                        continue
-                    ids = self._alloc_dense(extra)
-                    while ids is None:
-                        # Latest-admitted victim only: preempting a row
-                        # OLDER than b would break the monotone-progress
-                        # guarantee (the oldest request must never lose
-                        # its blocks to a newer one) — when nothing newer
-                        # than b exists, b preempts itself.
-                        victims = [x for x in live
-                                   if self._slots[x] is not None and x != b
-                                   and self._slots[x]["seq"] > s["seq"]]
-                        if not victims:
-                            break
-                        victim = max(victims,
-                                     key=lambda x: self._slots[x]["seq"])
-                        self._preempt(victim)
-                        ids = self._alloc_dense(extra)
-                    if ids is None:
-                        self._preempt(b)
-                        continue
-                    s["dense_ids"].extend(ids)
-                    self.caches = srv.grow_tables(
-                        self.caches,
-                        jnp.asarray(_table_row(s["dense_ids"],
-                                               self.nb_max)),
-                        jnp.int32(b))
+                    self._grow_row(b, n, live)
                 live = [b for b in range(B) if self._slots[b] is not None]
                 if not live:
                     continue

@@ -1,0 +1,41 @@
+"""Training subsystem (DESIGN §8) — the training analogue of ``repro.serve``.
+
+  * ``step``    — donated-state train step: microbatch gradient accumulation,
+                  bf16-compute / fp32-master mixed precision, remat knobs
+                  (including the MoSA-specific checkpoint-around-the-gather
+                  policy);
+  * ``loop``    — the resumable driver: checkpoint/restore, preemption
+                  (SIGTERM -> checkpoint at the step boundary), heartbeats,
+                  straggler detection, per-step router health telemetry;
+  * ``isoflop`` — FLOP-matched config generation from ``repro.core.flops``
+                  (the paper's IsoFLOP protocol) and a sweep runner over the
+                  resumable loop.
+
+Layering: ``repro.launch.train`` is a thin CLI over this package; the only
+launch-side import here is the layering-neutral mesh helper
+(``repro.launch.mesh``), never the serving stack.  Exports resolve lazily
+(PEP 562, the ``repro.serve`` pattern) so importing one leaf never drags in
+the rest.
+"""
+
+_EXPORTS = {
+    "make_train_step": "step",
+    "mixed_precision": "step",
+    "microbatch_split": "step",
+    "TrainConfig": "loop",
+    "Trainer": "loop",
+    "SweepPoint": "isoflop",
+    "analytic_flops_per_token": "isoflop",
+    "isoflop_sweep": "isoflop",
+    "run_isoflop": "isoflop",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+        mod = importlib.import_module(f"repro.train.{_EXPORTS[name]}")
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro.train' has no attribute {name!r}")

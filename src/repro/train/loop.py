@@ -1,0 +1,231 @@
+"""The resumable training driver (DESIGN §8).
+
+Builds the full stack for one (arch, shape, mesh) choice:
+  data pipeline -> sharded init -> jit'd donated train step (microbatch
+  accumulation + mixed precision + remat, ``repro.train.step``) ->
+  checkpoint/restart -> heartbeats + straggler monitor -> preemption
+  (SIGTERM -> checkpoint at the next step boundary) -> router health
+  telemetry (selection entropy / token-drop rate / head utilization).
+
+Resumability contract (tests/test_train_subsystem.py): a run killed at any
+step boundary and restarted from its checkpoint replays the SAME loss curve
+bit-for-bit as an uninterrupted run — the data pipeline is step-indexed
+(``Prefetcher(start_step=...)``), the optimizer state travels with the
+checkpoint, and the step counter rides in the manifest.
+
+``repro.launch.train`` is the CLI face of this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.configs.base import ModelConfig, get_config
+from repro.data.pipeline import PackedLMDataset, Prefetcher, SyntheticCorpus
+from repro.dist import hints
+from repro.dist import sharding as shd
+from repro.dist.fault_tolerance import (Heartbeat, PreemptionHandler,
+                                        StragglerMonitor, elastic_plan)
+from repro.launch import mesh as mesh_lib
+from repro.nn.module import init_shapes
+from repro.nn.transformer import TransformerLM
+from repro.optim import schedules
+from repro.optim.optimizer import adamw
+from repro.train.step import make_train_step, mixed_precision
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    arch: str = "mosa-paper"
+    preset: str = "full"
+    seq_len: int = 1024
+    global_batch: int = 64
+    steps: int = 100
+    lr: float = 2.5e-4
+    warmup: int = 400
+    clip_norm: float = 0.25
+    weight_decay: float = 0.0
+    seed: int = 0
+    rule_set: str = "tp"
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 200
+    keep_last: int = 3
+    log_every: int = 10
+    mesh_shape: Optional[tuple] = None   # None = all local devices
+    arch_kwargs: dict = dataclasses.field(default_factory=dict)
+    # --- repro.train knobs (DESIGN §8) ---
+    microbatch: int = 1                  # grad-accumulation splits per step
+    compute: Optional[str] = None        # "bfloat16" -> bf16/fp32-master
+    remat: Optional[str] = None          # none | full | dots_saveable | mosa
+    mosa_impl: Optional[str] = None      # einsum | pallas (fused VJP kernels)
+    router_health: bool = True           # log router telemetry at log_every
+
+
+def _apply_overrides(model_cfg: ModelConfig, cfg: TrainConfig) -> ModelConfig:
+    if cfg.compute:
+        model_cfg = mixed_precision(model_cfg, cfg.compute)
+    if cfg.remat:
+        model_cfg = dataclasses.replace(model_cfg, remat=cfg.remat)
+    if cfg.mosa_impl and model_cfg.mosa is not None:
+        model_cfg = dataclasses.replace(
+            model_cfg,
+            mosa=dataclasses.replace(model_cfg.mosa, impl=cfg.mosa_impl))
+    return model_cfg
+
+
+class Trainer:
+    def __init__(self, cfg: TrainConfig,
+                 model_cfg: Optional[ModelConfig] = None):
+        self.cfg = cfg
+        self.model_cfg = _apply_overrides(
+            model_cfg or get_config(cfg.arch, preset=cfg.preset,
+                                    **cfg.arch_kwargs), cfg)
+        self.model = TransformerLM(self.model_cfg)
+        if cfg.mesh_shape:
+            axes = ("pod", "data", "model")[-len(cfg.mesh_shape):]
+            self.mesh = mesh_lib.make_mesh(cfg.mesh_shape, axes)
+        else:
+            plan = elastic_plan(len(jax.devices()), tp=1)
+            self.mesh = mesh_lib.make_mesh(plan["shape"], plan["axes"])
+        self.optimizer = adamw(
+            schedules.linear_warmup(cfg.lr, cfg.warmup),
+            weight_decay=cfg.weight_decay, clip_norm=cfg.clip_norm)
+
+        # shardings for the whole (params, opt, step) train state
+        shapes = init_shapes(self.model)
+        self.param_sh, self.opt_sh, self.scalar_sh = \
+            shd.train_state_shardings(self.model, self.mesh, cfg.rule_set,
+                                      self.optimizer, shapes)
+        self.batch_sh = shd.batch_sharding(self.mesh, cfg.rule_set)
+
+        step_fn = make_train_step(self.model, self.optimizer,
+                                  microbatches=cfg.microbatch)
+        self.train_step = jax.jit(
+            step_fn,
+            in_shardings=(self.param_sh, self.opt_sh, self.scalar_sh,
+                          jax.tree.map(lambda _: self.batch_sh,
+                                       {"tokens": 0, "labels": 0})),
+            out_shardings=(self.param_sh, self.opt_sh, self.scalar_sh, None),
+            donate_argnums=(0, 1),
+        )
+        self._health_fn = None
+
+        # data
+        n_data = 1
+        for a in ("pod", "data"):
+            n_data *= self.mesh.shape.get(a, 1)
+        self.dataset = PackedLMDataset(
+            SyntheticCorpus(vocab=self.model_cfg.vocab, seed=cfg.seed),
+            seq_len=cfg.seq_len, global_batch=cfg.global_batch,
+            shard_index=0, shard_count=1)  # single-host: full batch here
+
+        self.monitor = StragglerMonitor()
+        self.preempt: Optional[PreemptionHandler] = None
+
+    # ------------------------------------------------------------------ state
+    def init_state(self):
+        key = jax.random.PRNGKey(self.cfg.seed)
+        with self.mesh, hints.sharding_hints(mesh=self.mesh):
+            params = jax.jit(self.model.init,
+                             out_shardings=self.param_sh)(key)
+            opt_state = jax.jit(self.optimizer.init,
+                                out_shardings=self.opt_sh)(params)
+        step = jnp.zeros((), jnp.int32)
+        return params, opt_state, step
+
+    def restore_or_init(self):
+        cfg = self.cfg
+        if cfg.ckpt_dir and ckpt_lib.latest_step(cfg.ckpt_dir) is not None:
+            shapes = init_shapes(self.model)
+            opt_shapes = jax.eval_shape(self.optimizer.init, shapes)
+            tree = {"params": shapes, "opt": opt_shapes}
+            sh = {"params": self.param_sh, "opt": self.opt_sh}
+            restored, extra = ckpt_lib.restore(cfg.ckpt_dir, tree,
+                                               shardings=sh)
+            step = jnp.asarray(extra.get("step", 0), jnp.int32)
+            return (restored["params"], restored["opt"], step,
+                    int(extra.get("step", 0)))
+        params, opt, step = self.init_state()
+        return params, opt, step, 0
+
+    # ----------------------------------------------------------- telemetry
+    @property
+    def _has_router(self) -> bool:
+        mc = self.model_cfg
+        return (mc.mosa is not None and mc.sparse_variant == "mosa" and
+                any(b.mixer == "mosa" for b in mc.resolved_pattern()))
+
+    def router_health(self, params, batch):
+        """Jitted expert-choice telemetry on the current batch; {} when the
+        model has no learned sparse router."""
+        if not self._has_router:
+            return {}
+        if self._health_fn is None:
+            self._health_fn = jax.jit(
+                lambda p, t: self.model.router_health(p, t),
+                in_shardings=(self.param_sh, None))
+        return {k: float(v)
+                for k, v in self._health_fn(params,
+                                            batch["tokens"]).items()}
+
+    # ------------------------------------------------------------------ train
+    def run(self, steps: Optional[int] = None, install_signals: bool = True):
+        cfg = self.cfg
+        steps = steps if steps is not None else cfg.steps
+        params, opt_state, step, start = self.restore_or_init()
+        self.preempt = PreemptionHandler() if install_signals else None
+        checkpointer = (ckpt_lib.AsyncCheckpointer(cfg.ckpt_dir,
+                                                   cfg.keep_last)
+                        if cfg.ckpt_dir else None)
+        hb = Heartbeat(cfg.ckpt_dir, rank=0) if cfg.ckpt_dir else None
+        prefetch = Prefetcher(self.dataset, start_step=start)
+        history = []
+        try:
+            with self.mesh, hints.sharding_hints(mesh=self.mesh):
+                for i in range(start, steps):
+                    data_step, batch = prefetch.next()
+                    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                    t0 = time.perf_counter()
+                    params, opt_state, step, metrics = self.train_step(
+                        params, opt_state, step, batch)
+                    metrics = {k: float(v) for k, v in metrics.items()}
+                    dt = time.perf_counter() - t0
+                    straggler = self.monitor.record(i, dt)
+                    if hb:
+                        hb.beat(i)
+                    if i % cfg.log_every == 0 or i == steps - 1:
+                        if cfg.router_health:
+                            metrics.update(self.router_health(params, batch))
+                        history.append({"step": i, "dt": dt, **metrics})
+                        health = (f" ent {metrics['sel_entropy']:.2f} "
+                                  f"drop {metrics['drop_rate']:.2f}"
+                                  if "sel_entropy" in metrics else "")
+                        print(f"step {i:6d} loss {metrics['loss']:.4f} "
+                              f"ppl {metrics['ppl']:.2f} "
+                              f"gnorm {metrics['grad_norm']:.3f}"
+                              f"{health} {dt*1e3:.0f}ms"
+                              + (" [straggler]" if straggler else ""))
+                    want_ckpt = checkpointer and (
+                        (i + 1) % cfg.ckpt_every == 0 or i == steps - 1 or
+                        (self.preempt and self.preempt.requested))
+                    if want_ckpt:
+                        checkpointer.save(
+                            i + 1, {"params": params, "opt": opt_state},
+                            extra_meta={"step": i + 1,
+                                        "model": self.model_cfg.name})
+                    if self.preempt and self.preempt.requested:
+                        print(f"preemption requested; checkpointed at {i+1}")
+                        break
+        finally:
+            prefetch.close()
+            if checkpointer:
+                checkpointer.wait()
+            if self.preempt:
+                self.preempt.restore()
+        return params, opt_state, history

@@ -1,0 +1,115 @@
+"""The train step: grad accumulation, mixed precision, remat knobs.
+
+``make_train_step(model, optimizer, microbatches=m)`` builds the function the
+loop jits with donated state — signature ``(params, opt_state, step, batch)
+-> (params, opt_state, step+1, metrics)`` so the caller can donate the first
+two arguments and keep one copy of the state resident.
+
+Microbatch gradient accumulation
+    The global batch is split on dim 0 into ``m`` equal microbatches and
+    ``value_and_grad`` runs under ``lax.scan`` — ONE compiled loss/backward
+    body regardless of ``m``, with fp32 gradient accumulators.  Because every
+    microbatch carries the same token count (the packed LM pipeline pads
+    nothing), mean-of-means equals the full-batch mean and the accumulated
+    step is numerically the large-batch step (asserted in
+    tests/test_train_subsystem.py).
+
+Mixed precision (bf16 compute / fp32 master)
+    ``mixed_precision(cfg)`` keeps ``param_dtype`` fp32 — the parameters ARE
+    the master weights — and sets ``compute_dtype`` bf16: every layer already
+    casts parameters at use (``params["wq"].astype(cd)``), so activations,
+    attention, and the MoSA kernels run bf16 while gradients and the AdamW
+    moments (fp32 by construction, see ``repro.optim.optimizer``) stay fp32.
+    bf16 shares fp32's exponent range, so no loss scaling is needed.
+
+Remat
+    The policy lives on ``ModelConfig.remat`` (``repro.nn.transformer``
+    applies it per block / super-block): ``none`` | ``full`` |
+    ``dots_saveable`` | ``mosa``.  The ``mosa`` policy is this subsystem's
+    contribution: checkpoint AROUND the sparse gather — the gathered (B,H,k,h)
+    activations and selected router scores are saved (they are the
+    memory-traffic-bound part of the layer), while projections, the kxk
+    attention, and the FFN recompute in the backward pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def mixed_precision(model_cfg, compute: str = "bfloat16"):
+    """bf16-compute / fp32-master variant of ``model_cfg`` (see module
+    docstring)."""
+    return dataclasses.replace(model_cfg, compute_dtype=compute,
+                               param_dtype="float32")
+
+
+def with_remat(model_cfg, policy: str):
+    """Set the remat policy knob (none | full | dots_saveable | mosa)."""
+    return dataclasses.replace(model_cfg, remat=policy)
+
+
+def microbatch_split(batch, microbatches: int):
+    """(B, ...) leaves -> (m, B/m, ...); validates divisibility."""
+    def one(x):
+        B = x.shape[0]
+        assert B % microbatches == 0, (
+            f"global batch {B} not divisible by microbatches {microbatches}")
+        return x.reshape(microbatches, B // microbatches, *x.shape[1:])
+    return jax.tree.map(one, batch)
+
+
+def make_train_step(model, optimizer, *, microbatches: int = 1):
+    """Build ``(params, opt_state, step, batch) -> (params, opt_state,
+    step+1, metrics)``.  ``microbatches > 1`` accumulates gradients over
+    equal splits of the batch inside one compiled step."""
+    from repro.optim.optimizer import apply_updates
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return grads, loss, metrics
+
+        mb = microbatch_split(batch, microbatches)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        m0 = {"ce": jnp.zeros((), jnp.float32),
+              "aux": jnp.zeros((), jnp.float32),
+              "tokens": jnp.zeros((), jnp.float32)}
+
+        def body(carry, mbatch):
+            g_acc, l_acc, m_acc = carry
+            (l, met), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mbatch)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            m_acc = {"ce": m_acc["ce"] + met["ce"],
+                     "aux": m_acc["aux"] + met["aux"],
+                     "tokens": m_acc["tokens"] + met["tokens"]}
+            return (g_acc, l_acc + l, m_acc), None
+
+        (g_acc, l_acc, m_acc), _ = jax.lax.scan(
+            body, (g0, jnp.zeros((), jnp.float32), m0), mb)
+        inv = 1.0 / microbatches
+        grads = jax.tree.map(lambda g, p: (g * inv).astype(p.dtype),
+                             g_acc, params)
+        ce = m_acc["ce"] * inv
+        metrics = {"ce": ce, "aux": m_acc["aux"] * inv,
+                   "ppl": jnp.exp(ce), "tokens": m_acc["tokens"]}
+        return grads, l_acc * inv, metrics
+
+    def train_step(params, opt_state, step, batch):
+        grads, loss, metrics = grads_of(params, batch)
+        updates, opt_state, opt_m = optimizer.update(grads, opt_state,
+                                                     params, step)
+        params = apply_updates(params, updates)
+        metrics = {**metrics, **opt_m, "loss": loss}
+        return params, opt_state, step + 1, metrics
+
+    return train_step

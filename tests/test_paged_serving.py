@@ -389,3 +389,75 @@ def test_paged_server_cache_tree_shardings_resolve():
     sh = shd.cache_shardings(shapes, mesh, "tp")
     assert jax.tree.structure(shapes) == jax.tree.structure(
         jax.tree.map(lambda x: 0, sh))
+
+
+# ------------------------------------------------------- lazy window ring
+def test_lazy_window_ring_allocator_invariant():
+    """Lazy ring allocation (ROADMAP open item): admission takes only the
+    ring blocks the prompt's tokens write — ceil(min(P, W) / bs), not the
+    full ring — decode growth extends the cover ahead of each chunk, the
+    cover saturates once the ring wraps, and EVERY recorded ring position
+    is backed by an allocated block (allocation-precedes-write: a write
+    through a -1 table entry would drop the KV but keep the position,
+    making decode read junk)."""
+    from repro.dist import hints
+
+    cfg = hybrid_cfg(window=16)              # W=16, bs=8 -> full ring = 2
+    B = 2
+    server = Server(cfg, batch=B, max_len=64,
+                    paged=PagedConfig(block_size=8, num_blocks=24,
+                                      num_window_blocks=2 * B))
+    sched = Scheduler(server, chunk=4, prefix_cache=False)
+    pool = sched.window_pool
+
+    def backed_positions():
+        leaves = jax.tree_util.tree_leaves(
+            sched.caches,
+            is_leaf=lambda x: isinstance(x, PagedWindowKVCache))
+        for leaf in leaves:
+            if not isinstance(leaf, PagedWindowKVCache):
+                continue
+            pos = np.asarray(leaf.positions)
+            bt = np.asarray(leaf.block_table)
+            bs = leaf.block_size
+            for b in range(pos.shape[0]):
+                slots = np.nonzero(pos[b] >= 0)[0]
+                assert (bt[b][slots // bs] >= 0).all(), (b, slots, bt[b])
+
+    prompt = jax.random.randint(jax.random.PRNGKey(13), (5,), 2, cfg.vocab)
+    rid = sched.submit(prompt, max_new=20)
+    with server.mesh, hints.sharding_hints(mesh=server.mesh):
+        tok = sched._admit(0, sched.queue.pop(0), jax.random.PRNGKey(0))
+        assert tok is not None
+        # P=5 < bs=8: ONE ring block, not the full ring of 2
+        assert len(sched._slots[0]["window_ids"]) == 1
+        assert pool.live_blocks == 1
+        backed_positions()
+
+        # growth ahead of a 4-token chunk: 5+4=9 tokens -> 2 blocks
+        assert sched._grow_row(0, 4, [0])
+        assert len(sched._slots[0]["window_ids"]) == 2
+        assert pool.live_blocks == 2
+        # ring saturated: a huge chunk allocates nothing more
+        assert sched._grow_row(0, 40, [0])
+        assert len(sched._slots[0]["window_ids"]) == 2
+        assert pool.live_blocks == 2
+        backed_positions()
+
+        sched._finish(0)
+    assert pool.free_blocks == pool.num_blocks
+
+    # end-to-end: a full scheduler run over mixed lengths stays token-parity
+    # with the eager-ring behavior (same greedy tokens as an uncontended
+    # reference run) and returns every ring block.
+    server2 = Server(cfg, batch=B, max_len=64, params=server.params,
+                     paged=PagedConfig(block_size=8, num_blocks=24,
+                                       num_window_blocks=2 * B))
+    s2 = Scheduler(server2, chunk=4, prefix_cache=False)
+    for i in range(3):
+        s2.submit(jax.random.randint(jax.random.fold_in(
+            jax.random.PRNGKey(14), i), (4 + 7 * i,), 2, cfg.vocab),
+            max_new=6)
+    out = s2.run()
+    assert {len(v) for v in out.values()} == {6}
+    assert s2.window_pool.free_blocks == s2.window_pool.num_blocks

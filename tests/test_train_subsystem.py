@@ -1,0 +1,216 @@
+"""repro.train subsystem: microbatch accumulation, mixed precision, remat
+policies, SIGTERM-driven checkpoint-resume loss-curve parity, router health
+telemetry, and the IsoFLOP smoke sweep (DESIGN §8)."""
+
+import dataclasses
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import get_config
+from repro.nn.transformer import TransformerLM
+from repro.optim import schedules
+from repro.optim.optimizer import adamw
+from repro.train.loop import TrainConfig, Trainer
+from repro.train.step import make_train_step, microbatch_split
+
+
+def _cfg(tmp_path=None, steps=8, **kw):
+    kw.setdefault("arch_kwargs", {"variant": "mosa"})
+    kw.setdefault("log_every", 100)
+    return TrainConfig(
+        arch="mosa-paper", preset="smoke",
+        seq_len=64, global_batch=4, steps=steps, lr=1e-3, warmup=4,
+        ckpt_dir=str(tmp_path) if tmp_path else None, ckpt_every=4, **kw)
+
+
+def _batch(cfg, B=4, T=32, seed=0):
+    tokens = jax.random.randint(jax.random.PRNGKey(seed), (B, T), 2,
+                                cfg.vocab)
+    return {"tokens": tokens, "labels": tokens}
+
+
+# ------------------------------------------------------------- microbatch
+def test_microbatch_accumulation_matches_full_batch():
+    """m-way grad accumulation is numerically the large-batch step: equal
+    token counts per microbatch make mean-of-means the full mean."""
+    cfg = get_config("mosa-paper", preset="smoke", variant="mosa")
+    model = TransformerLM(cfg)
+    opt = adamw(schedules.linear_warmup(1e-3, 10), clip_norm=1.0)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+
+    outs = {}
+    for m in (1, 4):
+        step_fn = make_train_step(model, opt, microbatches=m)
+        p, o, s, metrics = step_fn(params, opt.init(params),
+                                   jnp.zeros((), jnp.int32), batch)
+        outs[m] = (p, metrics)
+    np.testing.assert_allclose(float(outs[4][1]["loss"]),
+                               float(outs[1][1]["loss"]), rtol=1e-6)
+    np.testing.assert_allclose(float(outs[4][1]["grad_norm"]),
+                               float(outs[1][1]["grad_norm"]), rtol=1e-6)
+    # fp accumulation-order noise only (AdamW's mu/sqrt(nu) amplifies tiny
+    # grad deltas near nu ~ 0, so the bound is on the UPDATE scale ~ lr)
+    for a, b in zip(jax.tree.leaves(outs[1][0]), jax.tree.leaves(outs[4][0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                                   rtol=1e-5)
+
+
+def test_microbatch_split_validates_divisibility():
+    with pytest.raises(AssertionError):
+        microbatch_split({"x": jnp.zeros((5, 2))}, 2)
+
+
+# -------------------------------------------------------- mixed precision
+def test_mixed_precision_bf16_compute_f32_master(tmp_path):
+    """compute="bfloat16": master params stay fp32 (they ARE the master
+    weights), activations run bf16, training still reduces the loss, and a
+    checkpoint round-trips the fp32 masters exactly."""
+    tr = Trainer(_cfg(tmp_path, steps=8, compute="bfloat16", log_every=1))
+    assert tr.model_cfg.cdtype == jnp.bfloat16
+    assert tr.model_cfg.pdtype == jnp.float32
+    params, _, hist = tr.run(install_signals=False)
+    for leaf in jax.tree.leaves(params):
+        assert leaf.dtype == jnp.float32
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert np.isfinite([h["loss"] for h in hist]).all()
+
+
+# ------------------------------------------------------------------ remat
+@pytest.mark.parametrize("remat", ["full", "dots_saveable", "mosa"])
+def test_remat_policies_preserve_loss_and_grads(remat):
+    """Every remat knob — including the MoSA checkpoint-around-the-gather
+    policy — changes memory, never math."""
+    cfg = get_config("mosa-paper", preset="smoke", variant="mosa")
+    cfg_r = dataclasses.replace(cfg, remat=remat)
+    batch = _batch(cfg)
+    params = TransformerLM(cfg).init(jax.random.PRNGKey(0))
+
+    def val_grad(c):
+        m = TransformerLM(c)
+        return jax.value_and_grad(m.loss, has_aux=True)(params, batch)
+
+    (l0, _), g0 = val_grad(cfg)
+    (l1, _), g1 = val_grad(cfg_r)
+    np.testing.assert_allclose(float(l1), float(l0), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), atol=1e-5,
+                                   rtol=1e-5)
+
+
+# ----------------------------------------------- preemption resume parity
+def test_sigterm_resume_replays_loss_curve_bit_exact(tmp_path):
+    """The satellite acceptance test: train N steps uninterrupted; train the
+    same config, deliver a REAL SIGTERM mid-run (the PreemptionHandler path,
+    not a poked flag), restart from the checkpoint, and the concatenated
+    loss curve matches the uninterrupted one bit-for-bit."""
+    N = 10
+    tr_a = Trainer(_cfg(tmp_path / "solid", steps=N, log_every=1))
+    _, _, hist_a = tr_a.run(install_signals=False)
+    losses_a = [h["loss"] for h in hist_a]
+    assert len(losses_a) == N
+
+    tr_b = Trainer(_cfg(tmp_path / "killed", steps=N, log_every=1))
+    orig = tr_b.train_step
+    calls = {"n": 0}
+
+    def wrapped(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 4:
+            os.kill(os.getpid(), signal.SIGTERM)
+        return orig(*a, **kw)
+
+    tr_b.train_step = wrapped
+    _, _, hist_b = tr_b.run()           # handler installed; catches SIGTERM
+    assert ckpt.latest_step(str(tmp_path / "killed")) == 4
+    assert [h["step"] for h in hist_b] == [0, 1, 2, 3]
+
+    tr_c = Trainer(_cfg(tmp_path / "killed", steps=N, log_every=1))
+    _, _, hist_c = tr_c.run(install_signals=False)
+    assert [h["step"] for h in hist_c] == list(range(4, N))
+
+    losses_bc = [h["loss"] for h in hist_b] + [h["loss"] for h in hist_c]
+    assert losses_bc == losses_a        # bit-exact, not allclose
+
+
+# ---------------------------------------------------------- router health
+def test_router_health_metrics_in_history():
+    tr = Trainer(_cfg(steps=2, log_every=1))
+    _, _, hist = tr.run(install_signals=False)
+    for h in hist:
+        assert 0.0 <= h["drop_rate"] <= 1.0
+        assert 0.0 <= h["head_util"] <= 1.0
+        assert 0.0 <= h["sel_entropy"] <= 1.0 + 1e-6
+    # smoke hybrid has 17+ heads x k over T=64: every token should be picked
+    assert hist[0]["drop_rate"] < 0.5
+
+
+def test_router_health_empty_for_dense_models():
+    tr = Trainer(_cfg(steps=1, arch_kwargs={"variant": "dense"}))
+    _, _, hist = tr.run(install_signals=False)
+    assert "sel_entropy" not in hist[0]
+
+
+def test_transformer_router_health_scanned_layers():
+    """The scan-fused backbone accumulates per-layer stats through the
+    carry: a uniform (periodic) MoSA stack reports the same KEYS as the
+    unrolled walk and finite values."""
+    cfg = get_config("mosa-paper", preset="smoke", variant="mosa")
+    assert TransformerLM(cfg)._layout()[2] >= 2      # scanned units
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 2, cfg.vocab)
+    stats = model.router_health(params, tokens)
+    assert set(stats) == {"sel_entropy", "drop_rate", "head_util"}
+    for v in stats.values():
+        assert np.isfinite(float(v))
+
+
+# ---------------------------------------------------------------- isoflop
+def test_isoflop_smoke_sweep_end_to_end(tmp_path):
+    """Acceptance: dense vs MoSA at ONE matched budget runs end-to-end
+    through the resumable loop; budgets audit within the solver's one-head
+    rounding; a rerun with more steps RESUMES from the checkpoints instead
+    of restarting."""
+    from repro.train.isoflop import (budget_match_error, isoflop_sweep,
+                                     run_isoflop)
+
+    points = isoflop_sweep(preset="smoke", T=64, sparsities=(8,))
+    assert [p.variant for p in points] == ["dense", "mosa"]
+    assert budget_match_error(points) < 0.05
+    kw = {"lr": 1e-3, "warmup": 2, "log_every": 1, "ckpt_every": 100}
+
+    res = run_isoflop(points, steps=4, seq_len=64, global_batch=2,
+                      ckpt_root=str(tmp_path), train_kw=kw)
+    assert set(res) == {p.name for p in points}
+    for name, r in res.items():
+        assert len(r["loss_curve"]) == 4
+        assert np.isfinite(r["final"]["loss"])
+        assert r["flops_total"] == r["flops_train_per_token"] * r["tokens"]
+
+    res2 = run_isoflop(points, steps=6, seq_len=64, global_batch=2,
+                       ckpt_root=str(tmp_path), train_kw=kw)
+    for name, r in res2.items():
+        # resumed at the step-4 boundary, trained only the remainder
+        assert [h["step"] for h in r["loss_curve"]] == [4, 5]
+
+
+def test_analytic_flops_match_paper_table():
+    """The sweep's budget audit rests on flops.py, which reproduces the
+    paper's Table 4 — pin the bridge: analytic_flops_per_token(dense tiny)
+    equals the published budget / T."""
+    from repro.core.flops import PAPER_MODELS, TABLE4_GFLOPS
+    from repro.train.isoflop import analytic_flops_per_token
+
+    cfg = get_config("mosa-paper", preset="full", size="tiny",
+                     variant="dense")
+    per_tok = analytic_flops_per_token(cfg, 1024)
+    want = TABLE4_GFLOPS["tiny"] * 1e9 / 1024
+    assert abs(per_tok - want) / want < 1e-3
+    assert per_tok == PAPER_MODELS["tiny"].dense_flops(1024) // 1024
