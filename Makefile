@@ -4,8 +4,8 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test collect lint smoke test-paged test-train bench-smoke \
-    bench-train bench-check ci
+.PHONY: test collect lint smoke test-paged test-train test-property \
+    bench-smoke bench-train bench-check ci
 
 # Tier-1 command from ROADMAP.md
 test:
@@ -41,6 +41,22 @@ test-train:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -q tests/test_train_grad.py \
 	    tests/test_train_subsystem.py
 
+# Property tests must EXECUTE: a missing hypothesis falls back to the
+# vendored tests/_property_harness.py shim (collection fails loudly if
+# even that breaks), and ANY skip in these files fails this target — the
+# pre-ISSUE-6 importorskip silently shelved them for four PRs.
+test-property:
+	JAX_PLATFORMS=cpu $(PY) -m pytest -q -rs tests/test_property.py \
+	    tests/test_paged_kv.py > .prop_report.txt 2>&1 \
+	    || { cat .prop_report.txt; rm -f .prop_report.txt; exit 1; }
+	@cat .prop_report.txt
+	@if grep -qE "[0-9]+ skipped" .prop_report.txt; then \
+	    rm -f .prop_report.txt; \
+	    echo "FAIL: property tests were SKIPPED (harness missing?)"; \
+	    exit 1; \
+	fi
+	@rm -f .prop_report.txt
+
 # Decode-path perf trajectory: refreshes the TRACKED BENCH_serve.json
 # (fused vs per-token decode tok/s, MoSA vs dense KV bytes, and the paged
 # family: paged vs contiguous tok/s + capacity at fixed budget; CPU, tiny
@@ -64,4 +80,5 @@ bench-check:
 # bench-smoke/bench-train run BEFORE test: the suite validates the
 # regenerated artifacts, so what this ci run leaves behind is what passed;
 # bench-check then gates the refreshed trajectories.
-ci: lint collect test-paged test-train bench-smoke bench-train bench-check test
+ci: lint collect test-paged test-train test-property bench-smoke \
+    bench-train bench-check test

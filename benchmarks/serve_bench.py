@@ -55,7 +55,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.calib import calibrate_ms, check_gate
+from benchmarks.calib import CALIB_VERSION, calibrate_ms, check_gate
 from repro.configs.base import get_config
 from repro.core.kv_cache import cache_nbytes
 from repro.dist import hints
@@ -74,11 +74,20 @@ def _median(ts):
 
 
 def time_decode(server: Server, prompts, gen: int, fused: bool,
-                iters: int = 3) -> float:
-    """Median decode throughput (tok/s), prefill excluded, compile warmed."""
+                iters: int = 5, calib0: float = 0.0) -> float:
+    """Best-of-``iters`` decode throughput (tok/s), prefill excluded,
+    compile warmed.  Two noise defenses learned from flaky gates on
+    identical code (shared CI box): min-time, not median — transient
+    neighbor load only ever ADDS time, and median-of-3 swung ±18%
+    back-to-back; and when ``calib0`` (the refresh-start calibration) is
+    given, the result is rescaled by a calibration sampled right AT this
+    timed region — a sustained load window minutes after refresh start is
+    invisible to the per-entry calibration and otherwise reads as a code
+    regression."""
     B = prompts.shape[0]
     key = jax.random.PRNGKey(0)
     ts = []
+    local = 0.0
     with server.mesh, hints.sharding_hints(mesh=server.mesh):
         for it in range(iters + 1):          # iteration 0 warms the compile
             caches = server.new_cache()
@@ -99,7 +108,12 @@ def time_decode(server: Server, prompts, gen: int, fused: bool,
                 jax.block_until_ready(tok)
             if it:
                 ts.append(time.perf_counter() - t0)
-    return B * gen / _median(ts)
+            else:                            # machine speed as timing starts
+                local = calibrate_ms()
+    tok_s = B * gen / min(ts)
+    if calib0 and local:
+        tok_s *= local / calib0              # as-if at refresh-start speed
+    return tok_s
 
 
 def _shrink(cfg, d_model: int):
@@ -115,15 +129,18 @@ def _shrink(cfg, d_model: int):
 
 
 def bench_variant(variant: str, batch: int, prompt_len: int, gen: int,
-                  max_len: int, iters: int = 3, d_model: int = 128) -> dict:
+                  max_len: int, iters: int = 5, d_model: int = 128,
+                  calib0: float = 0.0) -> dict:
     kw = dict(TABLE2_RECIPE) if variant == "mosa" else {}
     cfg = _shrink(get_config("mosa-paper", preset="smoke", variant=variant,
                              **kw), d_model)
     server = Server(cfg, batch=batch, max_len=max_len)
     prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len),
                                  2, cfg.vocab)
-    fused = time_decode(server, prompts, gen, fused=True, iters=iters)
-    stepwise = time_decode(server, prompts, gen, fused=False, iters=iters)
+    fused = time_decode(server, prompts, gen, fused=True, iters=iters,
+                        calib0=calib0)
+    stepwise = time_decode(server, prompts, gen, fused=False, iters=iters,
+                           calib0=calib0)
     out = {
         "fused_tok_s": round(fused, 2),
         "stepwise_tok_s": round(stepwise, 2),
@@ -205,7 +222,7 @@ def capacity_at_budget(cfg, max_len: int, req_tokens: int,
 
 
 def bench_paged(batch: int, prompt_len: int, gen: int, max_len: int,
-                iters: int, d_model: int) -> dict:
+                iters: int, d_model: int, calib0: float = 0.0) -> dict:
     """Paged-vs-contiguous family on the Table-2 MoSA recipe: fused decode
     tok/s (same model, same sampler — the contrast isolates the paged
     append/gather path), worst-case KV bytes, capacity at fixed budget."""
@@ -217,8 +234,10 @@ def bench_paged(batch: int, prompt_len: int, gen: int, max_len: int,
                    paged=PagedConfig(block_size=16))
     prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len),
                                  2, cfg.vocab)
-    fused_paged = time_decode(paged, prompts, gen, fused=True, iters=iters)
-    fused_contig = time_decode(contig, prompts, gen, fused=True, iters=iters)
+    fused_paged = time_decode(paged, prompts, gen, fused=True, iters=iters,
+                              calib0=calib0)
+    fused_contig = time_decode(contig, prompts, gen, fused=True, iters=iters,
+                               calib0=calib0)
     out = {
         "fused_tok_s": round(fused_paged, 2),
         "fused_tok_s_contiguous": round(fused_contig, 2),
@@ -231,9 +250,69 @@ def bench_paged(batch: int, prompt_len: int, gen: int, max_len: int,
     return out
 
 
+# Length-skewed arrival mix (mixed-length family): mostly short prompts
+# with a heavy tail of long ones — the regime where pow2 bucketing paid up
+# to 2x padding and a monolithic prefill stalled TTFT for everyone.
+MIXED_LENS = (12, 180, 24, 9, 96, 33, 17, 140, 28, 11, 64, 48, 21, 200,
+              37, 15)
+
+
+def _pow2_bucket(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length()
+
+
+def bench_mixed(gen: int, max_len: int, d_model: int,
+                chunk_tokens: int = 32, batch: int = 8) -> dict:
+    """Mixed-length family (ISSUE 6): the chunked packed-prefill scheduler
+    over a length-skewed arrival mix.  Reports TTFT p50/p99 (seconds from
+    run start to each request's first sampled token) and the packed-token
+    efficiency — prefilled tokens / prefill chunk slots paid — against the
+    analytic pow2-bucket efficiency the deleted ``_bucket`` path would have
+    paid on the same mix."""
+    from repro.serve.scheduler import Scheduler
+
+    cfg = _shrink(get_config("mosa-paper", preset="smoke", variant="mosa",
+                             **TABLE2_RECIPE), d_model)
+    nb = -(-max_len // 16)
+    server = Server(cfg, batch=batch, max_len=max_len,
+                    paged=PagedConfig(block_size=16,
+                                      num_blocks=batch * nb,
+                                      num_window_blocks=4 * batch))
+    sched = Scheduler(server, chunk=8, chunk_tokens=chunk_tokens,
+                      max_prefill_segs=batch, prefix_cache=False)
+    key = jax.random.PRNGKey(2)
+    rids = []
+    for i, P in enumerate(MIXED_LENS):
+        prompt = jax.random.randint(jax.random.fold_in(key, i), (P,), 2,
+                                    cfg.vocab)
+        rids.append(sched.submit(prompt, max_new=gen))
+    out = sched.run()
+    assert all(len(out[r]) == gen for r in rids)
+
+    ttft = sorted(sched.ttft[r] for r in rids)
+    st = sched.stats
+    eff = st["prefilled_tokens"] / max(st["prefill_chunk_slots"], 1)
+    total = sum(MIXED_LENS)
+    return {
+        "requests": len(MIXED_LENS),
+        "prompt_tokens_total": total,
+        "chunk_tokens": chunk_tokens,
+        "gen": gen,
+        "ttft_s_p50": round(ttft[len(ttft) // 2], 4),
+        "ttft_s_p99": round(ttft[min(len(ttft) - 1,
+                                     int(0.99 * len(ttft)))], 4),
+        "packed_efficiency": round(eff, 4),
+        "pow2_bucket_efficiency": round(
+            total / sum(_pow2_bucket(n) for n in MIXED_LENS), 4),
+        "prefill_chunks": st["prefill_chunks"],
+        "preemptions": st["preemptions"],
+    }
+
+
 def run_bench(batch: int = 2, prompt_len: int = 16, gen: int = 64,
-              max_len: int = 256, iters: int = 3,
+              max_len: int = 256, iters: int = 5,
               variants=("dense", "mosa"), d_model: int = 128) -> dict:
+    calib0 = round(calibrate_ms(), 3)
     res = {
         "benchmark": "serve_decode",
         "config": {"arch": "mosa-paper", "preset": "smoke", "batch": batch,
@@ -241,18 +320,22 @@ def run_bench(batch: int = 2, prompt_len: int = 16, gen: int = 64,
                    "d_model": d_model, "mosa_recipe": TABLE2_RECIPE},
         "env": {"jax": jax.__version__, "backend": jax.default_backend(),
                 "devices": len(jax.devices())},
-        "calib_ms": round(calibrate_ms(), 3),
+        "calib_ms": calib0,
+        "calib_v": CALIB_VERSION,
         "variants": {},
     }
     for v in variants:
         res["variants"][v] = bench_variant(v, batch, prompt_len, gen,
-                                           max_len, iters, d_model)
+                                           max_len, iters, d_model, calib0)
     if {"dense", "mosa"} <= set(res["variants"]):
         d, m = res["variants"]["dense"], res["variants"]["mosa"]
         res["kv_bytes_mosa_over_dense"] = round(
             m["cache_bytes"] / d["cache_bytes"], 4)
     res["paged"] = bench_paged(batch, prompt_len, gen, max_len, iters,
-                               d_model)
+                               d_model, calib0)
+    # Short gen: the mixed family measures PREFILL scheduling (TTFT +
+    # packing), not decode throughput — the families above cover that.
+    res["mixed"] = bench_mixed(gen=8, max_len=max_len, d_model=d_model)
     return res
 
 
@@ -267,12 +350,15 @@ def _append_trajectory(res: dict, prev: dict) -> None:
                                      for v, r in prev["variants"].items()}})
     entry = {"entry": len(traj),
              "calib_ms": res.get("calib_ms"),
+             "calib_v": res.get("calib_v"),
              "fused_tok_s": {v: r["fused_tok_s"]
                              for v, r in res["variants"].items()}}
     if "paged" in res:
         entry["paged_fused_tok_s"] = res["paged"]["fused_tok_s"]
         entry["capacity_ratio"] = \
             res["paged"]["capacity"]["capacity_ratio"]
+    if "mixed" in res:
+        entry["packed_efficiency"] = res["mixed"]["packed_efficiency"]
     traj.append(entry)
     res["trajectory"] = traj[-12:]
 
@@ -294,8 +380,18 @@ def check_regression(path: str, tol: float = 0.10) -> int:
         print(f"bench-check: {path} missing — run `make bench-smoke`")
         return 1
     res = json.loads(open(path).read())
-    return check_gate(res.get("trajectory", []), _gated_values, tol,
-                      "serve")
+    traj = res.get("trajectory", [])
+    # Hard floor (not a relative gate): the chunked packed prefill must
+    # keep >= 95% of its chunk slots doing real work on the mixed-length
+    # family (ISSUE 6 acceptance) — pow2 bucketing managed ~65%.
+    if traj and "packed_efficiency" in traj[-1]:
+        eff = traj[-1]["packed_efficiency"]
+        if eff < 0.95:
+            print(f"bench-check FAIL(serve): packed_efficiency {eff} "
+                  f"< 0.95 floor")
+            return 1
+        print(f"bench-check OK(serve): packed_efficiency {eff} >= 0.95")
+    return check_gate(traj, _gated_values, tol, "serve")
 
 
 def main(argv=None):
@@ -304,7 +400,7 @@ def main(argv=None):
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--gen", type=int, default=64)
     p.add_argument("--max-len", type=int, default=256)
-    p.add_argument("--iters", type=int, default=3)
+    p.add_argument("--iters", type=int, default=5)
     p.add_argument("--d-model", type=int, default=128,
                    help="shrink the smoke model to this width "
                         "(0 = keep the full smoke config)")
@@ -343,6 +439,12 @@ def main(argv=None):
           f"vs{cap['contiguous_max_concurrent']};"
           f"ratio={cap['capacity_ratio']}x@"
           f"{cap['budget_bytes']}B")
+    mx = res["mixed"]
+    print(f"prefill/mixed,0.0,ttft_p50={mx['ttft_s_p50']}s;"
+          f"ttft_p99={mx['ttft_s_p99']}s;"
+          f"packed_eff={mx['packed_efficiency']};"
+          f"pow2_eff={mx['pow2_bucket_efficiency']};"
+          f"chunks={mx['prefill_chunks']}")
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -26,22 +26,29 @@ from repro.dist import hints
 from repro.core.kv_cache import DenseKVCache, MLAKVCache, WindowKVCache
 from repro.nn.layers import _trunc_normal
 from repro.nn.module import logical
-from repro.serve.paged_attention import paged_attention_decode
+from repro.serve.paged_attention import (paged_attention_decode,
+                                         paged_prefill_attention)
 from repro.serve.paged_kv import PagedDenseKVCache, PagedWindowKVCache
 
 NEG_INF = -1e30
 
 
-def _mask_bias(q_pos, k_pos, window: int = 0, k_valid=None):
+def _mask_bias(q_pos, k_pos, window: int = 0, k_valid=None, q_seg=None,
+               k_seg=None):
     """fp32 additive mask: causal (+ sliding window) from explicit positions.
 
     q_pos: (..., Tq), k_pos: (..., Tk) -> (..., Tq, Tk).
+    ``q_seg``/``k_seg``: optional segment ids (packed rows, data/pipeline.py)
+    — attention additionally requires seg_q == seg_k, so packed documents
+    never leak into each other.
     """
     ok = q_pos[..., :, None] >= k_pos[..., None, :]
     if window > 0:
         ok &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
     if k_valid is not None:
         ok &= k_valid[..., None, :]
+    if q_seg is not None:
+        ok &= q_seg[..., :, None] == k_seg[..., None, :]
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
 
 
@@ -56,13 +63,15 @@ def naive_attention(q, k, v, bias, scale):
 
 
 def chunked_attention(q, k, v, q_pos, k_pos, scale, window: int = 0,
-                      k_valid=None, chunk: int = 512):
+                      k_valid=None, chunk: int = 512, q_seg=None, k_seg=None):
     """Flash-style GQA attention via lax.scan over KV chunks.
 
     q: (B, Hq, Tq, d); k, v: (B, Hkv, Tk, d) with Hq % Hkv == 0 — the KV
     repeat is expressed inside the einsum (q reshaped to a (Hkv, n_rep)
     grouped head axis), never materialized.  q_pos: (B?, Tq) or (Tq,);
-    k_pos: same for Tk.  Returns (B, Hq, Tq, dv) in v.dtype.
+    k_pos: same for Tk.  ``q_seg``/``k_seg``: optional (B?, T) segment ids —
+    packed rows additionally mask cross-segment pairs (see ``_mask_bias``).
+    Returns (B, Hq, Tq, dv) in v.dtype.
     """
     B, Hq, Tq, d = q.shape
     Hkv, Tk = k.shape[1], k.shape[2]
@@ -72,6 +81,8 @@ def chunked_attention(q, k, v, q_pos, k_pos, scale, window: int = 0,
     chunk = min(chunk, Tk)
     n_chunks = -(-Tk // chunk)
     pad = n_chunks * chunk - Tk
+    ks = (None if k_seg is None
+          else jnp.broadcast_to(k_seg, (B, Tk)).astype(jnp.int32))
     if pad:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
@@ -81,26 +92,34 @@ def chunked_attention(q, k, v, q_pos, k_pos, scale, window: int = 0,
             jnp.broadcast_to(k_valid if k_valid is not None
                              else jnp.ones((B, Tk), bool), (B, Tk)),
             ((0, 0), (0, pad)), constant_values=False)
+        if ks is not None:
+            ks = jnp.pad(ks, ((0, 0), (0, pad)), constant_values=-1)
     else:
         kp = jnp.broadcast_to(k_pos, (B, Tk))
         kv_valid = jnp.broadcast_to(
             k_valid if k_valid is not None else jnp.ones((B, Tk), bool), (B, Tk))
 
     qp = jnp.broadcast_to(q_pos, (B, Tq))
+    qs = (None if q_seg is None
+          else jnp.broadcast_to(q_seg, (B, Tq)).astype(jnp.int32))
     kc = k.reshape(B, Hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
     vc = v.reshape(B, Hkv, n_chunks, chunk, dv).transpose(2, 0, 1, 3, 4)
     kpc = kp.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
     kvc = kv_valid.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    ksc = (jnp.zeros((n_chunks, B, chunk), jnp.int32) if ks is None
+           else ks.reshape(B, n_chunks, chunk).transpose(1, 0, 2))
 
     qf = q.reshape(B, Hkv, R, Tq, d).astype(jnp.float32)
 
     def step(carry, inp):
         m, l, acc = carry
-        kb, vb, kpb, kvb = inp
+        kb, vb, kpb, kvb, ksb = inp
         s = jnp.einsum("bgrqd,bgkd->bgrqk", qf, kb.astype(jnp.float32),
                        preferred_element_type=jnp.float32) * scale
         bias = _mask_bias(qp[:, None, None], kpb[:, None, None], window,
-                          kvb[:, None, None])
+                          kvb[:, None, None],
+                          None if qs is None else qs[:, None, None],
+                          None if qs is None else ksb[:, None, None])
         s = s + bias
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
@@ -114,13 +133,13 @@ def chunked_attention(q, k, v, q_pos, k_pos, scale, window: int = 0,
     m0 = jnp.full((B, Hkv, R, Tq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, Hkv, R, Tq), jnp.float32)
     a0 = jnp.zeros((B, Hkv, R, Tq, dv), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, kpc, kvc))
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, kpc, kvc, ksc))
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(B, Hq, Tq, dv).astype(v.dtype)
 
 
 def gqa_attention(q, k, v, q_pos, k_pos, scale, window: int = 0,
-                  k_valid=None):
+                  k_valid=None, q_seg=None, k_seg=None):
     """Direct (unchunked) GQA attention — decode-friendly: the (Tq, Tk)
     logits materialize once, so a sequence-sharded KV cache shards them too.
     q: (B, Hq, Tq, d); k, v: (B, Hkv, Tk, d).
@@ -136,7 +155,11 @@ def gqa_attention(q, k, v, q_pos, k_pos, scale, window: int = 0,
     kp = jnp.broadcast_to(k_pos, (B, Tk))
     s = s + _mask_bias(qp[:, None, None], kp[:, None, None], window,
                        None if k_valid is None
-                       else jnp.broadcast_to(k_valid, (B, Tk))[:, None, None])
+                       else jnp.broadcast_to(k_valid, (B, Tk))[:, None, None],
+                       None if q_seg is None else jnp.broadcast_to(
+                           q_seg, (B, Tq))[:, None, None],
+                       None if k_seg is None else jnp.broadcast_to(
+                           k_seg, (B, Tk))[:, None, None])
     m = s.max(axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     out = jnp.einsum("bgrqk,bgkd->bgrqd", p, v.astype(jnp.float32),
@@ -221,8 +244,17 @@ class MultiHeadAttention:
         return rope_lib.apply_rope(t, positions[:, None], c.rope_theta,
                                    self.rotary_frac)
 
-    def __call__(self, params, x, positions=None):
-        """Training / prefill-style full forward.  x: (B, T, h)."""
+    def __call__(self, params, x, positions=None, segments=None):
+        """Training / prefill-style full forward.  x: (B, T, h).
+
+        ``segments``: optional (B, T) int32 document ids for packed rows
+        (data/pipeline.py) — attention is causal WITHIN a document and never
+        crosses a boundary.  Packed rows use per-doc ``positions`` so RoPE
+        restarts at every boundary.  The ``pallas`` impl handles packed rows
+        through the masked fused-XLA flash path (per-row doc counts are
+        dynamic; the Pallas varlen kernel serves the single-stream
+        ``kernels.ops.flash_attention_varlen`` entry used by serving).
+        """
         c = self.cfg
         B, T, _ = x.shape
         if positions is None:
@@ -231,7 +263,16 @@ class MultiHeadAttention:
         base_pos = positions if positions.ndim == 2 else positions[0]
         q = self._rope(q, positions)
         k = self._rope(k, positions)
-        if self.impl == "naive":
+        if segments is not None:
+            # packed rows: per-doc positions are not globally monotone, so
+            # causality needs the PACKED order; the seg-equality term then
+            # confines attention to the document.
+            packed_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+            out = chunked_attention(q, k, v, packed_pos, packed_pos,
+                                    self._scale, window=c.window,
+                                    chunk=self.chunk, q_seg=segments,
+                                    k_seg=segments)
+        elif self.impl == "naive":
             out = gqa_attention(q, k, v, base_pos, base_pos, self._scale,
                                 window=c.window)
         elif self.impl == "pallas":
@@ -352,6 +393,81 @@ class MultiHeadAttention:
         y = jnp.dot(out.astype(cd), params["wo"].astype(cd),
                     preferred_element_type=jnp.float32).astype(cd)
         return y, cache
+
+    def prefill_packed(self, params, x, cache, meta):
+        """Packed multi-segment chunked prefill (DESIGN §9).
+
+        ``x``: (1, C, h) — a flattened chunk of N prompt segments, each
+        continuing a different batch row's paged cache; ``meta`` is the
+        packed layout from ``TransformerLM.prefill_packed``.  Requires a
+        paged cache: the packed write primitive is ``append_packed`` and
+        per-token KV indirection goes through block tables.
+        """
+        if isinstance(cache, PagedWindowKVCache):
+            return self._prefill_packed_window(params, x, cache, meta)
+        if isinstance(cache, PagedDenseKVCache):
+            return self._prefill_packed_dense(params, x, cache, meta)
+        raise ValueError(
+            f"packed prefill requires a paged cache, got {type(cache).__name__}")
+
+    def _prefill_packed_dense(self, params, x, cache: "PagedDenseKVCache",
+                              meta):
+        """Dense side of packed prefill: ONE pass over the packed stream.
+
+        K/V scatter straight into each token's row blocks
+        (``append_packed``); attention is the ragged-varlen paged kernel
+        (``paged_prefill_attention``) — per-token causal over
+        past + same-segment chunk prefix, never crossing segments.  This is
+        the O(T²) side, so it is the one that genuinely computes on packed
+        tokens (the window/MoSA sides are O(W)/O(k²) and unpack, see their
+        docstrings)."""
+        c = self.cfg
+        assert c.window == 0, "dense paged cache implies window == 0"
+        _, C, _ = x.shape
+        pos = meta["pos_of_tok"][None]                     # (1, C)
+        q, k, v = self._qkv(params, x)                     # (1, H, C, d)
+        q = self._rope(q, pos)
+        k = self._rope(k, pos)
+        cache = cache.append_packed(k[0].transpose(1, 0, 2),
+                                    v[0].transpose(1, 0, 2),
+                                    meta["row_of_tok"], meta["pos_of_tok"])
+        out = paged_prefill_attention(q[0].transpose(1, 0, 2), cache,
+                                      meta["cu"], meta["rows"],
+                                      meta["past_lens"], scale=self._scale)
+        out = out.reshape(1, C, -1)
+        cd = self.compute_dtype
+        y = jnp.dot(out.astype(cd), params["wo"].astype(cd),
+                    preferred_element_type=jnp.float32).astype(cd)
+        return y, cache
+
+    def _prefill_packed_window(self, params, x, cache: "PagedWindowKVCache",
+                               meta):
+        """Window side of packed prefill: unpack to a (N, C) right-padded
+        batch over a gathered N-row VIEW of the paged cache (row fields
+        gathered, pools shared) and reuse ``_prefill_window_paged`` —
+        per-segment rings, per-row lengths and valid masks already express
+        the continued-chunk semantics.  Updated row fields scatter back
+        (inactive segments clamp to row 0 for the gather; their appends are
+        dropped by the zero valid mask and their write-back by ``rowd``).
+        The O(N·C) re-projection is the price of sharing the ring math; the
+        window side is O(W)-bounded, not the quadratic term."""
+        B = cache.block_table.shape[0]
+        rows = meta["rows"]
+        rowc = jnp.clip(rows, 0, B - 1)
+        rowd = jnp.where(rows < 0, B, rows)
+        gc = PagedWindowKVCache(cache.k, cache.v, cache.block_table[rowc],
+                                cache.positions[rowc], cache.length[rowc])
+        xs = x[0][meta["tok_idx"]] * meta["in_seg"][..., None].astype(x.dtype)
+        y_seg, gc2 = self._prefill_window_paged(params, xs, gc, None,
+                                                meta["in_seg"])
+        cache = PagedWindowKVCache(
+            gc2.k, gc2.v, cache.block_table,
+            cache.positions.at[rowd].set(gc2.positions, mode="drop"),
+            cache.length.at[rowd].set(gc2.length, mode="drop"))
+        segc = jnp.maximum(meta["seg_of_tok"], 0)
+        y = y_seg[segc, meta["local_of_tok"]]              # (C, h)
+        y = jnp.where((meta["row_of_tok"] >= 0)[:, None], y, 0.0)
+        return y[None].astype(y_seg.dtype), cache
 
     def _prefill_window(self, params, x, cache: "WindowKVCache",
                         positions=None, valid=None):
@@ -557,7 +673,7 @@ class MLAAttention:
         lat = (lat * params["kv_norm"].astype(jnp.float32)).astype(cd)
         return lat, k_rope.astype(cd)
 
-    def __call__(self, params, x, positions=None):
+    def __call__(self, params, x, positions=None, segments=None):
         c, m = self.cfg, self.cfg.mla
         cd = self.compute_dtype
         B, T, _ = x.shape
@@ -586,8 +702,14 @@ class MLAAttention:
         q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
         k_full = jnp.concatenate(
             [k_nope, jnp.broadcast_to(k_rope, (B, H, T, m.rope_head_dim))], axis=-1)
-        out = chunked_attention(q_full, k_full, v, positions, positions,
-                                qk_scale, chunk=self.chunk)
+        if segments is not None:
+            packed_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+            out = chunked_attention(q_full, k_full, v, packed_pos, packed_pos,
+                                    qk_scale, chunk=self.chunk,
+                                    q_seg=segments, k_seg=segments)
+        else:
+            out = chunked_attention(q_full, k_full, v, positions, positions,
+                                    qk_scale, chunk=self.chunk)
         out = out.transpose(0, 2, 1, 3).reshape(B, T, H * m.v_head_dim)
         return jnp.dot(out.astype(cd), params["wo"].astype(cd),
                        preferred_element_type=jnp.float32).astype(cd)

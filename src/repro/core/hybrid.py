@@ -79,10 +79,18 @@ class HybridAttention:
             s["dense"] = self._dense().specs()
         return s
 
-    def __call__(self, params, x, positions=None):
-        y = self._sparse()(params["sparse"], x, positions)
+    def __call__(self, params, x, positions=None, segments=None):
+        if segments is None:
+            y = self._sparse()(params["sparse"], x, positions)
+            if self.cfg.n_dense_heads > 0:
+                y = y + self._dense()(params["dense"], x, positions)
+            return y
+        # packed rows (data/pipeline.py): both sides mask cross-document
+        # attention; the baselines don't take segments (train-only variants).
+        y = self._sparse()(params["sparse"], x, positions, segments=segments)
         if self.cfg.n_dense_heads > 0:
-            y = y + self._dense()(params["dense"], x, positions)
+            y = y + self._dense()(params["dense"], x, positions,
+                                  segments=segments)
         return y
 
     def router_health(self, params, x):
@@ -145,6 +153,21 @@ class HybridAttention:
         if self.cfg.n_dense_heads > 0:
             yd, dc = self._dense().prefill(params["dense"], x, caches["dense"],
                                            positions, valid)
+            y = y + yd
+            out["dense"] = dc
+        return y, out
+
+    def prefill_packed(self, params, x, caches, meta):
+        """Packed multi-segment chunked prefill (DESIGN §9): the sparse side
+        runs per-segment union selection (``MoSAAttention.prefill_packed``),
+        the dense side its paged packed path."""
+        assert self.variant == "mosa", "serving path implemented for MoSA"
+        y, sc = self._sparse().prefill_packed(params["sparse"], x,
+                                              caches["sparse"], meta)
+        out = dict(caches, sparse=sc)
+        if self.cfg.n_dense_heads > 0:
+            yd, dc = self._dense().prefill_packed(params["dense"], x,
+                                                  caches["dense"], meta)
             y = y + yd
             out["dense"] = dc
         return y, out

@@ -83,7 +83,7 @@ class MoSAAttention:
         return max(min(T // self.cfg.sparsity, T), min(self.cfg.min_k, T))
 
     # ------------------------------------------------------------------ train
-    def __call__(self, params, x, positions=None, valid=None):
+    def __call__(self, params, x, positions=None, valid=None, segments=None):
         """x: (B, T, h) -> (B, T, h).  Full MoSA layer (all heads).
 
         ``valid``: optional (B, T) bool marking right-pad tokens False
@@ -94,6 +94,15 @@ class MoSAAttention:
         NaN can leak through the 0 * -inf corner), which keeps them out of
         every head's selection whenever k real candidates exist; selected
         overflow slots (k > real tokens) are scaled to zero contribution.
+
+        ``segments``: optional (B, T) int32 document ids for PACKED training
+        rows (data/pipeline.py packs multiple docs back to back).  The k x k
+        attention additionally requires seg_q == seg_k, so no probability
+        mass ever crosses a document boundary; expert-choice selection stays
+        row-global (static k per head — the expert-choice budget is a row
+        property, exactly like the non-causality of selection itself, see
+        DESIGN §9).  Pass per-doc ``positions`` alongside so RoPE restarts
+        at every boundary.  ``segments=None`` is bit-for-bit the old path.
         """
         c, cd = self.cfg, self.compute_dtype
         B, T, h = x.shape
@@ -134,11 +143,17 @@ class MoSAAttention:
         q = rope_lib.apply_rope(q, pos_sel, self.rope_theta, self.rotary_frac)
         kk = rope_lib.apply_rope(kk, pos_sel, self.rope_theta, self.rotary_frac)
 
+        seg_sel = None
+        if segments is not None:
+            seg_sel = jax.vmap(lambda sb, ib: sb[ib])(
+                segments.astype(jnp.int32), idx)                  # (B,H,k)
+
         if self.impl == "pallas":
             from repro.kernels import ops as kops
-            att = kops.mosa_attention(q, kk, v, idx, r.astype(jnp.float32))
+            att = kops.mosa_attention(q, kk, v, idx, r.astype(jnp.float32),
+                                      seg=seg_sel)
         else:
-            att = self._einsum_attention(q, kk, v, idx, r)
+            att = self._einsum_attention(q, kk, v, idx, r, seg=seg_sel)
 
         # Per-head output projection, then scatter-add to original positions
         # (vmap'd over batch — see gather note above).
@@ -156,12 +171,16 @@ class MoSAAttention:
         y = hints.constrain(y, ("dp", "tp", None))
         return y
 
-    def _einsum_attention(self, q, k, v, idx, r):
-        """Reference attention over selected tokens.  All inputs (B,H,k,*)."""
+    def _einsum_attention(self, q, k, v, idx, r, seg=None):
+        """Reference attention over selected tokens.  All inputs (B,H,k,*).
+        ``seg``: optional (B,H,k) segment ids of the selected tokens — packed
+        rows additionally mask cross-segment pairs."""
         scale = self.cfg.d_head ** -0.5
         s = jnp.einsum("bnqd,bnkd->bnqk", q, k,
                        preferred_element_type=jnp.float32) * scale
         mask = selection_mask(idx, idx)                            # (B,H,k,k)
+        if seg is not None:
+            mask &= seg[..., :, None] == seg[..., None, :]
         s = jnp.where(mask, s, NEG_INF)
         p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
         att = jnp.einsum("bnqk,bnkd->bnqd", p.astype(v.dtype), v,
@@ -196,8 +215,18 @@ class MoSAAttention:
     def prefill(self, params, x, cache: MoSAKVCache, positions=None,
                 valid=None):
         """Run the prompt through training-style selection and fill the cache
-        with each head's top-k K/V (the prompt is fully known, so
+        with each head's top candidates (the prompt is fully known, so
         non-autoregressive selection is exact here).
+
+        The cache is filled WIDE — ``min(capacity, T)`` candidates, not just
+        the ``k_for(T)`` the output uses.  Width costs nothing (the slots
+        exist either way) and is what makes chunked / continued prefill
+        (``prefill_past``) EXACT under the growing ``k = T/rho`` schedule: a
+        token in the final top-``k_for(T_total)`` has prefix rank at most
+        ``k_for(T_total) <= capacity``, so a capacity-wide boundary never
+        drops it (DESIGN §9).  Under a constant-k schedule capacity equals
+        ``k_fixed`` and nothing changes.  The layer OUTPUT ``y`` still uses
+        exactly the training-time ``k_for(T)`` selection.
 
         ``valid`` (B, T) bool masks right-pad tokens out of the selection
         (scores to -1.0, see ``__call__``); slots that still land on a pad
@@ -208,7 +237,7 @@ class MoSAAttention:
         c, cd = self.cfg, self.compute_dtype
         B, T, h = x.shape
         k_cache = cache.k.shape[2]
-        k = min(self.k_for(T), k_cache)
+        k = min(k_cache, T)
 
         y = self(params, x, positions, valid)
 
@@ -244,25 +273,27 @@ class MoSAAttention:
         suffix, reproducing training-style selection over the full prompt
         (DESIGN §7).
 
-        Why this works and is cheap: a top-k over prefix+suffix can only
-        contain prefix tokens that are in the top-k of the prefix — which
-        is what the restored cache holds (scores, original positions,
-        K/V).  So the union of {cached entries} and {suffix tokens} is a
-        superset of the true selection whenever the selection width did
-        not grow since the boundary: EXACT under a constant-k schedule
-        (``k_fixed``, the paper's §3.4 long-sequence serving mode, or a
-        ``min_k``/capacity-clamped k).  Under the growing ``k = T / rho``
-        schedule the prefix side is limited to the boundary's top-k —
-        tokens the boundary dropped cannot re-enter — the same MoD-style
-        approximation class as streaming decode (DESIGN §5).  The
-        selection width matches one-shot prefill either way:
-        ``min(k_for(L0 + T_valid), capacity)``, computed on traced
-        lengths by rank-masking the union top-k (which ``lax.top_k``
-        already orders by score).  Suffix-token outputs attend the final
-        selection under the usual index-causal mask — identical math to
-        ``__call__`` restricted to suffix queries.  (The forced first
-        token rides along: its cache entry gets a selection boost, its
-        stored score stays real.)
+        Why this is EXACT — for every chunk split, every schedule: a token
+        in the one-shot top-``k_for(T_total)`` has, within any prefix, rank
+        at most ``k_for(T_total) <= capacity``; since ``prefill`` and this
+        method both store the CAPACITY-wide top of their candidate union at
+        every boundary, such a token is never dropped at a boundary, so the
+        union of {cached entries} and {suffix tokens} is always a superset
+        of the true selection.  (Scores, original-position RoPE, and K/V of
+        cached entries are identical to what one-shot prefill computes, and
+        the ascending-idx slot order makes top-k tie-breaking match too.)
+        This covers the constant-k schedule (``k_fixed``, paper §3.4) AND
+        the growing ``k = T / rho`` schedule — the former stored-width
+        clamp to the chunk-local ``k_eff`` was the growing-k
+        under-selection bug (DESIGN §9).  The output selection width
+        matches one-shot prefill: ``min(k_for(L0 + T_valid), capacity)``,
+        computed on traced lengths by rank-masking the union top-k (which
+        ``lax.top_k`` already orders by score) in the suffix-output
+        attention only.  Suffix-token outputs attend the final selection
+        under the usual index-causal mask — identical math to ``__call__``
+        restricted to suffix queries.  (The forced first token rides
+        along: its cache entry gets a selection boost, its stored score
+        stays real.)
         """
         c, cd = self.cfg, self.compute_dtype
         B, T, h = x.shape
@@ -315,7 +346,14 @@ class MoSAAttention:
 
         sel_ok = r_sel > 0.0          # -inf empties / -1.0 pads drop out
         # One-shot selection width on traced lengths: top_k ordered the
-        # union by (boosted) score, so rank == position.
+        # union by (boosted) score, so rank == position.  The rank mask
+        # gates ONLY the suffix-output attention (y must reproduce the
+        # one-shot k_for(total) selection); STORAGE keeps the full
+        # capacity-wide union — clobbering stored entries down to k_eff is
+        # exactly the growing-k under-selection bug: a later chunk's larger
+        # k_for(total') could legally re-admit a prefix token this chunk's
+        # k_eff would have discarded.  Capacity-wide storage at every
+        # boundary makes chunked == one-shot EXACT (see ``prefill``).
         total = L0 + nv
         if c.k_fixed > 0:
             k_eff = jnp.minimum(c.k_fixed, total)
@@ -323,24 +361,27 @@ class MoSAAttention:
             k_eff = jnp.maximum(jnp.minimum(total // c.sparsity, total),
                                 jnp.minimum(c.min_k, total))
         k_eff = jnp.minimum(k_eff, kc)
-        sel_ok = sel_ok & (jnp.arange(kc) < k_eff[:, None, None])
+        rank_ok = sel_ok & (jnp.arange(kc) < k_eff[:, None, None])
         r_st = jnp.where(sel_ok, r_sel, -jnp.inf)
         idx_st = jnp.where(sel_ok, idx_sel, -1)
         order = jnp.argsort(jnp.where(idx_st < 0,
                                       jnp.iinfo(jnp.int32).max, idx_st), -1)
         idx_st = jnp.take_along_axis(idx_st, order, -1)
         r_st = jnp.take_along_axis(r_st, order, -1)
+        rank_ok = jnp.take_along_axis(rank_ok, order, -1)
         k_sel = jnp.take_along_axis(k_sel, order[..., None], 2)
         v_sel = jnp.take_along_axis(v_sel, order[..., None], 2)
 
         # Suffix-query outputs over the final selection (index-causal mask,
         # router-score scaling) — __call__ restricted to suffix queries.
-        is_suffix = (idx_st >= L0[:, None, None]) & (idx_st >= 0)  # (B,H,kc)
+        # Queries AND keys are rank-masked to the one-shot width.
+        is_suffix = rank_ok & (idx_st >= L0[:, None, None]) & (idx_st >= 0)
         t_j = jnp.clip(idx_st - L0[:, None, None], 0, T - 1)
         q_sel = jnp.take_along_axis(q_all, t_j[..., None], axis=2)
         s = jnp.einsum("bnqd,bnkd->bnqk", q_sel, k_sel,
                        preferred_element_type=jnp.float32) * (d ** -0.5)
-        mask = selection_mask(idx_st, idx_st) & (idx_st >= 0)[:, :, None, :]
+        mask = (selection_mask(idx_st, idx_st)
+                & (idx_st >= 0)[:, :, None, :] & rank_ok[:, :, None, :])
         s = jnp.where(mask, s, NEG_INF)
         p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
         att = jnp.einsum("bnqk,bnkd->bnqd", p.astype(cd), v_sel,
@@ -364,6 +405,47 @@ class MoSAAttention:
                             v_sel.astype(cache.v.dtype),
                             r_st.astype(jnp.float32), idx_st, L0 + nv)
         return y, cache
+
+    def prefill_packed(self, params, x, cache: MoSAKVCache, meta):
+        """Packed multi-segment chunked prefill (DESIGN §9).
+
+        ``x``: (1, C, h) — a flattened chunk of N prompt segments, each
+        continuing a different batch row's cache.  ``meta`` is the packed
+        layout built by ``TransformerLM.prefill_packed``: ``rows`` (N,)
+        batch row per segment (-1 = inactive), ``tok_idx``/``in_seg``
+        (N, C) the unpack gather, ``seg_of_tok``/``local_of_tok``/
+        ``row_of_tok`` (C,) the scatter-back.
+
+        Expert-choice selection is PER SEGMENT — the chunk is unpacked to a
+        (N, C) right-padded batch and run through ``prefill_past`` (whose
+        per-row traced ``L0 = cache.length`` and ``valid`` masking already
+        express exactly the continued-chunk semantics), then the updated
+        rows scatter back into the full B-row cache.  A row may appear at
+        most ONCE per chunk (the scheduler guarantees it; duplicate rows
+        would race in the write-back).  The MoSA projections run on the
+        (N, C) unpacked view — an O(N·C) overhead on an O(k²) side, paid
+        for keeping the exact-union selection math in one place.
+        """
+        B = cache.k.shape[0]
+        rows = meta["rows"]
+        rowc = jnp.clip(rows, 0, B - 1)
+        rowd = jnp.where(rows < 0, B, rows)               # drop index
+        gc = MoSAKVCache(cache.k[rowc], cache.v[rowc], cache.scores[rowc],
+                         cache.idx[rowc], cache.length[rowc])
+        xs = x[0][meta["tok_idx"]] * meta["in_seg"][..., None].astype(x.dtype)
+        y_seg, gc2 = self.prefill_past(params, xs, gc, None, meta["in_seg"])
+
+        def wb(old, new):
+            return old.at[rowd].set(new.astype(old.dtype), mode="drop")
+
+        cache = MoSAKVCache(wb(cache.k, gc2.k), wb(cache.v, gc2.v),
+                            wb(cache.scores, gc2.scores),
+                            wb(cache.idx, gc2.idx),
+                            wb(cache.length, gc2.length))
+        segc = jnp.maximum(meta["seg_of_tok"], 0)
+        y = y_seg[segc, meta["local_of_tok"]]             # (C, h)
+        y = jnp.where((meta["row_of_tok"] >= 0)[:, None], y, 0.0)
+        return y[None].astype(y_seg.dtype), cache
 
     def decode_step(self, params, x, cache: MoSAKVCache, positions=None):
         """Streaming expert-choice decode (MoD-style adaptation, DESIGN §5).

@@ -58,13 +58,31 @@ class SyntheticCorpus:
 
 @dataclasses.dataclass
 class PackedLMDataset:
-    """Packs documents into (B, T+1) blocks -> {"tokens", "labels"}."""
+    """Packs documents into (B, T+1) blocks -> {"tokens", "labels"}.
+
+    ``segmented=True`` additionally emits per-token document metadata so the
+    model can mask cross-document attention (TransformerLM.loss threads it
+    to every attention mixer):
+
+      * ``"segments"``  (B, T) int32 — document id of each input token
+        (ids are distinct per document within a row; a document spanning a
+        row boundary keeps its id, which is harmless — rows never interact);
+      * ``"positions"`` (B, T) int32 — LOCAL offset within the document, so
+        RoPE restarts at every boundary;
+      * boundary labels are masked to -1: the label of a document's last
+        token is the next document's first token — an unlearnable target
+        that polluted the loss in the unsegmented scheme.
+
+    ``segmented=False`` (default) is byte-identical to the historical
+    batches — existing training runs resume unchanged.
+    """
 
     corpus: SyntheticCorpus
     seq_len: int
     global_batch: int
     shard_index: int = 0
     shard_count: int = 1
+    segmented: bool = False
 
     def __post_init__(self):
         assert self.global_batch % self.shard_count == 0, \
@@ -76,6 +94,8 @@ class PackedLMDataset:
         B, T = self.local_batch, self.seq_len
         need = B * (T + 1)
         out = np.empty((need,), np.int32)
+        seg = np.empty((need,), np.int32)
+        pos = np.empty((need,), np.int32)
         filled = 0
         # each (step, shard, i) names its own document stream
         i = 0
@@ -84,10 +104,20 @@ class PackedLMDataset:
                 ((step * self.shard_count + self.shard_index) << 16) + i)
             take = min(len(doc), need - filled)
             out[filled:filled + take] = doc[:take]
+            seg[filled:filled + take] = i
+            pos[filled:filled + take] = np.arange(take, dtype=np.int32)
             filled += take
             i += 1
         blk = out.reshape(B, T + 1)
-        return {"tokens": blk[:, :-1].copy(), "labels": blk[:, 1:].copy()}
+        if not self.segmented:
+            return {"tokens": blk[:, :-1].copy(), "labels": blk[:, 1:].copy()}
+        sb = seg.reshape(B, T + 1)
+        pb = pos.reshape(B, T + 1)
+        labels = blk[:, 1:].copy()
+        labels[sb[:, 1:] != sb[:, :-1]] = -1     # cross-doc target: masked
+        return {"tokens": blk[:, :-1].copy(), "labels": labels,
+                "segments": sb[:, :-1].copy(),
+                "positions": pb[:, :-1].copy()}
 
     def iter_from(self, step: int) -> Iterator[dict]:
         while True:

@@ -18,6 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
@@ -108,4 +109,120 @@ def flash_attention_pallas(q, k, v, *, block_q: int = 128, block_k: int = 128,
         out_shape=jax.ShapeDtypeStruct((B, Hq, Tq, d), q.dtype),
         interpret=interpret,
     )(q, k, v)
+    return out
+
+
+# --------------------------------------------------------------- packed varlen
+def _flash_varlen_kernel(seg_smem_ref, cu_ref, seg_ref, q_ref, k_ref, v_ref,
+                         o_ref, *, block_k: int, scale: float, window: int):
+    """Packed ragged self-attention over a flattened token stream.
+
+    Grid: (Hq, Tp // block_q).  Scalar-prefetch (SMEM):
+      seg_smem_ref: (Tp,)  — segment id per packed token (-1 = padding)
+      cu_ref:       (N+1,) — cu_seqlens, segment s spans [cu[s], cu[s+1])
+    VMEM refs:
+      seg_ref: (1, Tp)          — same segment ids, vector-readable
+      q_ref:   (1, block_q, d); k_ref, v_ref: (1, Tp, d); o_ref like q_ref.
+
+    The causal mask uses GLOBAL packed positions — within a segment global
+    order equals local order, and the (seg_q == seg_k) term removes every
+    cross-segment pair, so this is per-sequence causal attention with zero
+    cross-contamination.  The KV block range is cut to
+    [segment start of the block's first query, query block end), so work per
+    query block is O(its own segment), not O(total).
+    """
+    block_q, d = q_ref.shape[1], q_ref.shape[2]
+    Tp = k_ref.shape[1]
+
+    qi = pl.program_id(1)
+    q_start = qi * block_q
+    q = q_ref[0].astype(jnp.float32) * scale
+    q_pos = q_start + jax.lax.iota(jnp.int32, block_q)
+    seg_q = jax.lax.dynamic_slice(seg_ref[0], (q_start,), (block_q,))
+
+    # first query's segment start bounds every key this block can see
+    # (padding rows have seg = -1: clamp to 0 so the SMEM read stays in range)
+    first_seg = jnp.maximum(seg_smem_ref[q_start], 0)
+    seg_lo = cu_ref[first_seg]
+    lo = seg_lo // block_k
+    if window > 0:
+        lo = jnp.maximum(lo, (q_start - window + 1) // block_k)
+    hi = jnp.minimum(pl.cdiv(q_start + block_q, block_k), Tp // block_k)
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = jax.lax.dynamic_slice(
+            k_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice(
+            v_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
+        k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        seg_k = jax.lax.dynamic_slice(seg_ref[0], (kb * block_k,), (block_k,))
+
+        s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        mask = (seg_q[:, None] == seg_k[None, :]) & \
+            (q_pos[:, None] >= k_pos[None, :])
+        if window > 0:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1)
+        acc = acc * corr[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
+                                             "window", "interpret"))
+def flash_attention_varlen_pallas(q, k, v, seg, cu_seqlens, *,
+                                  block_q: int = 128, block_k: int = 128,
+                                  scale: float | None = None, window: int = 0,
+                                  interpret: bool = False):
+    """Packed ragged (cu_seqlens) causal attention, GQA.
+
+    q: (Hq, Tp, d); k, v: (Hkv, Tp, d) — Tp = padded total token count of the
+    flattened stream.  seg: (Tp,) int32 segment ids (-1 on padding rows);
+    cu_seqlens: (N+1,) int32 cumulative offsets, prefetched to SMEM so the
+    per-block KV range is cut before the DMA is issued.
+    Preconditions (ops.py): Tp % block_q == 0 == Tp % block_k, d % 128 == 0.
+    """
+    Hq, Tp, d = q.shape
+    Hkv = k.shape[0]
+    assert Tp % block_q == 0 and Tp % block_k == 0
+    assert Hq % Hkv == 0
+    n_rep = Hq // Hkv
+    scale = scale if scale is not None else d ** -0.5
+    seg2d = seg.reshape(1, Tp)
+
+    kernel = functools.partial(_flash_varlen_kernel, block_k=block_k,
+                               scale=scale, window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Hq, Tp // block_q),
+        in_specs=[
+            pl.BlockSpec((1, Tp), lambda h, i, sg, cu: (0, 0)),       # seg
+            pl.BlockSpec((1, block_q, d), lambda h, i, sg, cu: (h, i, 0)),
+            pl.BlockSpec((1, Tp, d), lambda h, i, sg, cu: (h // n_rep, 0, 0)),
+            pl.BlockSpec((1, Tp, d), lambda h, i, sg, cu: (h // n_rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda h, i, sg, cu: (h, i, 0)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Hq, Tp, d), q.dtype),
+        interpret=interpret,
+    )(seg, cu_seqlens.astype(jnp.int32), seg2d, q, k, v)
     return out

@@ -3,6 +3,9 @@
 The hot spot the paper leaves to "future CUDA kernels": attention over the k
 selected tokens of each head, with
   * the index-derived causal mask (I_q >= I_k) fused in,
+  * an optional segment mask (seg_q == seg_k) for packed varlen streams, so
+    selected tokens of different documents / requests sharing one flattened
+    stream never attend across a sequence boundary,
   * the router scaling (diag(r) A) fused into the output,
   * flash-style streaming softmax (fp32 running max / denom),
   * BlockSpec VMEM tiling: one (batch*head) slice per grid step, queries in
@@ -10,8 +13,10 @@ selected tokens of each head, with
 
 Shapes are MXU-friendly by construction: ops.py pads d_head to a multiple of
 128 lanes and S (selected count) to a multiple of the block size; padded KV
-slots carry idx = +INT_MAX so the mask kills them, padded queries are sliced
-off by the wrapper.
+slots carry idx = +INT_MAX and seg = -1 so the mask kills them, padded
+queries are sliced off by the wrapper.  The dense (single-segment) path
+passes seg = 0 everywhere, which makes the segment term a constant-true and
+reproduces the original mask bit-for-bit.
 
 VMEM budget per grid step (defaults bq=bk=128, d<=128 padded):
   q block 128x128x4B = 64 KiB; k/v blocks 2x64 KiB; scores 128x128x4B = 64 KiB
@@ -36,11 +41,23 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _mosa_kernel(idx_ref, r_ref, q_ref, k_ref, v_ref, o_ref, *,
+def _pair_mask(idx_q, idx_k, seg_q, seg_k):
+    """Causal-by-original-position AND same-segment AND valid-key mask.
+
+    idx carries the token's ORIGINAL position (within its own sequence);
+    seg carries the segment id of the packed stream (-1 = padding).
+    """
+    return ((seg_q[:, None] == seg_k[None, :])
+            & (idx_q[:, None] >= idx_k[None, :])
+            & (idx_k >= 0)[None, :])
+
+
+def _mosa_kernel(idx_ref, seg_ref, r_ref, q_ref, k_ref, v_ref, o_ref, *,
                  block_k: int, scale: float):
     """Grid: (BH, S // block_q).  Refs (VMEM blocks):
 
     idx_ref: (1, S)       — selected-token original positions (whole row)
+    seg_ref: (1, S)       — selected-token segment ids (whole row)
     r_ref:   (1, block_q) — router scores for this query block
     q_ref:   (1, block_q, d)
     k_ref:   (1, S, d)    — all selected keys for this (b, h)
@@ -54,6 +71,7 @@ def _mosa_kernel(idx_ref, r_ref, q_ref, k_ref, v_ref, o_ref, *,
     q = q_ref[0].astype(jnp.float32) * scale                  # (bq, d)
     qi = pl.program_id(1)
     idx_q = jax.lax.dynamic_slice(idx_ref[0], (qi * block_q,), (block_q,))
+    seg_q = jax.lax.dynamic_slice(seg_ref[0], (qi * block_q,), (block_q,))
 
     def body(kb, carry):
         m_prev, l_prev, acc = carry
@@ -62,10 +80,11 @@ def _mosa_kernel(idx_ref, r_ref, q_ref, k_ref, v_ref, o_ref, *,
         v_blk = jax.lax.dynamic_slice(
             v_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
         idx_k = jax.lax.dynamic_slice(idx_ref[0], (kb * block_k,), (block_k,))
+        seg_k = jax.lax.dynamic_slice(seg_ref[0], (kb * block_k,), (block_k,))
 
         s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (bq, bk)
-        mask = (idx_q[:, None] >= idx_k[None, :]) & (idx_k >= 0)[None, :]
+        mask = _pair_mask(idx_q, idx_k, seg_q, seg_k)
         s = jnp.where(mask, s, NEG_INF)
 
         m_new = jnp.maximum(m_prev, s.max(axis=1))
@@ -88,7 +107,7 @@ def _mosa_kernel(idx_ref, r_ref, q_ref, k_ref, v_ref, o_ref, *,
     o_ref[0] = out.astype(o_ref.dtype)
 
 
-def _mosa_fwd_res_kernel(idx_ref, r_ref, q_ref, k_ref, v_ref,
+def _mosa_fwd_res_kernel(idx_ref, seg_ref, r_ref, q_ref, k_ref, v_ref,
                          o_ref, lse_ref, *, block_k: int, scale: float):
     """Training forward: same streaming softmax as ``_mosa_kernel`` but emits
     the residuals the backward pass needs — the UNSCALED output ``o_pre``
@@ -103,6 +122,7 @@ def _mosa_fwd_res_kernel(idx_ref, r_ref, q_ref, k_ref, v_ref,
     q = q_ref[0].astype(jnp.float32) * scale                  # (bq, d)
     qi = pl.program_id(1)
     idx_q = jax.lax.dynamic_slice(idx_ref[0], (qi * block_q,), (block_q,))
+    seg_q = jax.lax.dynamic_slice(seg_ref[0], (qi * block_q,), (block_q,))
 
     def body(kb, carry):
         m_prev, l_prev, acc = carry
@@ -111,10 +131,11 @@ def _mosa_fwd_res_kernel(idx_ref, r_ref, q_ref, k_ref, v_ref,
         v_blk = jax.lax.dynamic_slice(
             v_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
         idx_k = jax.lax.dynamic_slice(idx_ref[0], (kb * block_k,), (block_k,))
+        seg_k = jax.lax.dynamic_slice(seg_ref[0], (kb * block_k,), (block_k,))
 
         s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
-        mask = (idx_q[:, None] >= idx_k[None, :]) & (idx_k >= 0)[None, :]
+        mask = _pair_mask(idx_q, idx_k, seg_q, seg_k)
         s = jnp.where(mask, s, NEG_INF)
 
         m_new = jnp.maximum(m_prev, s.max(axis=1))
@@ -139,10 +160,10 @@ def _mosa_fwd_res_kernel(idx_ref, r_ref, q_ref, k_ref, v_ref,
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
                                              "interpret"))
-def mosa_attention_pallas(q, k, v, idx, r, *, block_q: int = 128,
+def mosa_attention_pallas(q, k, v, idx, seg, r, *, block_q: int = 128,
                           block_k: int = 128, scale: float | None = None,
                           interpret: bool = False):
-    """q, k, v: (B, H, S, d); idx: (B, H, S) int32; r: (B, H, S) fp32.
+    """q, k, v: (B, H, S, d); idx, seg: (B, H, S) int32; r: (B, H, S) fp32.
 
     Preconditions (ops.py guarantees them): S % block_q == 0,
     S % block_k == 0, d padded to 128 lanes.
@@ -155,6 +176,7 @@ def mosa_attention_pallas(q, k, v, idx, r, *, block_q: int = 128,
     kf = k.reshape(BH, S, d)
     vf = v.reshape(BH, S, d)
     idxf = idx.reshape(BH, S)
+    segf = seg.reshape(BH, S)
     rf = r.reshape(BH, S).astype(jnp.float32)
 
     grid = (BH, S // block_q)
@@ -164,6 +186,7 @@ def mosa_attention_pallas(q, k, v, idx, r, *, block_q: int = 128,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, S), lambda b, i: (b, 0)),            # idx
+            pl.BlockSpec((1, S), lambda b, i: (b, 0)),            # seg
             pl.BlockSpec((1, block_q), lambda b, i: (b, i)),      # r
             pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),  # q
             pl.BlockSpec((1, S, d), lambda b, i: (b, 0, 0)),      # k
@@ -172,13 +195,13 @@ def mosa_attention_pallas(q, k, v, idx, r, *, block_q: int = 128,
         out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
         interpret=interpret,
-    )(idxf, rf, qf, kf, vf)
+    )(idxf, segf, rf, qf, kf, vf)
     return out.reshape(B, H, S, d)
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
                                              "interpret"))
-def mosa_attention_fwd_res(q, k, v, idx, r, *, block_q: int = 128,
+def mosa_attention_fwd_res(q, k, v, idx, seg, r, *, block_q: int = 128,
                            block_k: int = 128, scale: float | None = None,
                            interpret: bool = False):
     """Training-path forward.  Same preconditions as ``mosa_attention_pallas``
@@ -198,6 +221,7 @@ def mosa_attention_fwd_res(q, k, v, idx, r, *, block_q: int = 128,
     kf = k.reshape(BH, S, d)
     vf = v.reshape(BH, S, d)
     idxf = idx.reshape(BH, S)
+    segf = seg.reshape(BH, S)
     rf = r.reshape(BH, S).astype(jnp.float32)
 
     grid = (BH, S // block_q)
@@ -208,6 +232,7 @@ def mosa_attention_fwd_res(q, k, v, idx, r, *, block_q: int = 128,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, S), lambda b, i: (b, 0)),            # idx
+            pl.BlockSpec((1, S), lambda b, i: (b, 0)),            # seg
             pl.BlockSpec((1, block_q), lambda b, i: (b, i)),      # r (unused)
             pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),  # q
             pl.BlockSpec((1, S, d), lambda b, i: (b, 0, 0)),      # k
@@ -222,5 +247,5 @@ def mosa_attention_fwd_res(q, k, v, idx, r, *, block_q: int = 128,
             jax.ShapeDtypeStruct((BH, S), jnp.float32),
         ],
         interpret=interpret,
-    )(idxf, rf, qf, kf, vf)
+    )(idxf, segf, rf, qf, kf, vf)
     return o_pre.reshape(B, H, S, d), lse.reshape(B, H, S)

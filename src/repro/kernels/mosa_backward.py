@@ -5,7 +5,8 @@ probability matrix from memory — scores are recomputed from Q/K and the
 saved per-query log-sum-exp (``lse``), so the only extra residuals the
 forward keeps are ``o_pre`` (B,H,S,d fp32) and ``lse`` (B,H,S fp32).
 
-Math (S_ij = scale * q_i.k_j masked by I_q >= I_k; P = softmax rows;
+Math (S_ij = scale * q_i.k_j masked by I_q >= I_k and seg_q == seg_k;
+P = softmax rows;
 o_pre_i = sum_j P_ij v_j; out_i = r_i * o_pre_i; g = d out):
 
   dr_i   = g_i . o_pre_i                       (router-score gradient — the
@@ -40,14 +41,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.mosa_attention import _pair_mask
+
 NEG_INF = -1e30
 
 
-def _mosa_bwd_dq_kernel(idx_ref, q_ref, k_ref, v_ref, gt_ref, lse_ref,
-                        delta_ref, dq_ref, *, block_k: int, scale: float):
+def _mosa_bwd_dq_kernel(idx_ref, seg_ref, q_ref, k_ref, v_ref, gt_ref,
+                        lse_ref, delta_ref, dq_ref, *, block_k: int,
+                        scale: float):
     """Grid (BH, S // block_q).  Refs (VMEM blocks):
 
     idx_ref:   (1, S)
+    seg_ref:   (1, S)
     q_ref:     (1, block_q, d)
     k_ref:     (1, S, d)
     v_ref:     (1, S, d)
@@ -66,6 +71,7 @@ def _mosa_bwd_dq_kernel(idx_ref, q_ref, k_ref, v_ref, gt_ref, lse_ref,
     delta = delta_ref[0]
     qi = pl.program_id(1)
     idx_q = jax.lax.dynamic_slice(idx_ref[0], (qi * block_q,), (block_q,))
+    seg_q = jax.lax.dynamic_slice(seg_ref[0], (qi * block_q,), (block_q,))
 
     def body(kb, acc):
         k_blk = jax.lax.dynamic_slice(
@@ -73,10 +79,11 @@ def _mosa_bwd_dq_kernel(idx_ref, q_ref, k_ref, v_ref, gt_ref, lse_ref,
         v_blk = jax.lax.dynamic_slice(
             v_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
         idx_k = jax.lax.dynamic_slice(idx_ref[0], (kb * block_k,), (block_k,))
+        seg_k = jax.lax.dynamic_slice(seg_ref[0], (kb * block_k,), (block_k,))
 
         s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        mask = (idx_q[:, None] >= idx_k[None, :]) & (idx_k >= 0)[None, :]
+        mask = _pair_mask(idx_q, idx_k, seg_q, seg_k)
         p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)    # (bq, bk)
         dp = jax.lax.dot_general(gt, v_blk, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
@@ -90,12 +97,13 @@ def _mosa_bwd_dq_kernel(idx_ref, q_ref, k_ref, v_ref, gt_ref, lse_ref,
     dq_ref[0] = dq.astype(dq_ref.dtype)
 
 
-def _mosa_bwd_dkv_kernel(idx_ref, q_ref, k_ref, v_ref, gt_ref, lse_ref,
-                         delta_ref, dk_ref, dv_ref, *, block_q: int,
+def _mosa_bwd_dkv_kernel(idx_ref, seg_ref, q_ref, k_ref, v_ref, gt_ref,
+                         lse_ref, delta_ref, dk_ref, dv_ref, *, block_q: int,
                          scale: float):
     """Grid (BH, S // block_k).  Refs:
 
     idx_ref:   (1, S)
+    seg_ref:   (1, S)
     q_ref:     (1, S, d) — all queries
     k_ref:     (1, block_k, d)
     v_ref:     (1, block_k, d)
@@ -113,6 +121,7 @@ def _mosa_bwd_dkv_kernel(idx_ref, q_ref, k_ref, v_ref, gt_ref, lse_ref,
     v = v_ref[0].astype(jnp.float32)
     ki = pl.program_id(1)
     idx_k = jax.lax.dynamic_slice(idx_ref[0], (ki * block_k,), (block_k,))
+    seg_k = jax.lax.dynamic_slice(seg_ref[0], (ki * block_k,), (block_k,))
 
     def body(qb, carry):
         dk_acc, dv_acc = carry
@@ -125,10 +134,11 @@ def _mosa_bwd_dkv_kernel(idx_ref, q_ref, k_ref, v_ref, gt_ref, lse_ref,
         delta_blk = jax.lax.dynamic_slice(delta_ref[0], (qb * block_q,),
                                           (block_q,))
         idx_q = jax.lax.dynamic_slice(idx_ref[0], (qb * block_q,), (block_q,))
+        seg_q = jax.lax.dynamic_slice(seg_ref[0], (qb * block_q,), (block_q,))
 
         s = jax.lax.dot_general(q_blk, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        mask = (idx_q[:, None] >= idx_k[None, :]) & (idx_k >= 0)[None, :]
+        mask = _pair_mask(idx_q, idx_k, seg_q, seg_k)
         p = jnp.where(mask, jnp.exp(s - lse_blk[:, None]), 0.0)  # (bq, bk)
         dv_acc = dv_acc + jax.lax.dot_general(
             p, gt_blk, (((0,), (0,)), ((), ())),
@@ -149,13 +159,13 @@ def _mosa_bwd_dkv_kernel(idx_ref, q_ref, k_ref, v_ref, gt_ref, lse_ref,
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
                                              "interpret"))
-def mosa_attention_bwd_pallas(q, k, v, idx, gt, lse, delta, *,
+def mosa_attention_bwd_pallas(q, k, v, idx, seg, gt, lse, delta, *,
                               block_q: int = 128, block_k: int = 128,
                               scale: float | None = None,
                               interpret: bool = False):
     """Backward dispatch: two pallas_calls sharing one residual layout.
 
-    q, k, v: (B, H, S, d) (padded, see ops.py); idx: (B, H, S) int32;
+    q, k, v: (B, H, S, d) (padded, see ops.py); idx, seg: (B, H, S) int32;
     gt (= r * g): (B, H, S, d) fp32; lse, delta: (B, H, S) fp32.
     Returns (dq, dk, dv) in the dtypes of (q, k, v).
     """
@@ -166,6 +176,7 @@ def mosa_attention_bwd_pallas(q, k, v, idx, gt, lse, delta, *,
     qf, kf, vf = (x.reshape(BH, S, d) for x in (q, k, v))
     gtf = gt.reshape(BH, S, d).astype(jnp.float32)
     idxf = idx.reshape(BH, S)
+    segf = seg.reshape(BH, S)
     lsef = lse.reshape(BH, S)
     deltaf = delta.reshape(BH, S)
 
@@ -179,6 +190,7 @@ def mosa_attention_bwd_pallas(q, k, v, idx, gt, lse, delta, *,
         grid=(BH, S // block_q),
         in_specs=[
             pl.BlockSpec((1, S), row),                 # idx
+            pl.BlockSpec((1, S), row),                 # seg
             pl.BlockSpec((1, block_q, d), blkd),       # q
             pl.BlockSpec((1, S, d), rowd),             # k
             pl.BlockSpec((1, S, d), rowd),             # v
@@ -189,13 +201,14 @@ def mosa_attention_bwd_pallas(q, k, v, idx, gt, lse, delta, *,
         out_specs=pl.BlockSpec((1, block_q, d), blkd),
         out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
         interpret=interpret,
-    )(idxf, qf, kf, vf, gtf, lsef, deltaf)
+    )(idxf, segf, qf, kf, vf, gtf, lsef, deltaf)
 
     dk, dv = pl.pallas_call(
         functools.partial(_mosa_bwd_dkv_kernel, block_q=block_q, scale=scale),
         grid=(BH, S // block_k),
         in_specs=[
             pl.BlockSpec((1, S), row),                 # idx
+            pl.BlockSpec((1, S), row),                 # seg
             pl.BlockSpec((1, S, d), rowd),             # q
             pl.BlockSpec((1, block_k, d), blkd),       # k
             pl.BlockSpec((1, block_k, d), blkd),       # v
@@ -212,7 +225,7 @@ def mosa_attention_bwd_pallas(q, k, v, idx, gt, lse, delta, *,
             jax.ShapeDtypeStruct((BH, S, d), v.dtype),
         ],
         interpret=interpret,
-    )(idxf, qf, kf, vf, gtf, lsef, deltaf)
+    )(idxf, segf, qf, kf, vf, gtf, lsef, deltaf)
 
     return (dq.reshape(B, H, S, d), dk.reshape(B, H, S, d),
             dv.reshape(B, H, S, d))

@@ -23,7 +23,8 @@ Wrapper-level math kept OUT of the kernels (cheap O(S*d) elementwise):
   delta = rowsum(g~ * o_pre)    (the flash-bwd softmax correction term)
   dr    = rowsum(g  * o_pre)
 
-``idx`` is integer (non-differentiable): its cotangent is a ``float0`` zero.
+``idx``/``seg`` are integer (non-differentiable): their cotangents are
+``float0`` zeros.
 """
 
 from __future__ import annotations
@@ -42,42 +43,47 @@ from repro.kernels.mosa_backward import mosa_attention_bwd_pallas
 @functools.lru_cache(maxsize=None)
 def _build(block_q: int, block_k: int, scale: float, interpret: bool):
     @jax.custom_vjp
-    def fused(q, k, v, idx, r):
-        return mosa_attention_pallas(q, k, v, idx, r, block_q=block_q,
+    def fused(q, k, v, idx, seg, r):
+        return mosa_attention_pallas(q, k, v, idx, seg, r, block_q=block_q,
                                      block_k=block_k, scale=scale,
                                      interpret=interpret)
 
-    def fwd(q, k, v, idx, r):
-        o_pre, lse = mosa_attention_fwd_res(q, k, v, idx, r, block_q=block_q,
-                                            block_k=block_k, scale=scale,
-                                            interpret=interpret)
+    def fwd(q, k, v, idx, seg, r):
+        o_pre, lse = mosa_attention_fwd_res(q, k, v, idx, seg, r,
+                                            block_q=block_q, block_k=block_k,
+                                            scale=scale, interpret=interpret)
         rf = r.astype(jnp.float32)
         out = (o_pre * rf[..., None]).astype(q.dtype)
-        return out, (q, k, v, idx, rf, o_pre, lse)
+        return out, (q, k, v, idx, seg, rf, o_pre, lse)
 
     def bwd(res, g):
-        q, k, v, idx, rf, o_pre, lse = res
+        q, k, v, idx, seg, rf, o_pre, lse = res
         g32 = g.astype(jnp.float32)
         gt = g32 * rf[..., None]                       # (B,H,S,d) fp32
         dr = jnp.sum(g32 * o_pre, axis=-1)             # router-score grad
         delta = jnp.sum(gt * o_pre, axis=-1)
         dq, dk, dv = mosa_attention_bwd_pallas(
-            q, k, v, idx, gt, lse, delta, block_q=block_q, block_k=block_k,
-            scale=scale, interpret=interpret)
+            q, k, v, idx, seg, gt, lse, delta, block_q=block_q,
+            block_k=block_k, scale=scale, interpret=interpret)
         didx = np.zeros(idx.shape, jax.dtypes.float0)  # int input: no grad
-        return dq, dk, dv, didx, dr.astype(jnp.float32)
+        dseg = np.zeros(seg.shape, jax.dtypes.float0)
+        return dq, dk, dv, didx, dseg, dr.astype(jnp.float32)
 
     fused.defvjp(fwd, bwd)
     return fused
 
 
-def mosa_attention_trainable(q, k, v, idx, r, *, block_q: int = 128,
-                             block_k: int = 128, scale: float | None = None,
+def mosa_attention_trainable(q, k, v, idx, r, *, seg=None,
+                             block_q: int = 128, block_k: int = 128,
+                             scale: float | None = None,
                              interpret: bool = False):
     """Differentiable fused MoSA attention.  Same contract and preconditions
     as ``mosa_attention_pallas`` (ops.py handles padding); additionally
-    supports ``jax.grad`` w.r.t. q, k, v and r."""
+    supports ``jax.grad`` w.r.t. q, k, v and r.  ``seg`` (B, H, S) int32
+    carries packed-varlen segment ids (None = single segment)."""
     if scale is None:
         scale = q.shape[-1] ** -0.5
+    if seg is None:
+        seg = jnp.zeros(idx.shape, jnp.int32)
     return _build(block_q, block_k, float(scale), bool(interpret))(
-        q, k, v, idx, r.astype(jnp.float32))
+        q, k, v, idx, seg, r.astype(jnp.float32))

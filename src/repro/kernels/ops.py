@@ -14,7 +14,8 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention import (flash_attention_pallas,
+                                           flash_attention_varlen_pallas)
 from repro.kernels.mosa_vjp import mosa_attention_trainable
 
 LANE = 128
@@ -37,11 +38,14 @@ def _pad_to(x, axis, mult, value=0.0):
     return jnp.pad(x, widths, constant_values=value)
 
 
-def mosa_attention(q, k, v, idx, r, *, block_q: int = 128, block_k: int = 128,
-                   interpret: bool | None = None):
+def mosa_attention(q, k, v, idx, r, *, seg=None, block_q: int = 128,
+                   block_k: int = 128, interpret: bool | None = None):
     """MoSA inner attention (see kernels/mosa_attention.py).
 
     q,k,v: (B,H,S,d); idx: (B,H,S) sorted ascending; r: (B,H,S) fp32.
+    ``seg``: optional (B,H,S) int32 segment ids for packed-varlen streams —
+    selected tokens only attend selected tokens of the SAME segment (None =
+    one segment per row, the dense behaviour, bit-for-bit unchanged).
     Returns (B,H,S,d) in q.dtype.
 
     Differentiable: routed through the ``jax.custom_vjp`` in
@@ -63,11 +67,58 @@ def mosa_attention(q, k, v, idx, r, *, block_q: int = 128, block_k: int = 128,
     # pad idx with INT_MAX (mask kills padded keys), r with 0 (zero output)
     idxp = _pad_to(idx, 2, bq, value=jnp.iinfo(jnp.int32).max)
     rp = _pad_to(r, 2, bq, value=0.0)
+    segp = None if seg is None else _pad_to(seg, 2, bq, value=-1)
 
-    out = mosa_attention_trainable(qp, kp, vp, idxp, rp, block_q=bq,
-                                   block_k=bk, scale=scale,
+    out = mosa_attention_trainable(qp, kp, vp, idxp, rp, seg=segp,
+                                   block_q=bq, block_k=bk, scale=scale,
                                    interpret=interpret)
     return out[:, :, :S, :d]
+
+
+def segments_from_cu_seqlens(cu_seqlens, total: int):
+    """(seg, pos) per packed token from cumulative offsets.
+
+    cu_seqlens: (N+1,) int32 with cu[0] == 0 and cu[N] <= total.  Tokens in
+    [cu[s], cu[s+1]) get seg = s and pos = their LOCAL offset within the
+    segment; tokens >= cu[N] (padding tail) get seg = -1, pos = 0.
+    """
+    cu = jnp.asarray(cu_seqlens, jnp.int32)
+    t = jnp.arange(total, dtype=jnp.int32)
+    seg = jnp.searchsorted(cu[1:], t, side="right").astype(jnp.int32)
+    in_range = t < cu[-1]
+    seg = jnp.where(in_range, seg, -1)
+    pos = jnp.where(in_range, t - cu[jnp.maximum(seg, 0)], 0)
+    return seg, pos
+
+
+def flash_attention_varlen(q, k, v, cu_seqlens, *, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool | None = None):
+    """Packed ragged (cu_seqlens) causal/windowed GQA flash attention.
+
+    q: (total, Hq, d); k, v: (total, Hkv, d) — ONE flattened token stream
+    holding N back-to-back sequences; cu_seqlens: (N+1,) int32 cumulative
+    offsets (cu[0] = 0, cu[N] = total).  Attention is causal within each
+    segment and never crosses a boundary.  Returns (total, Hq, d) in q.dtype.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    total, Hq, d = q.shape
+    bq = min(block_q, max(8, 1 << (total - 1).bit_length()))
+    bk = min(block_k, bq)
+    scale = d ** -0.5
+
+    # head-major layout for the kernel: (H, total, d)
+    qh = _pad_to(_pad_to(q.transpose(1, 0, 2), 2, LANE), 1, bq)
+    kh = _pad_to(_pad_to(k.transpose(1, 0, 2), 2, LANE), 1, bk)
+    vh = _pad_to(_pad_to(v.transpose(1, 0, 2), 2, LANE), 1, bk)
+    Tp = qh.shape[1]
+    seg, _ = segments_from_cu_seqlens(cu_seqlens, Tp)
+
+    out = flash_attention_varlen_pallas(qh, kh, vh, seg,
+                                        jnp.asarray(cu_seqlens, jnp.int32),
+                                        block_q=bq, block_k=bk, scale=scale,
+                                        window=window, interpret=interpret)
+    return out[:, :total, :d].transpose(1, 0, 2)
 
 
 def flash_attention(q, k, v, *, window: int = 0, block_q: int = 128,

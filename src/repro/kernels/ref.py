@@ -8,12 +8,14 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def mosa_attention_ref(q, k, v, idx, r, scale=None):
+def mosa_attention_ref(q, k, v, idx, r, scale=None, seg=None):
     """MoSA inner attention over selected tokens.
 
     q, k, v: (B, H, S, d) — S = number of selected tokens (the paper's k)
     idx:     (B, H, S) int32 original positions (sorted ascending); -1 = pad
     r:       (B, H, S) fp32 router scores for the *query* tokens
+    seg:     optional (B, H, S) int32 segment ids (packed varlen streams);
+             attention additionally requires seg_q == seg_k
     out:     (B, H, S, d) = softmax(q k^T masked by idx_q >= idx_k) v * r_q
     """
     d = q.shape[-1]
@@ -22,6 +24,8 @@ def mosa_attention_ref(q, k, v, idx, r, scale=None):
                    k.astype(jnp.float32)) * scale
     valid_k = idx >= 0
     mask = (idx[..., :, None] >= idx[..., None, :]) & valid_k[..., None, :]
+    if seg is not None:
+        mask &= seg[..., :, None] == seg[..., None, :]
     s = jnp.where(mask, s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
@@ -61,3 +65,25 @@ def flash_attention_ref(q, k, v, scale=None, window: int = 0, k_len=None):
     p = jnp.where(ok, p, 0.0)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def flash_attention_varlen_ref(q, k, v, cu_seqlens, scale=None,
+                               window: int = 0):
+    """Packed ragged causal attention oracle.
+
+    q: (total, Hq, d); k, v: (total, Hkv, d); cu_seqlens: (N+1,) int32.
+    Runs each segment through ``flash_attention_ref`` independently and
+    re-concatenates — the definitional per-row baseline the packed kernel
+    must match.
+    """
+    import numpy as np
+    cu = np.asarray(cu_seqlens)
+    outs = []
+    for s in range(len(cu) - 1):
+        a, b = int(cu[s]), int(cu[s + 1])
+        qs = q[a:b].transpose(1, 0, 2)[None]     # (1, Hq, T, d)
+        ks = k[a:b].transpose(1, 0, 2)[None]
+        vs = v[a:b].transpose(1, 0, 2)[None]
+        o = flash_attention_ref(qs, ks, vs, scale=scale, window=window)
+        outs.append(o[0].transpose(1, 0, 2))
+    return jnp.concatenate(outs, axis=0)

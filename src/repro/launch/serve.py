@@ -302,6 +302,21 @@ class Server:
             in_shardings=(self.param_sh, None, self.cache_sh, None, None,
                           None),
             out_shardings=(None, self.cache_sh), donate_argnums=(2,))
+
+        # Packed multi-segment chunked prefill (DESIGN §9): ONE program for
+        # every chunk of every prompt mix — (C, N) are static, raggedness
+        # lives in cu_seqlens/rows/past_lens data.  This replaces the
+        # Scheduler's former pow2-bucket prefill ladder (log2(max_len)
+        # compiles) with a single compile.
+        def _prefill_packed(params, tokens, caches, cu, rows, past_lens):
+            return self.model.prefill_packed(params, tokens, caches, cu,
+                                             rows, past_lens)
+
+        self.prefill_packed = jax.jit(
+            _prefill_packed,
+            in_shardings=(self.param_sh, None, self.cache_sh, None, None,
+                          None),
+            out_shardings=(None, self.cache_sh), donate_argnums=(2,))
         self.snapshot_row = jax.jit(row_snapshot)
         self.restore_row = jax.jit(row_restore, donate_argnums=(0,),
                                    out_shardings=self.cache_sh)

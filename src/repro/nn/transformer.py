@@ -157,11 +157,21 @@ class Block:
             s["ffn"] = ffn.specs()
         return s
 
-    def __call__(self, params, x, positions=None):
+    def __call__(self, params, x, positions=None, segments=None):
         norm = self._norm()
         mixer = self.mixer_module()
         aux = jnp.zeros((), jnp.float32)
-        h = mixer(params["mixer"], norm(params["norm1"], x), positions)
+        xin = norm(params["norm1"], x)
+        if segments is None:
+            h = mixer(params["mixer"], xin, positions)
+        else:
+            # packed rows (data/pipeline.py): attention mixers mask
+            # cross-document pairs; recurrent mixers have no reset story.
+            if self.spec.mixer not in ("attn", "attn_local", "mosa"):
+                raise ValueError(
+                    f"packed segments unsupported for {self.spec.mixer!r} "
+                    "mixers (recurrent state crosses document boundaries)")
+            h = mixer(params["mixer"], xin, positions, segments=segments)
         x = x + h
         ffn = self.ffn_module()
         if ffn is not None:
@@ -229,6 +239,32 @@ class Block:
             # SSM/xLSTM prefill has no pad story (recurrent state would need
             # a step-masked scan) — callers right-pad only attention stacks.
             h, cache = m.prefill(params["mixer"], xin, cache, positions)
+        x = x + h
+        ffn = self.ffn_module()
+        aux = jnp.zeros((), jnp.float32)
+        if ffn is not None:
+            h = ffn(params["ffn"], norm(params["norm2"], x))
+            if isinstance(h, tuple):
+                h, aux = h
+            x = x + h
+        return x, cache, aux
+
+    def prefill_packed(self, params, x, cache, positions=None, *, meta):
+        """Packed multi-segment chunked prefill (DESIGN §9); ``positions``
+        is unused (per-token positions live in ``meta``) but kept so
+        ``_serving_pass`` can call every step uniformly."""
+        kind = self.spec.mixer
+        if kind not in ("attn", "attn_local", "mosa"):
+            raise ValueError(
+                f"packed prefill unsupported for {kind!r} mixers")
+        if kind != "mosa" and self.cfg.attention.kind == "mla":
+            raise ValueError(
+                "packed prefill unsupported for MLA (contiguous latent "
+                "cache; paging it is an open item)")
+        norm = self._norm()
+        m = self.mixer_module()
+        xin = norm(params["norm1"], x)
+        h, cache = m.prefill_packed(params["mixer"], xin, cache, meta)
         x = x + h
         ffn = self.ffn_module()
         aux = jnp.zeros((), jnp.float32)
@@ -370,8 +406,12 @@ class TransformerLM:
                     "mosa_gather", "mosa_router"))
         return fn
 
-    def backbone(self, params, x, positions=None):
+    def backbone(self, params, x, positions=None, segments=None):
         """(B, T, h) -> (B, T, h) hidden states + aux loss.
+
+        ``segments``: optional (B, T) int32 document ids for packed rows —
+        threaded to every attention mixer so no probability mass crosses a
+        document boundary (data/pipeline.py packed mode).
 
         NOTE: ``router_health`` below mirrors this head/scan/tail walk
         (it must read each layer's REAL input without perturbing the
@@ -383,7 +423,8 @@ class TransformerLM:
 
         for i in range(head):
             blk = self._maybe_remat(blocks[i].__call__)
-            x, a = blk(params["layers"]["tail"][f"layer{i}"], x, positions)
+            x, a = blk(params["layers"]["tail"][f"layer{i}"], x, positions,
+                       segments)
             x = self._constrain(x)
             aux_total = aux_total + a
 
@@ -393,7 +434,8 @@ class TransformerLM:
             def superblock(x, unit_params):
                 aux = jnp.zeros((), jnp.float32)
                 for j in range(p):
-                    x, a = unit_blocks[j](unit_params[f"pos{j}"], x, positions)
+                    x, a = unit_blocks[j](unit_params[f"pos{j}"], x, positions,
+                                          segments)
                     x = self._constrain(x)
                     aux = aux + a
                 return x, aux
@@ -410,7 +452,8 @@ class TransformerLM:
 
         for i in range(tail_start, len(pattern)):
             blk = self._maybe_remat(blocks[i].__call__)
-            x, a = blk(params["layers"]["tail"][f"layer{i}"], x, positions)
+            x, a = blk(params["layers"]["tail"][f"layer{i}"], x, positions,
+                       segments)
             x = self._constrain(x)
             aux_total = aux_total + a
         return x, aux_total
@@ -496,11 +539,12 @@ class TransformerLM:
             x = x * jnp.asarray(c.d_model ** 0.5, x.dtype)  # gemma convention
         return x
 
-    def __call__(self, params, tokens=None, positions=None, inputs_embeds=None):
+    def __call__(self, params, tokens=None, positions=None, inputs_embeds=None,
+                 segments=None):
         """Returns (logits fp32 (B, T, vocab), aux_loss scalar)."""
         c = self.cfg
         x = self._embed_tokens(params, tokens, inputs_embeds)
-        x, aux = self.backbone(params, x, positions)
+        x, aux = self.backbone(params, x, positions, segments)
         x = self._final_norm()(params["final_norm"], x)
         if c.tie_embeddings:
             logits = self._embed().attend(params["embed"], x)
@@ -512,12 +556,17 @@ class TransformerLM:
 
     def loss(self, params, batch):
         """batch: {"tokens" (B,T) or "embeds" (B,T,h), "labels" (B,T)}.
-        labels < 0 are masked.  Returns (loss, metrics)."""
+        labels < 0 are masked.  Packed batches (data/pipeline.py) add
+        "segments" (B,T) int32 doc ids and per-doc "positions"; attention is
+        then segment-masked so packed documents never see each other.
+        Returns (loss, metrics)."""
         tokens = batch.get("tokens")
         embeds = batch.get("embeds")
         labels = batch["labels"]
         positions = batch.get("positions")
-        logits, aux = self(params, tokens, positions, inputs_embeds=embeds)
+        segments = batch.get("segments")
+        logits, aux = self(params, tokens, positions, inputs_embeds=embeds,
+                           segments=segments)
         logits = logits.astype(jnp.float32)
         V = logits.shape[-1]
         mask = (labels >= 0).astype(jnp.float32)
@@ -572,7 +621,7 @@ class TransformerLM:
             fn = getattr(blocks[i], step_fn_name)
             res = fn(params["layers"]["tail"][f"layer{i}"], x,
                      caches["tail"][f"layer{i}"], positions, **step_kw)
-            if step_fn_name == "prefill":
+            if step_fn_name in ("prefill", "prefill_packed"):
                 x, c_new, _ = res
             else:
                 x, c_new = res
@@ -592,7 +641,7 @@ class TransformerLM:
                     fn = getattr(unit_blocks[j], step_fn_name)
                     res = fn(unit_params[f"pos{j}"], x,
                              unit_caches[f"pos{j}"], positions, **step_kw)
-                    if step_fn_name == "prefill":
+                    if step_fn_name in ("prefill", "prefill_packed"):
                         x, c_new, _ = res
                     else:
                         x, c_new = res
@@ -629,6 +678,58 @@ class TransformerLM:
         else:
             xl = jnp.take_along_axis(
                 x, last_pos.astype(jnp.int32)[:, None, None], axis=1)
+        if c.tie_embeddings:
+            logits = self._embed().attend(params["embed"], xl)
+        else:
+            logits = jnp.dot(xl.astype(c.cdtype),
+                             params["unembed"]["w"].astype(c.cdtype),
+                             preferred_element_type=jnp.float32)
+        return logits, caches
+
+    def prefill_packed(self, params, tokens, caches, cu_seqlens, rows,
+                       past_lens):
+        """Packed multi-segment chunked prefill — ONE fused program per
+        mixed chunk (DESIGN §9).
+
+        ``tokens``: (1, C) int32 — N prompt segments flattened back to back
+        (tail beyond ``cu[-1]`` is padding); ``cu_seqlens``: (N+1,) int32
+        offsets; ``rows``: (N,) int32 batch row per segment (-1 =
+        inactive); ``past_lens``: (N,) int32 tokens already in each row's
+        caches (0 for a fresh prompt's first chunk — continued prefill on
+        an empty cache reproduces one-shot prefill exactly).
+
+        The chunk geometry (C, N) is STATIC: every chunk of every prompt
+        mix compiles to this single program — the replacement for the
+        pow2-bucket ladder.  Returns ``(logits (N, V), caches)`` — each
+        segment's logits at its LAST token in this chunk; only segments
+        completing their prompt have meaningful (TTFT) logits, the
+        scheduler ignores the rest.
+        """
+        c = self.cfg
+        C = tokens.shape[1]
+        cu = jnp.asarray(cu_seqlens, jnp.int32)
+        rows = jnp.asarray(rows, jnp.int32)
+        past = jnp.asarray(past_lens, jnp.int32)
+        t = jnp.arange(C, dtype=jnp.int32)
+        seg = jnp.searchsorted(cu[1:], t, side="right").astype(jnp.int32)
+        seg = jnp.where(t < cu[-1], seg, -1)
+        segc = jnp.maximum(seg, 0)
+        local = t - cu[segc]
+        row_of_tok = jnp.where(seg >= 0, rows[segc], -1)
+        pos_of_tok = jnp.where(row_of_tok >= 0, past[segc] + local, 0)
+        tok_idx = jnp.clip(cu[:-1, None] + t[None], 0, C - 1)   # (N, C)
+        seg_len = cu[1:] - cu[:-1]
+        in_seg = (t[None] < seg_len[:, None]) & (rows >= 0)[:, None]
+        meta = dict(cu=cu, rows=rows, past_lens=past, seg_of_tok=seg,
+                    local_of_tok=local, row_of_tok=row_of_tok,
+                    pos_of_tok=pos_of_tok, tok_idx=tok_idx, in_seg=in_seg)
+
+        x = self._embed_tokens(params, tokens)
+        x, caches = self._serving_pass(params, x, caches, None,
+                                       "prefill_packed", meta=meta)
+        x = self._final_norm()(params["final_norm"], x)
+        last = jnp.clip(cu[1:] - 1, 0, C - 1)                   # (N,)
+        xl = x[0][last]                                         # (N, h)
         if c.tie_embeddings:
             logits = self._embed().attend(params["embed"], xl)
         else:

@@ -209,3 +209,200 @@ def paged_attention_decode(q, cache: PagedDenseKVCache, *, scale: float,
         _pad_lane(q), _pad_lane(cache.k), _pad_lane(cache.v),
         cache.block_table, cache.length, scale=scale, interpret=interpret)
     return out[..., :d]
+
+
+# ------------------------------------------------- packed varlen prefill
+def paged_prefill_attention_ref(q, k_pool, v_pool, block_table, row_of_tok,
+                                pos_in_kv, scale):
+    """Packed ragged prefill attention over paged pools (oracle + CPU path).
+
+    q:          (total, Hq, d) — flattened chunk queries of N segments
+    pools:      (P, bs, Hkv, d); block_table: (B, nb)
+    row_of_tok: (total,) int32 — the batch row whose KV each token reads
+                (-1 = padding token -> zero output)
+    pos_in_kv:  (total,) int32 — the token's own absolute position in that
+                row's KV space (past_len + local offset); it attends every
+                key at position <= pos_in_kv (causal over past + chunk).
+    Returns (total, Hq, d) in q.dtype.
+
+    The chunk's own K/V must already be appended to the pools (the caller
+    appends before attending, mirroring ``_prefill_dense_paged``).
+    """
+    total, Hq, d = q.shape
+    nb, bs = block_table.shape[1], k_pool.shape[1]
+    Hkv = k_pool.shape[2]
+    R = Hq // Hkv
+    S = nb * bs
+
+    bt = jnp.clip(block_table, 0)
+    kk = jax.vmap(lambda t: k_pool[t].reshape(S, Hkv, d))(bt)   # (B,S,Hkv,d)
+    vv = jax.vmap(lambda t: v_pool[t].reshape(S, Hkv, d))(bt)
+    row = jnp.maximum(row_of_tok, 0)
+    kt = kk[row]                                                # (T,S,Hkv,d)
+    vt = vv[row]
+
+    qg = q.reshape(total, Hkv, R, d).astype(jnp.float32)
+    s = jnp.einsum("tgrd,tsgd->tgrs", qg, kt.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    k_pos = jnp.arange(S)
+    ok = (k_pos[None, :] <= pos_in_kv[:, None]) \
+        & (row_of_tok >= 0)[:, None]                            # (T, S)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(ok[:, None, None, :], p, 0.0)
+    out = jnp.einsum("tgrs,tsgd->tgrd", p, vt.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(p.sum(-1), 1e-30)[..., None]
+    return out.reshape(total, Hq, d).astype(q.dtype)
+
+
+def _paged_prefill_kernel(row_ref, bt_ref, q_ref, pos_ref, k_ref, v_ref,
+                          o_ref, m_ref, l_ref, acc_ref, *, bs: int,
+                          scale: float):
+    """Grid (Hq, N, nb) — one segment x one query head per (h, n) slice, the
+    row's paged KV streamed block-by-block along i with the online-softmax
+    carry in VMEM scratch (same discipline as ``_paged_kernel``).
+
+    row_ref / bt_ref ride in scalar-prefetch SMEM: the i-th KV block of
+    segment n is DMA'd from physical block ``bt[row[n], i]`` by the index
+    map before the body runs.  Refs: q (1, C, 1, d); pos (1, C) — the
+    per-query absolute KV position (-1 = padding query); k/v (1, bs, 1, d).
+    """
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
+    C, d = q_ref.shape[1], q_ref.shape[3]
+    pos = pos_ref[0]                                            # (C,)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # the segment's deepest query bounds how many KV blocks matter
+    @pl.when(i * bs <= jnp.max(pos))
+    def _block():
+        q = q_ref[0, :, 0].astype(jnp.float32) * scale          # (C, d)
+        k = k_ref[0, :, 0].astype(jnp.float32)                  # (bs, d)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        k_pos = i * bs + jax.lax.iota(jnp.int32, bs)
+        mask = k_pos[None, :] <= pos[:, None]                   # (C, bs)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1].reshape(C)
+        l_prev = l_ref[:, :1].reshape(C)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=-1)
+        acc = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+        acc_ref[...] = acc
+
+    @pl.when(i == nb - 1)
+    def _finish():
+        l = l_ref[:, :1]                                        # (C, 1)
+        o_ref[0, :, 0] = (acc_ref[...] /
+                          jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_prefill_attention_kernel(q_seg, pos_seg, k_pool, v_pool,
+                                   block_table, row_of_seg, *, scale: float,
+                                   interpret: bool = False):
+    """Pallas packed prefill.  q_seg: (N, C, Hq, d) — the packed chunk
+    unfolded to one right-padded row per segment (d a multiple of 128);
+    pos_seg: (N, C) int32 absolute KV positions (-1 on padding);
+    row_of_seg: (N,) int32 batch row per segment (clamped if -1)."""
+    N, C, Hq, d = q_seg.shape
+    nb = block_table.shape[1]
+    bs = k_pool.shape[1]
+    Hkv = k_pool.shape[2]
+    R = Hq // Hkv
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # row_of_seg, block_table
+        grid=(Hq, N, nb),
+        in_specs=[
+            pl.BlockSpec((1, C, 1, d),
+                         lambda h, n, i, row, bt: (n, 0, h, 0)),
+            pl.BlockSpec((1, C), lambda h, n, i, row, bt: (n, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda h, n, i, row, bt:
+                         (jnp.maximum(bt[jnp.maximum(row[n], 0), i], 0),
+                          0, h // R, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda h, n, i, row, bt:
+                         (jnp.maximum(bt[jnp.maximum(row[n], 0), i], 0),
+                          0, h // R, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, 1, d),
+                               lambda h, n, i, row, bt: (n, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C, LANE), jnp.float32),    # running max (replicated)
+            pltpu.VMEM((C, LANE), jnp.float32),    # running denom
+            pltpu.VMEM((C, d), jnp.float32),       # output accumulator
+        ],
+    )
+    kernel = functools.partial(_paged_prefill_kernel, bs=bs, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, C, Hq, d), q_seg.dtype),
+        interpret=interpret,
+    )(row_of_seg, block_table, q_seg, pos_seg, k_pool, v_pool)
+
+
+def paged_prefill_attention(q, cache: PagedDenseKVCache, cu_seqlens,
+                            row_of_seg, past_lens, *, scale: float,
+                            impl: str | None = None,
+                            interpret: bool | None = None):
+    """Packed ragged prefill over a paged dense cache (public dispatcher).
+
+    q: (total, Hq, d) — N segments flattened back to back; cu_seqlens:
+    (N+1,) int32 offsets (cu[N] may be < total: the tail is padding);
+    row_of_seg: (N,) int32 batch row per segment (-1 = inactive segment);
+    past_lens: (N,) int32 tokens already in the row's cache BEFORE this
+    chunk.  The chunk's K/V must already be appended (``append_packed``).
+    ``impl`` as in ``paged_attention_decode``.
+    """
+    if impl is None:
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    total, Hq, d = q.shape
+    cu = jnp.asarray(cu_seqlens, jnp.int32)
+    t = jnp.arange(total, dtype=jnp.int32)
+    seg = jnp.searchsorted(cu[1:], t, side="right").astype(jnp.int32)
+    seg = jnp.where(t < cu[-1], seg, -1)
+    segc = jnp.maximum(seg, 0)
+    local = t - cu[segc]
+    row_of_tok = jnp.where(seg >= 0, row_of_seg[segc], -1)
+    pos_in_kv = jnp.where(seg >= 0, past_lens[segc] + local, -1)
+
+    if impl == "ref":
+        return paged_prefill_attention_ref(
+            q, cache.k, cache.v, cache.block_table, row_of_tok, pos_in_kv,
+            scale)
+
+    interpret = _interpret_default() if interpret is None else interpret
+    N = cu.shape[0] - 1
+    C = total
+    # unfold the packed stream to one right-padded row per segment
+    tok_idx = cu[:-1, None] + jnp.arange(C)[None, :]            # (N, C)
+    in_seg = jnp.arange(C)[None, :] < (cu[1:] - cu[:-1])[:, None]
+    tok_c = jnp.clip(tok_idx, 0, total - 1)
+    q_seg = jnp.where(in_seg[..., None, None], q[tok_c], 0)
+    pos_seg = jnp.where(in_seg & (row_of_seg >= 0)[:, None],
+                        past_lens[:, None] + jnp.arange(C)[None, :], -1)
+    out_seg = paged_prefill_attention_kernel(
+        _pad_lane(q_seg), pos_seg.astype(jnp.int32), _pad_lane(cache.k),
+        _pad_lane(cache.v), cache.block_table,
+        row_of_seg.astype(jnp.int32), scale=scale, interpret=interpret)
+    out = out_seg[segc, local][..., :d]                         # (total,Hq,d)
+    return jnp.where((seg >= 0)[:, None, None], out, 0).astype(q.dtype)

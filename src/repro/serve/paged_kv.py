@@ -205,6 +205,31 @@ class PagedDenseKVCache(NamedTuple):
         v = _pool_scatter(self.v, blk, off, v_new)
         return PagedDenseKVCache(k, v, self.block_table, self.length + adv)
 
+    def append_packed(self, k_new, v_new, row_of_tok, pos_of_tok):
+        """Packed-varlen append: scatter a flattened multi-row token stream.
+
+        k_new/v_new: (total, Hkv, d); row_of_tok: (total,) int32 batch row
+        per token (-1 = padding, dropped); pos_of_tok: (total,) int32 the
+        token's absolute position in its row's KV space.  Each row's
+        ``length`` advances by the number of its tokens in the stream —
+        the packed counterpart of ``append`` with ``n_valid`` masking, and
+        the write primitive of chunked prefill (DESIGN §9).
+        """
+        bs = self.block_size
+        B, nbt = self.block_table.shape
+        row = jnp.asarray(row_of_tok, jnp.int32)
+        pos = jnp.asarray(pos_of_tok, jnp.int32)
+        rowc = jnp.clip(row, 0, B - 1)
+        blk = self.block_table[rowc, jnp.clip(pos // bs, 0, nbt - 1)]
+        blk = jnp.where((row < 0) | (pos // bs >= nbt), -1, blk)
+        off = pos % bs
+        k = _pool_scatter(self.k, blk, off, k_new)
+        v = _pool_scatter(self.v, blk, off, v_new)
+        counts = jnp.zeros((B,), jnp.int32).at[
+            jnp.where(row < 0, B, row)].add(1, mode="drop")
+        return PagedDenseKVCache(k, v, self.block_table,
+                                 self.length + counts)
+
     def gather(self):
         """(k, v) in the contiguous (B, S, Hkv, d) layout."""
         bt = jnp.clip(self.block_table, 0)    # -1 -> junk, masked by length
@@ -303,6 +328,36 @@ class PagedWindowKVCache(NamedTuple):
         k, v, positions = self._write(k_new, v_new, pos, drop)
         return PagedWindowKVCache(k, v, self.block_table, positions,
                                   self.length + nv)
+
+    def append_packed(self, k_new, v_new, row_of_tok, pos_of_tok):
+        """Packed-varlen ring append (see ``PagedDenseKVCache.append_packed``).
+
+        Tokens scatter to ring slot ``pos % W``.  A token is dropped when a
+        LATER token of the same row in this stream maps to the same slot
+        (only the last W tokens per row survive — duplicate ring slots must
+        scatter uniquely, as in ``append``).
+        """
+        W, bs = self.window, self.block_size
+        B = self.block_table.shape[0]
+        row = jnp.asarray(row_of_tok, jnp.int32)
+        pos = jnp.asarray(pos_of_tok, jnp.int32)
+        rowc = jnp.clip(row, 0, B - 1)
+        rowd = jnp.where(row < 0, B, row)                 # drop index
+        # per-row deepest position in THIS stream; tokens more than W-1
+        # behind it would be overwritten within the same scatter -> drop
+        deepest = jnp.full((B,), -1, jnp.int32).at[rowd].max(
+            pos, mode="drop")
+        drop = (row < 0) | (deepest[rowc] - pos >= W)
+        slot = pos % W
+        blk = self.block_table[rowc, slot // bs]
+        blk = jnp.where(drop, -1, blk)
+        k = _pool_scatter(self.k, blk, slot % bs, k_new)
+        v = _pool_scatter(self.v, blk, slot % bs, v_new)
+        positions = self.positions.at[
+            jnp.where(drop, B, rowc), slot].set(pos, mode="drop")
+        counts = jnp.zeros((B,), jnp.int32).at[rowd].add(1, mode="drop")
+        return PagedWindowKVCache(k, v, self.block_table, positions,
+                                  self.length + counts)
 
     def gather(self):
         """(k, v) in the contiguous ring (B, W, Hkv, d) layout."""

@@ -43,9 +43,21 @@ dense block chain one block at a time as decode proceeds:
     models the split is exact.  ``prefix_cache=False`` restores one-shot
     training-style prefill.
 
-Prefill still pads to pow2 buckets, but ONLY to bound how many programs
-compile — right-padded with a valid mask (the masked-prefill fix), never
-reserving cache space.
+  * **Chunked packed prefill** (DESIGN §9) — prompts are streamed through
+    ``Server.prefill_packed`` in fixed ``chunk_tokens``-sized packed
+    chunks: up to ``max_prefill_segs`` pending rows' next segments are
+    flattened back to back into ONE fused program per chunk, with
+    ``cu_seqlens``/``rows``/``past_lens`` carrying the raggedness as data.
+    Exactly one prefill program compiles — this replaces the former pow2
+    bucket ladder (log2(max_len) programs, up to 2x padding waste), and a
+    long prompt can no longer stall TTFT: decode chunks of live rows
+    interleave between its prefill chunks (mid-prefill rows are paused —
+    snapshot + empty tables so the decode dispatch's writes drop — and
+    resumed before their next chunk).  Chunking is EXACT, for every chunk
+    split: attention is past-aware through the paged pools and MoSA's
+    capacity-wide union selection (``prefill_past``) reproduces one-shot
+    selection bit-for-bit; selection width is ``k_for`` of each row's REAL
+    prompt length — per segment, never per padded row.
 
 No imports from ``repro.launch`` (the server arrives duck-typed), so the
 launch layer can re-export this scheduler without a cycle.
@@ -55,6 +67,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import time
 from typing import List, Optional
 
 import jax
@@ -133,8 +146,12 @@ class Scheduler:
     """
 
     def __init__(self, server, eos: int = -1, chunk: int = 8,
-                 prefill_len: Optional[int] = None,
+                 chunk_tokens: int = 64, max_prefill_segs: int = 4,
                  prefix_cache: bool = True):
+        """``chunk``: decode tokens per fused decode dispatch.
+        ``chunk_tokens``: the packed prefill chunk budget C — every prefill
+        dispatch processes exactly C token slots (ONE compiled program);
+        ``max_prefill_segs``: max pending rows packed per chunk (N)."""
         paged = server.paged
         assert paged is not None and paged.num_blocks > 0, (
             "Scheduler needs Server(paged=PagedConfig(num_blocks=...)) with "
@@ -142,7 +159,8 @@ class Scheduler:
         self.server = server
         self.eos = eos
         self.chunk = chunk
-        self.prefill_len = prefill_len
+        self.chunk_tokens = min(chunk_tokens, server.max_len)
+        self.max_segs = max(1, max_prefill_segs)
         self.bs = paged.block_size
         self.queue: List[_Request] = []
         self.results: dict = {}
@@ -168,9 +186,17 @@ class Scheduler:
                             if self.has_window else None)
         self.prefix = PrefixCache(self.bs) if prefix_cache else None
         self._empty_row = jax.device_get(server.snapshot_row(self.caches, 0))
+        # prefill_chunks * chunk_tokens is the slot count every dispatch
+        # pays; prefilled_tokens / prefill_chunk_slots is the packed-token
+        # efficiency the pow2 buckets never reached (BENCH_serve metric).
         self.stats = {"prefix_hits": 0, "prefix_hit_tokens": 0,
-                      "prefilled_tokens": 0, "preemptions": 0,
+                      "prefilled_tokens": 0, "prefill_chunks": 0,
+                      "prefill_chunk_slots": 0, "preemptions": 0,
                       "max_concurrent": 0}
+        # rid -> seconds from run() start to the request's first sampled
+        # token (host-synced: the int() conversion below forces the value)
+        self.ttft: dict = {}
+        self._t0 = None
 
         B = server.batch
         self._slots: List[Optional[dict]] = [None] * B
@@ -185,14 +211,6 @@ class Scheduler:
         return rid
 
     # ------------------------------------------------------------- helpers
-    def _bucket(self, n: int) -> int:
-        if self.prefill_len:
-            return min(self.prefill_len, self.server.max_len)
-        b = 1
-        while b < max(n, 1):
-            b *= 2
-        return min(b, self.server.max_len)
-
     def _alloc_dense(self, n: int):
         """All-or-nothing dense alloc, LRU-evicting prefix entries first."""
         while True:
@@ -210,20 +228,6 @@ class Scheduler:
         block table — lazy allocation extends it, never punches holes."""
         W = self.wb * self.bs
         return -(-min(tokens, W) // self.bs)
-
-    def _prefill(self, b, prompt_np, valid_count, continued):
-        """Bucketed right-pad prefill of ``prompt_np`` into row ``b``."""
-        srv = self.server
-        bucket = self._bucket(valid_count)
-        padded = np.zeros((bucket,), np.int32)
-        padded[:valid_count] = prompt_np[:valid_count]
-        valid = (np.arange(bucket) < valid_count)[None]
-        logits, self.caches = srv.prefill_row(
-            srv.params, jnp.asarray(padded)[None], self.caches,
-            jnp.int32(b), jnp.asarray(valid),
-            jnp.full((1,), valid_count - 1, jnp.int32), continued)
-        self.stats["prefilled_tokens"] += valid_count
-        return logits
 
     def _free_slot(self, b):
         """Release row ``b``'s blocks AND clear its device state.  The
@@ -258,10 +262,36 @@ class Scheduler:
         self.queue.insert(0, r)
         self.stats["preemptions"] += 1
 
+    def _pending_same_prefix(self, prompt_np, P) -> bool:
+        """True when a live mid-prefill row will shortly trie-insert a
+        shareable prefix of ``prompt_np`` (its forced boundary not yet
+        reached) — admitting now would recompute those shared blocks."""
+        n_share = ((P - 1) // self.bs) * self.bs
+        for s in self._slots:
+            if s is None or s["phase"] != "prefill":
+                continue
+            ins = s["insert_at"]
+            if ins is None:
+                continue
+            if self.need_snapshot:
+                # Hits land only on snapshot-carrying tips: useful iff our
+                # prompt contains the row's FULL pending prefix.
+                d = ins if ins <= n_share else 0
+            else:
+                # Snapshot-free (pure paged-dense): any block-aligned
+                # common depth along the pending chain is a future hit.
+                d = min(ins, n_share)
+            if d >= self.bs and np.array_equal(s["prompt_np"][:d],
+                                               prompt_np[:d]):
+                return True
+        return False
+
     # ------------------------------------------------------------ admission
-    def _admit(self, b, r: _Request, key) -> Optional[int]:
-        """Admit ``r`` into row ``b``; returns its first sampled token, or
-        None when the block pools cannot cover the prompt."""
+    def _admit(self, b, r: _Request) -> Optional[bool]:
+        """Admit ``r`` into row ``b``: allocate its blocks, restore its
+        snapshot/tables, and park it in ``phase="prefill"`` — the prompt
+        itself is streamed by ``_advance_prefills``.  Returns True, or None
+        when the block pools cannot cover the prompt."""
         srv = self.server
         prompt_np = np.asarray(r.prompt)
         P = min(len(prompt_np), srv.max_len)
@@ -272,6 +302,14 @@ class Scheduler:
         node, depth, chain_ids = None, 0, []
         if self.prefix is not None:
             node, depth = self.prefix.lookup(prompt_np, self.need_snapshot)
+            if node is None and self._pending_same_prefix(prompt_np, P):
+                # Cache-aware admission: a live mid-prefill row is about to
+                # insert this very prefix (admission is no longer
+                # synchronous with prefill, so the miss is transient).
+                # Wait one round rather than recompute the shared blocks;
+                # if that row is preempted instead, the next attempt
+                # proceeds as a plain miss — no deadlock.
+                return None
         n_prompt_blocks = -(-P // self.bs)
         n_new_blocks = n_prompt_blocks - depth // self.bs
 
@@ -291,6 +329,7 @@ class Scheduler:
                 return None
         dense_ids = chain_ids + suffix_ids
 
+        insert_at = None
         if node is not None:
             if node.snapshot is not None:
                 snap = copy.deepcopy(node.snapshot)
@@ -305,42 +344,133 @@ class Scheduler:
             self.stats["prefix_hit_tokens"] += depth
         else:
             snap = copy.deepcopy(self._empty_row)
+            if self.prefix is not None and (P - 1) // self.bs > 0:
+                # Miss: force a chunk boundary at the shareable depth so
+                # the snapshot inserted there depends on the prefix tokens
+                # alone (see module docstring).
+                insert_at = ((P - 1) // self.bs) * self.bs
         _set_snapshot_tables(snap, _table_row(dense_ids, self.nb_max),
                              _table_row(window_ids, max(self.wb, 1)))
         self.caches = srv.restore_row(self.caches, snap, jnp.int32(b))
 
-        if node is not None:
-            logits = self._prefill(b, prompt_np[depth:], P - depth, True)
-        elif self.prefix is not None and (P - 1) // self.bs > 0:
-            # Miss: split at the shareable boundary so the inserted
-            # snapshot depends on the prefix tokens alone (see module
-            # docstring), then finish the tail as a continued prefill.
-            n_share = ((P - 1) // self.bs) * self.bs
-            self._prefill(b, prompt_np[:n_share], n_share, False)
-            snap1 = jax.device_get(srv.snapshot_row(self.caches,
-                                                    jnp.int32(b)))
-            chain, tip = self.prefix.insert(
-                prompt_np[:n_share], dense_ids[:n_share // self.bs],
-                self.dense_pool)
-            _set_snapshot_tables(snap1, _table_row(chain, self.nb_max),
-                                 _table_row([], max(self.wb, 1)))
-            self.prefix.attach_snapshot(tip, snap1)
-            logits = self._prefill(b, prompt_np[n_share:], P - n_share, True)
-        else:
-            logits = self._prefill(b, prompt_np, P, False)
-
-        tok0 = srv.sample(logits[:, -1], key)
         self._slots[b] = {"req": r, "dense_ids": dense_ids,
                           "window_ids": window_ids, "length": P,
-                          "seq": self._admit_seq}
+                          "seq": self._admit_seq, "phase": "prefill",
+                          "prompt_np": prompt_np, "done": depth,
+                          "insert_at": insert_at, "paused_snap": None}
         self._admit_seq += 1
         self.stats["max_concurrent"] = max(
             self.stats["max_concurrent"],
             sum(s is not None for s in self._slots))
-        r.generated.append(int(tok0[0]))
-        if len(r.generated) >= r.max_new or int(tok0[0]) == self.eos:
-            self._finish(b)
-        return int(tok0[0])
+        return True
+
+    # ------------------------------------------------------ chunked prefill
+    def _advance_prefills(self, key, cur):
+        """One packed prefill chunk: pack the next segments of up to
+        ``max_segs`` pending rows (oldest first) into ``chunk_tokens``
+        slots, dispatch ONE ``Server.prefill_packed`` program, then advance
+        each row — snapshot-insert at a forced prefix boundary, or sample
+        the first token and flip to decode when its prompt completes."""
+        srv = self.server
+        pending = sorted(
+            (b for b in range(len(self._slots))
+             if self._slots[b] is not None
+             and self._slots[b]["phase"] == "prefill"),
+            key=lambda x: self._slots[x]["seq"])
+        C = self.chunk_tokens
+        segs = []                            # (row, start, take)
+        budget = C
+        for b in pending:
+            if budget == 0 or len(segs) == self.max_segs:
+                break
+            s = self._slots[b]
+            take = min(len(s["prompt_np"]) - s["done"], budget)
+            ins = s["insert_at"]
+            if ins is not None and s["done"] < ins < s["done"] + take:
+                take = ins - s["done"]       # stop AT the boundary
+            segs.append((b, s["done"], take))
+            budget -= take
+
+        for b, _, _ in segs:                 # resume paused rows
+            s = self._slots[b]
+            if s["paused_snap"] is not None:
+                self.caches = srv.restore_row(self.caches, s["paused_snap"],
+                                              jnp.int32(b))
+                s["paused_snap"] = None
+
+        N = self.max_segs
+        buf = np.zeros((C,), np.int32)
+        cu = np.zeros((N + 1,), np.int32)
+        rows = np.full((N,), -1, np.int32)
+        past = np.zeros((N,), np.int32)
+        off = 0
+        for i, (b, start, take) in enumerate(segs):
+            buf[off:off + take] = self._slots[b]["prompt_np"][start:start +
+                                                              take]
+            rows[i] = b
+            past[i] = start
+            off += take
+            cu[i + 1] = off
+        cu[len(segs) + 1:] = off
+        logits, self.caches = srv.prefill_packed(
+            srv.params, jnp.asarray(buf)[None], self.caches,
+            jnp.asarray(cu), jnp.asarray(rows), jnp.asarray(past))
+        self.stats["prefilled_tokens"] += off
+        self.stats["prefill_chunks"] += 1
+        self.stats["prefill_chunk_slots"] += C
+
+        for i, (b, start, take) in enumerate(segs):
+            s = self._slots[b]
+            s["done"] += take
+            if s["insert_at"] is not None and s["done"] == s["insert_at"]:
+                self._insert_prefix(b)
+            if s["done"] == len(s["prompt_np"]):
+                s["phase"] = "decode"
+                s["length"] = len(s["prompt_np"])
+                key, sub = jax.random.split(key)
+                tok0 = srv.sample(logits[i:i + 1], sub)
+                r = s["req"]
+                r.generated.append(int(tok0[0]))
+                if r.rid not in self.ttft and self._t0 is not None:
+                    self.ttft[r.rid] = time.monotonic() - self._t0
+                cur = cur.at[b, 0].set(int(tok0[0]))
+                if len(r.generated) >= r.max_new or int(tok0[0]) == self.eos:
+                    self._finish(b)
+        return key, cur
+
+    def _insert_prefix(self, b):
+        """Insert row ``b``'s shareable prefix into the trie.  Called when
+        ``done`` hits the forced boundary: the row's device state is then
+        exactly the one-shot prefill of ``prompt[:insert_at]`` (packed
+        chunking is exact), i.e. a function of the prefix tokens alone."""
+        srv = self.server
+        s = self._slots[b]
+        n_share = s["insert_at"]
+        snap1 = jax.device_get(srv.snapshot_row(self.caches, jnp.int32(b)))
+        chain, tip = self.prefix.insert(
+            s["prompt_np"][:n_share], s["dense_ids"][:n_share // self.bs],
+            self.dense_pool)
+        _set_snapshot_tables(snap1, _table_row(chain, self.nb_max),
+                             _table_row([], max(self.wb, 1)))
+        self.prefix.attach_snapshot(tip, snap1)
+        s["insert_at"] = None
+
+    def _pause_prefills(self):
+        """Park every mid-prefill row before a decode dispatch:
+        ``decode_many`` steps ALL rows, so without this its writes would
+        advance the row's lengths and corrupt its MoSA selection.  The host
+        snapshot preserves the row; the empty template (-1 tables, zero
+        lengths) makes the decode writes drop.  ``_advance_prefills``
+        restores the snapshot before the row's next chunk."""
+        srv = self.server
+        for b, s in enumerate(self._slots):
+            if s is not None and s["phase"] == "prefill" \
+                    and s["paused_snap"] is None:
+                s["paused_snap"] = jax.device_get(
+                    srv.snapshot_row(self.caches, jnp.int32(b)))
+                self.caches = srv.restore_row(
+                    self.caches, copy.deepcopy(self._empty_row),
+                    jnp.int32(b))
 
     # ------------------------------------------------------------- growth
     def _alloc_or_preempt(self, alloc_fn, n: int, b: int, live):
@@ -408,21 +538,22 @@ class Scheduler:
         cur = jnp.zeros((B, 1), jnp.int32)
         key = jax.random.PRNGKey(0)
         steps = 0
+        self._t0 = time.monotonic()
+
+        def by_phase(phase):
+            return [b for b in range(B) if self._slots[b] is not None
+                    and self._slots[b]["phase"] == phase]
 
         with srv.mesh, hints.sharding_hints(mesh=srv.mesh):
             while self.queue or any(s is not None for s in self._slots):
                 for b in range(B):
                     if self._slots[b] is None and self.queue \
                             and steps < max_steps:
-                        r = self.queue[0]
-                        key, sub = jax.random.split(key)
-                        tok = self._admit(b, r, sub)
-                        if tok is None:
+                        if self._admit(b, self.queue[0]) is None:
                             break               # blocks exhausted: wait
                         self.queue.pop(0)
-                        cur = cur.at[b, 0].set(tok)
-                live = [b for b in range(B) if self._slots[b] is not None]
-                if not live:
+                live_pre, live_dec = by_phase("prefill"), by_phase("decode")
+                if not live_pre and not live_dec:
                     if steps >= max_steps:
                         break
                     if self.queue and not any(self._slots):
@@ -433,25 +564,41 @@ class Scheduler:
                             f"{self.dense_pool.num_blocks}")
                     continue
                 if steps >= max_steps:
-                    for b in live:
+                    # Decode budget spent: wind down, but rows caught
+                    # mid-prefill still stream to completion so every
+                    # admitted request yields its first token.
+                    for b in live_dec:
                         self._finish(b)
-                    break
+                    if not live_pre:
+                        break
+
+                if live_pre:
+                    # One packed prefill chunk, then (at most) one decode
+                    # chunk — long prompts interleave with live decodes
+                    # instead of stalling them.
+                    key, cur = self._advance_prefills(key, cur)
+                    live_dec = by_phase("decode")
+                if not live_dec or steps >= max_steps:
+                    continue
 
                 need = max(self._slots[b]["req"].max_new -
                            len(self._slots[b]["req"].generated)
-                           for b in live)
+                           for b in live_dec)
                 n = max(min(self.chunk, max_steps - steps, need), 1)
 
-                # Grow dense chains and (lazily) window rings to cover the
-                # next n appended tokens; preempt latest-admitted rows when
-                # a pool runs dry.
-                for b in sorted(live,
+                # Grow dense chains and (lazily) window rings of the decode
+                # rows to cover the next n appended tokens; preempt
+                # latest-admitted rows (mid-prefill ones included — their
+                # full prompt just requeues) when a pool runs dry.
+                self._pause_prefills()
+                live = [b for b in range(B) if self._slots[b] is not None]
+                for b in sorted(live_dec,
                                 key=lambda x: self._slots[x]["seq"]):
                     if self._slots[b] is None:
                         continue
                     self._grow_row(b, n, live)
-                live = [b for b in range(B) if self._slots[b] is not None]
-                if not live:
+                live_dec = by_phase("decode")
+                if not live_dec:
                     continue
 
                 key, sub = jax.random.split(key)
@@ -460,7 +607,7 @@ class Scheduler:
                 steps += n
                 host = jax.device_get(toks)
                 cur = toks[:, -1:]
-                for b in live:
+                for b in live_dec:
                     s = self._slots[b]
                     if s is None:
                         continue

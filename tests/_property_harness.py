@@ -1,0 +1,103 @@
+"""Property-test harness: real ``hypothesis`` when present, else a vendored
+minimal fallback — so ``tests/test_property.py`` and the allocator sweep in
+``tests/test_paged_kv.py`` ALWAYS execute (ISSUE 6 satellite: the CI image
+lacks hypothesis, and ``pytest.importorskip`` silently skipped them for four
+PRs).
+
+The fallback implements exactly the API surface those suites use —
+``given`` (positional + keyword strategies), ``settings(max_examples,
+deadline)``, and ``st.integers/floats/booleans/sampled_from/lists/tuples``
+— with a deterministic per-test PRNG (seeded from the test name), so a
+falsifying example reproduces on re-run.  No shrinking, no database: this
+is a fallback, not a hypothesis reimplementation.  If neither import path
+works, the ImportError propagates and collection fails — a loud ``make
+ci`` failure, never a silent skip.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st
+    USING_FALLBACK = False
+except ImportError:
+    import functools
+    import inspect
+    import random as _random
+    import zlib
+
+    USING_FALLBACK = True
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[rng.randrange(len(elements))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elements.draw(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(
+                lambda rng: tuple(e.draw(rng) for e in elems))
+
+    st = _St()
+
+    def settings(max_examples=None, deadline=None, **_ignored):
+        def deco(fn):
+            if max_examples is not None:
+                fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*pos_strategies, **kw_strategies):
+        def deco(fn):
+            names = list(inspect.signature(fn).parameters)
+            by_name = dict(zip(names, pos_strategies))
+            overlap = set(by_name) & set(kw_strategies)
+            assert not overlap, f"strategy given twice: {overlap}"
+            by_name.update(kw_strategies)
+
+            @functools.wraps(fn)
+            def run(*args, **kwargs):
+                n = getattr(run, "_max_examples",
+                            getattr(fn, "_max_examples", 50))
+                rng = _random.Random(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for i in range(n):
+                    drawn = {k: s.draw(rng) for k, s in by_name.items()}
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except Exception:
+                        print(f"Falsifying example ({fn.__name__}, "
+                              f"try {i}): {drawn}")
+                        raise
+
+            # wraps() copies __wrapped__, which would make pytest resolve
+            # the ORIGINAL signature and demand fixtures for the strategy
+            # params — the wrapper's own (*args, **kwargs) is the truth
+            del run.__wrapped__
+            # mimic hypothesis's attribute shape: pytest plugins (anyio)
+            # introspect ``obj.hypothesis.inner_test``
+            run.hypothesis = type("Hypothesis", (),
+                                  {"inner_test": staticmethod(fn)})()
+            return run
+        return deco

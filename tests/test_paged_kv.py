@@ -20,11 +20,9 @@ from repro.serve.paged_kv import (BlockPool, PagedDenseKVCache,
                                   PagedWindowKVCache, copy_blocks)
 from repro.serve.prefix_cache import PrefixCache
 
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:          # CI image: skip, don't fail (see test_property)
-    HAVE_HYPOTHESIS = False
+# real hypothesis when installed, else the vendored fallback (see
+# tests/_property_harness.py) — the sweep below always executes
+from _property_harness import given, settings, st
 
 
 # -------------------------------------------------------------- allocator
@@ -105,14 +103,13 @@ def test_block_pool_trace_property_deterministic():
                          num_blocks=12)
 
 
-if HAVE_HYPOTHESIS:
-    @given(st.lists(st.tuples(
-        st.sampled_from(["alloc", "free", "share", "unshare"]),
-        st.integers(1, 5)), max_size=80),
-        st.integers(4, 24))
-    @settings(max_examples=25, deadline=None)
-    def test_block_pool_trace_property(ops, num_blocks):
-        _run_alloc_trace(ops, num_blocks)
+@given(st.lists(st.tuples(
+    st.sampled_from(["alloc", "free", "share", "unshare"]),
+    st.integers(1, 5)), max_size=80),
+    st.integers(4, 24))
+@settings(max_examples=25, deadline=None)
+def test_block_pool_trace_property(ops, num_blocks):
+    _run_alloc_trace(ops, num_blocks)
 
 
 # ---------------------------------------------------- paged cache parity

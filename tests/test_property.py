@@ -5,9 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-# hypothesis is optional in the CI image; skip (not fail) collection without it
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+# real hypothesis when installed, else the vendored fallback — these
+# property tests ALWAYS run (a missing harness fails collection, loudly)
+from _property_harness import given, settings, st  # noqa: E402
 
 from repro.configs.base import MoSAConfig
 from repro.core.flops import PaperModel, flops_dense_head, flops_mosa_head

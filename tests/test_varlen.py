@@ -1,0 +1,523 @@
+"""Varlen (cu_seqlens) parity suite — ISSUE 6 acceptance.
+
+The packed ragged path must be exact against the per-row padded path at
+every level it exists: the flash varlen kernel, the fused MoSA kernels
+(fwd AND bwd, through the custom_vjp), the paged prefill kernel, the
+packed cache appends, the model-level chunked ``prefill_packed``, and the
+chunked-prefill scheduler (decode rows stay live during a long prompt and
+tokens match unchunked greedy).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import BlockSpec, get_config
+from repro.kernels import ops, ref
+from repro.nn.transformer import TransformerLM
+from repro.serve.paged_attention import paged_prefill_attention
+from repro.serve.paged_kv import (PagedConfig, PagedDenseKVCache,
+                                  PagedWindowKVCache)
+
+
+def _cu(lens):
+    return jnp.asarray(np.concatenate([[0], np.cumsum(lens)]), jnp.int32)
+
+
+# ------------------------------------------------------------ flash varlen
+@pytest.mark.parametrize("window", [0, 8])
+def test_flash_varlen_matches_per_row_padded(window):
+    """Packed stream == per-row path, segment by segment (fp32)."""
+    lens = [13, 5, 22, 1]
+    Hq, Hkv, d = 4, 2, 16
+    total = sum(lens)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (total, Hq, d))
+    k = jax.random.normal(ks[1], (total, Hkv, d))
+    v = jax.random.normal(ks[2], (total, Hkv, d))
+    cu = _cu(lens)
+
+    out = np.asarray(ops.flash_attention_varlen(q, k, v, cu, window=window))
+    np.testing.assert_allclose(
+        out, np.asarray(ref.flash_attention_varlen_ref(q, k, v, cu,
+                                                       window=window)),
+        atol=1e-5, rtol=1e-5)
+    # the per-row PADDED kernel path: right-pad every segment to max(lens)
+    Pm = max(lens)
+    for i, L in enumerate(lens):
+        s = int(cu[i])
+        pad = lambda x: jnp.pad(x[s:s + L].transpose(1, 0, 2),
+                                ((0, 0), (0, Pm - L), (0, 0)))[None]
+        o_pad = ops.flash_attention(pad(q), pad(k), pad(v), window=window)
+        np.testing.assert_allclose(out[s:s + L],
+                                   np.asarray(o_pad[0, :, :L].transpose(
+                                       1, 0, 2)),
+                                   atol=1e-5, rtol=1e-5, err_msg=f"seg {i}")
+
+
+def test_flash_varlen_bf16():
+    lens = [9, 31]
+    Hq, Hkv, d = 2, 2, 32
+    total = sum(lens)
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (total, Hq, d), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (total, Hkv, d), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (total, Hkv, d), jnp.bfloat16)
+    cu = _cu(lens)
+    out = ops.flash_attention_varlen(q, k, v, cu)
+    assert out.dtype == jnp.bfloat16
+    want = ref.flash_attention_varlen_ref(q.astype(jnp.float32),
+                                          k.astype(jnp.float32),
+                                          v.astype(jnp.float32), cu)
+    np.testing.assert_allclose(np.asarray(out, jnp.float32),
+                               np.asarray(want), atol=2e-2, rtol=2e-2)
+
+
+# -------------------------------------------------------- MoSA seg kernels
+def _mosa_seg_inputs(key, H, d, lens, rho, dtype):
+    """Packed-stream MoSA inputs: per-head sorted selections drawn from the
+    whole stream; seg ids follow each selected token's segment."""
+    T = sum(lens)
+    S = max(T // rho, 2)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (1, H, S, d), dtype)
+    k = jax.random.normal(ks[1], (1, H, S, d), dtype)
+    v = jax.random.normal(ks[2], (1, H, S, d), dtype)
+    perm = jnp.stack([jax.random.permutation(
+        jax.random.fold_in(ks[3], h), T)[:S] for h in range(H)])
+    idx = jnp.sort(perm, axis=-1).astype(jnp.int32)[None]         # (1,H,S)
+    r = jax.nn.sigmoid(jax.random.normal(ks[4], (1, H, S))).astype(
+        jnp.float32)
+    seg_of_pos = jnp.asarray(np.repeat(np.arange(len(lens)), lens),
+                             jnp.int32)
+    seg = seg_of_pos[idx]
+    return q, k, v, idx, r, seg
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mosa_seg_kernel_matches_oracle(dtype):
+    q, k, v, idx, r, seg = _mosa_seg_inputs(jax.random.PRNGKey(2), 3, 16,
+                                            [17, 40, 7], 2, dtype)
+    out = ops.mosa_attention(q, k, v, idx, r, seg=seg)
+    want = ref.mosa_attention_ref(q, k, v, idx, r, seg=seg)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, jnp.float32),
+                               np.asarray(want, jnp.float32),
+                               atol=tol, rtol=tol)
+    # the seg mask genuinely bites: unsegmented output differs
+    free = np.asarray(ref.mosa_attention_ref(q, k, v, idx, r), jnp.float32)
+    assert np.abs(free - np.asarray(want, jnp.float32)).max() > 1e-3
+
+
+def test_mosa_seg_kernel_grads_match_reference():
+    """Fused bwd kernels under the segment mask (dq/dk/dv/dr) == autodiff
+    of the seg-masked reference."""
+    q, k, v, idx, r, seg = _mosa_seg_inputs(jax.random.PRNGKey(3), 2, 20,
+                                            [11, 25], 2, jnp.float32)
+    g = jax.random.normal(jax.random.PRNGKey(9), q.shape, jnp.float32)
+
+    def loss(fn):
+        return lambda q, k, v, r: jnp.sum(
+            fn(q, k, v, idx, r, seg=seg).astype(jnp.float32) * g)
+
+    got = jax.grad(loss(ops.mosa_attention), argnums=(0, 1, 2, 3))(q, k, v,
+                                                                   r)
+    want = jax.grad(loss(ref.mosa_attention_ref),
+                    argnums=(0, 1, 2, 3))(q, k, v, r)
+    for name, a, b in zip("qkvr", got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5,
+                                   rtol=3e-5, err_msg=f"d{name}")
+
+
+def test_mosa_layer_packed_grads_pallas_equals_einsum():
+    """Full MoSAAttention layer on a PACKED row (segments + per-doc
+    positions): fused-kernel parameter grads == einsum path."""
+    from repro.configs.base import MoSAConfig
+    from repro.core.mosa import MoSAAttention
+    key = jax.random.PRNGKey(4)
+    lens = [24, 40]
+    x = jax.random.normal(key, (2, sum(lens), 32))
+    segments = jnp.broadcast_to(
+        jnp.asarray(np.repeat(np.arange(len(lens)), lens), jnp.int32),
+        (2, sum(lens)))
+    positions = jnp.broadcast_to(
+        jnp.asarray(np.concatenate([np.arange(n) for n in lens]),
+                    jnp.int32), (2, sum(lens)))
+    cfg = MoSAConfig(n_mosa_heads=4, sparsity=8, n_dense_heads=0, d_head=16)
+    m_ref = MoSAAttention(32, cfg, impl="einsum")
+    m_fused = MoSAAttention(32, cfg, impl="pallas")
+    p = m_ref.init(key)
+
+    def loss(m):
+        return lambda p: jnp.sum(jnp.square(
+            m(p, x, positions, segments=segments)))
+
+    g_ref = jax.grad(loss(m_ref))(p)
+    g_fused = jax.grad(loss(m_fused))(p)
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(g_ref)[0],
+            jax.tree_util.tree_flatten_with_path(g_fused)[0]):
+        np.testing.assert_allclose(
+            np.asarray(b), np.asarray(a), atol=1e-4, rtol=1e-4,
+            err_msg=jax.tree_util.keystr(path))
+
+
+def test_lm_loss_packed_grads_pallas_equals_einsum():
+    """LM-loss level on a packed batch (segments + positions): grads
+    through the fused seg-masked kernels == einsum path."""
+    cfg = get_config("mosa-paper", preset="smoke", variant="mosa")
+    cfg_f = dataclasses.replace(
+        cfg, mosa=dataclasses.replace(cfg.mosa, impl="pallas"))
+    key = jax.random.PRNGKey(5)
+    lens = [20, 12]
+    T = sum(lens)
+    tokens = jax.random.randint(key, (2, T), 2, cfg.vocab)
+    segments = jnp.broadcast_to(
+        jnp.asarray(np.repeat(np.arange(len(lens)), lens), jnp.int32),
+        (2, T))
+    positions = jnp.broadcast_to(
+        jnp.asarray(np.concatenate([np.arange(n) for n in lens]),
+                    jnp.int32), (2, T))
+    batch = {"tokens": tokens, "labels": tokens, "segments": segments,
+             "positions": positions}
+    m_ref, m_fused = TransformerLM(cfg), TransformerLM(cfg_f)
+    params = m_ref.init(key)
+    (l_ref, _), g_ref = jax.value_and_grad(m_ref.loss, has_aux=True)(
+        params, batch)
+    (l_fused, _), g_fused = jax.value_and_grad(m_fused.loss, has_aux=True)(
+        params, batch)
+    np.testing.assert_allclose(float(l_fused), float(l_ref), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_fused)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_packed_training_no_cross_doc_leakage():
+    """Dense-attention model: the loss of a packed row [docA|docB] equals
+    the loss of the two docs in separate (padded) rows — the segment mask
+    is airtight, so packing is free of cross-doc contamination."""
+    cfg = dataclasses.replace(
+        get_config("mosa-paper", preset="smoke", variant="dense"),
+        n_layers=2)
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(6))
+    lens = [21, 11]
+    T = sum(lens)
+    docs = [jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(7), i),
+                               (n,), 2, cfg.vocab)
+            for i, n in enumerate(lens)]
+
+    packed = {"tokens": jnp.concatenate(docs)[None],
+              "labels": jnp.concatenate(docs)[None],
+              "segments": jnp.asarray(
+                  np.repeat(np.arange(len(lens)), lens), jnp.int32)[None],
+              "positions": jnp.asarray(
+                  np.concatenate([np.arange(n) for n in lens]),
+                  jnp.int32)[None]}
+    toks = np.zeros((2, T), np.int32)
+    labels = np.full((2, T), -1, np.int32)
+    for i, d in enumerate(docs):
+        toks[i, :lens[i]] = np.asarray(d)
+        labels[i, :lens[i]] = np.asarray(d)
+    padded = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+
+    (lp, _), gp = jax.value_and_grad(model.loss, has_aux=True)(params,
+                                                               packed)
+    (lu, _), gu = jax.value_and_grad(model.loss, has_aux=True)(params,
+                                                               padded)
+    np.testing.assert_allclose(float(lp), float(lu), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(gp), jax.tree.leaves(gu)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------ paged varlen
+def test_paged_prefill_attention_matches_per_row():
+    """Packed paged prefill (two chunks, ragged rows, GQA) == per-row
+    full-prefix flash reference."""
+    B, Hq, Hkv, d, bs, ML = 3, 4, 2, 16, 8, 64
+    lens = [19, 7, 26]
+    split = [11, 7, 9]                     # chunk-1 sizes (row 1 completes)
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q_all = [jax.random.normal(jax.random.fold_in(ks[0], b), (L, Hq, d))
+             for b, L in enumerate(lens)]
+    k_all = [jax.random.normal(jax.random.fold_in(ks[1], b), (L, Hkv, d))
+             for b, L in enumerate(lens)]
+    v_all = [jax.random.normal(jax.random.fold_in(ks[2], b), (L, Hkv, d))
+             for b, L in enumerate(lens)]
+
+    cache = PagedDenseKVCache.create(B, ML, Hkv, d, jnp.float32,
+                                     block_size=bs, identity_tables=True)
+    got = [[] for _ in range(B)]
+    for chunk in range(2):
+        segs = [(b, 0 if chunk == 0 else split[b],
+                 split[b] if chunk == 0 else lens[b] - split[b])
+                for b in range(B)]
+        segs = [(b, s, t) for b, s, t in segs if t > 0]
+        qc = jnp.concatenate([q_all[b][s:s + t] for b, s, t in segs])
+        kc = jnp.concatenate([k_all[b][s:s + t] for b, s, t in segs])
+        vc = jnp.concatenate([v_all[b][s:s + t] for b, s, t in segs])
+        row_of_tok = jnp.asarray(
+            np.repeat([b for b, _, _ in segs], [t for _, _, t in segs]),
+            jnp.int32)
+        pos_of_tok = jnp.asarray(
+            np.concatenate([np.arange(s, s + t) for _, s, t in segs]),
+            jnp.int32)
+        cu = _cu([t for _, _, t in segs])
+        rows = jnp.asarray([b for b, _, _ in segs], jnp.int32)
+        past = jnp.asarray([s for _, s, _ in segs], jnp.int32)
+        cache = cache.append_packed(kc, vc, row_of_tok, pos_of_tok)
+        out = paged_prefill_attention(qc, cache, cu, rows, past,
+                                      scale=d ** -0.5)
+        for i, (b, s, t) in enumerate(segs):
+            got[b].append(np.asarray(out[int(cu[i]):int(cu[i + 1])]))
+
+    for b in range(B):
+        o = np.concatenate(got[b])                         # (L, Hq, d)
+        want = ref.flash_attention_ref(
+            q_all[b].transpose(1, 0, 2)[None],
+            k_all[b].transpose(1, 0, 2)[None],
+            v_all[b].transpose(1, 0, 2)[None])
+        np.testing.assert_allclose(o, np.asarray(want[0].transpose(1, 0, 2)),
+                                   atol=1e-5, rtol=1e-5, err_msg=f"row {b}")
+
+
+def test_window_append_packed_matches_sequential():
+    """Ring scatter parity: packed multi-row append (incl. a row longer
+    than the window inside ONE stream) == the batched sequential append."""
+    B, H, d, W, bs = 3, 2, 8, 16, 8
+    lens = [5, 23, 16]                     # row 1 exceeds W in one stream
+    key = jax.random.PRNGKey(10)
+    kv = [jax.random.normal(jax.random.fold_in(key, b), (2, L, H, d))
+          for b, L in enumerate(lens)]
+
+    seq = PagedWindowKVCache.create(B, W, H, d, jnp.float32, block_size=bs,
+                                    identity_tables=True)
+    Pm = max(lens)
+    kp = jnp.stack([jnp.pad(kv[b][0], ((0, Pm - lens[b]), (0, 0), (0, 0)))
+                    for b in range(B)])
+    vp = jnp.stack([jnp.pad(kv[b][1], ((0, Pm - lens[b]), (0, 0), (0, 0)))
+                    for b in range(B)])
+    seq = seq.append(kp, vp, n_valid=jnp.asarray(lens, jnp.int32))
+
+    packed = PagedWindowKVCache.create(B, W, H, d, jnp.float32,
+                                       block_size=bs, identity_tables=True)
+    kc = jnp.concatenate([kv[b][0] for b in range(B)])
+    vc = jnp.concatenate([kv[b][1] for b in range(B)])
+    row_of_tok = jnp.asarray(np.repeat(np.arange(B), lens), jnp.int32)
+    pos_of_tok = jnp.asarray(
+        np.concatenate([np.arange(n) for n in lens]), jnp.int32)
+    packed = packed.append_packed(kc, vc, row_of_tok, pos_of_tok)
+
+    np.testing.assert_array_equal(np.asarray(seq.length),
+                                  np.asarray(packed.length))
+    np.testing.assert_array_equal(np.asarray(seq.positions),
+                                  np.asarray(packed.positions))
+    for name in ("k", "v"):
+        np.testing.assert_allclose(np.asarray(getattr(seq, name)),
+                                   np.asarray(getattr(packed, name)),
+                                   err_msg=name)
+
+
+# ----------------------------------------------------- model prefill_packed
+def _hybrid_cfg(window=16, sparsity=4):
+    cfg = get_config("mosa-paper", preset="smoke", variant="mosa",
+                     sparsity=sparsity)
+    return dataclasses.replace(
+        cfg, n_layers=3,
+        attention=dataclasses.replace(cfg.attention, window=window),
+        pattern=(BlockSpec("attn", "dense"), BlockSpec("attn_local", "dense"),
+                 BlockSpec("mosa", "dense")))
+
+
+def test_model_prefill_packed_chunked_exact():
+    """TransformerLM.prefill_packed streamed in ragged multi-row chunks ==
+    per-row one-shot prefill: caches match the padded batch prefill, final
+    logits match the per-row UNPADDED prefill (selection width is k_for of
+    the row's REAL length — the pow2-bucket k_for(padded T) bug is gone)."""
+    from repro.core.kv_cache import MoSAKVCache
+
+    cfg = _hybrid_cfg()
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, ML, C = 3, 64, 16
+    paged = PagedConfig(block_size=8)
+    rng = np.random.default_rng(0)
+    P = [19, 7, 26]
+    prompts = [rng.integers(2, cfg.vocab, (p,)).astype(np.int32) for p in P]
+
+    # reference caches: one-shot right-padded batch prefill
+    caches = model.init_cache(B, ML, jnp.float32, paged=paged)
+    Pm = max(P)
+    toks = np.zeros((B, Pm), np.int32)
+    valid = np.zeros((B, Pm), bool)
+    for b, pr in enumerate(prompts):
+        toks[b, :len(pr)] = pr
+        valid[b, :len(pr)] = True
+    _, c_ref = model.prefill(params, jnp.asarray(toks), caches,
+                             valid=jnp.asarray(valid),
+                             last_pos=jnp.asarray(
+                                 [p - 1 for p in P], jnp.int32))
+
+    # packed chunked prefill: greedy-pack pending rows into C-slot chunks
+    caches = model.init_cache(B, ML, jnp.float32, paged=paged)
+    done = [0] * B
+    final_logits = {}
+    N = 3
+    while any(done[b] < P[b] for b in range(B)):
+        segs, budget = [], C
+        for b in range(B):
+            rem = P[b] - done[b]
+            if budget == 0 or len(segs) == N or rem == 0:
+                continue
+            take = min(rem, budget)
+            segs.append((b, done[b], take))
+            budget -= take
+        buf = np.zeros((C,), np.int32)
+        cu = np.zeros((N + 1,), np.int32)
+        rows = np.full((N,), -1, np.int32)
+        past = np.zeros((N,), np.int32)
+        off = 0
+        for i, (b, start, take) in enumerate(segs):
+            buf[off:off + take] = prompts[b][start:start + take]
+            rows[i], past[i] = b, start
+            off += take
+            cu[i + 1] = off
+        cu[len(segs) + 1:] = off
+        logits, caches = model.prefill_packed(
+            params, jnp.asarray(buf)[None], caches, jnp.asarray(cu),
+            jnp.asarray(rows), jnp.asarray(past))
+        for i, (b, start, take) in enumerate(segs):
+            done[b] += take
+            if done[b] == P[b]:
+                final_logits[b] = np.asarray(logits[i])
+
+    def cmp_mosa(name, a, b):
+        # K/V of empty slots (idx == -1) are junk by design — mask them
+        np.testing.assert_array_equal(np.asarray(a.idx), np.asarray(b.idx),
+                                      err_msg=name + ".idx")
+        np.testing.assert_allclose(np.asarray(a.scores),
+                                   np.asarray(b.scores), atol=1e-5,
+                                   err_msg=name + ".scores")
+        ok = (np.asarray(a.idx) >= 0)[..., None]
+        for f in ("k", "v"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(a, f)) * ok,
+                np.asarray(getattr(b, f)) * ok, atol=2e-4, rtol=1e-4,
+                err_msg=name + "." + f)
+        np.testing.assert_array_equal(np.asarray(a.length),
+                                      np.asarray(b.length),
+                                      err_msg=name + ".length")
+
+    is_mosa = lambda x: isinstance(x, MoSAKVCache)
+    for (pa, va), (_, vb) in zip(
+            jax.tree_util.tree_flatten_with_path(c_ref, is_leaf=is_mosa)[0],
+            jax.tree_util.tree_flatten_with_path(caches,
+                                                 is_leaf=is_mosa)[0]):
+        name = jax.tree_util.keystr(pa)
+        if is_mosa(va):
+            cmp_mosa(name, va, vb)
+        elif np.asarray(va).dtype.kind in "fc":
+            np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                                       atol=2e-4, rtol=1e-4, err_msg=name)
+        else:
+            np.testing.assert_array_equal(np.asarray(va), np.asarray(vb),
+                                          err_msg=name)
+
+    # logits oracle: per-row UNPADDED prefill
+    for b in range(B):
+        c1 = model.init_cache(1, ML, jnp.float32, paged=paged)
+        lp1, _ = model.prefill(params, jnp.asarray(prompts[b])[None], c1)
+        np.testing.assert_allclose(final_logits[b], np.asarray(lp1[0, -1]),
+                                   atol=2e-4, rtol=1e-4,
+                                   err_msg=f"row {b} logits")
+
+
+# -------------------------------------------------------------- scheduler
+def test_scheduler_chunked_prefill_interleaves_and_matches_greedy():
+    """A long prompt streams through chunk-budgeted packed prefill while a
+    short request decodes BETWEEN its chunks (TTFT not stalled), and every
+    request's greedy tokens equal the unchunked ``Server.generate``."""
+    from repro.launch.serve import Server
+    from repro.serve.scheduler import Scheduler
+
+    cfg = _hybrid_cfg()
+    B = 2
+    paged = PagedConfig(block_size=8, num_blocks=24, num_window_blocks=2 * B)
+    server = Server(cfg, batch=B, max_len=64, paged=paged)
+    short = jax.random.randint(jax.random.PRNGKey(20), (4,), 2, cfg.vocab)
+    long = jax.random.randint(jax.random.PRNGKey(21), (40,), 2, cfg.vocab)
+
+    sched = Scheduler(server, chunk=4, chunk_tokens=8, max_prefill_segs=2,
+                      prefix_cache=False)
+    events = []
+    real_pf, real_dm = server.prefill_packed, server.decode_many
+    server.prefill_packed = (
+        lambda *a, **kw: (events.append("P"), real_pf(*a, **kw))[1])
+    server.decode_many = (
+        lambda *a, **kw: (events.append("D"), real_dm(*a, **kw))[1])
+    r_short = sched.submit(short, max_new=10)
+    r_long = sched.submit(long, max_new=3)
+    got = sched.run()
+
+    # decode progressed while the long prompt was still prefilling: some
+    # decode dispatch lands strictly BEFORE the last prefill chunk
+    last_p = max(i for i, e in enumerate(events) if e == "P")
+    assert any(e == "D" for e in events[:last_p]), events
+    assert sched.stats["prefill_chunks"] >= 5, sched.stats
+
+    ref_server = Server(cfg, batch=1, max_len=64,
+                        paged=PagedConfig(block_size=8),
+                        params=server.params)
+    for rid, prompt, max_new in ((r_short, short, 10), (r_long, long, 3)):
+        want, _ = ref_server.generate(prompt[None], max_new, temperature=0.0)
+        np.testing.assert_array_equal(
+            np.asarray(got[rid]), np.asarray(want[0, :len(got[rid])]),
+            err_msg=f"rid {rid}")
+        assert len(got[rid]) == max_new
+
+
+def test_scheduler_slot_reuse_after_free():
+    """Satellite: cycle ONE slot through admit -> finish -> admit with
+    different prompt lengths; the recycled slot's tokens match a fresh
+    scheduler, and freed rows leave no stale device state (-1 tables,
+    full pools)."""
+    from repro.launch.serve import Server
+    from repro.serve.scheduler import Scheduler
+
+    cfg = _hybrid_cfg()
+    paged = PagedConfig(block_size=8, num_blocks=16, num_window_blocks=2)
+    server = Server(cfg, batch=1, max_len=64, paged=paged)
+    prompts = [jax.random.randint(jax.random.PRNGKey(30), (20,), 2,
+                                  cfg.vocab),
+               jax.random.randint(jax.random.PRNGKey(31), (7,), 2,
+                                  cfg.vocab),
+               jax.random.randint(jax.random.PRNGKey(32), (33,), 2,
+                                  cfg.vocab)]
+
+    sched = Scheduler(server, chunk=4, chunk_tokens=16, prefix_cache=False)
+    rids = [sched.submit(p, max_new=5) for p in prompts]
+    got = sched.run()                       # B=1: strictly sequential reuse
+
+    for i, p in enumerate(prompts):
+        server2 = Server(cfg, batch=1, max_len=64, paged=paged,
+                         params=server.params)
+        fresh = Scheduler(server2, chunk=4, chunk_tokens=16,
+                          prefix_cache=False)
+        rid = fresh.submit(p, max_new=5)
+        want = fresh.run()[rid]
+        np.testing.assert_array_equal(np.asarray(got[rids[i]]),
+                                      np.asarray(want), err_msg=f"req {i}")
+
+    # -1-table invariant after the last free
+    assert sched.dense_pool.free_blocks == sched.dense_pool.num_blocks
+    assert sched.window_pool.free_blocks == sched.window_pool.num_blocks
+    for leaf in jax.tree_util.tree_leaves(
+            sched.caches, is_leaf=lambda x: isinstance(
+                x, (PagedDenseKVCache, PagedWindowKVCache))):
+        if isinstance(leaf, (PagedDenseKVCache, PagedWindowKVCache)):
+            assert (np.asarray(leaf.block_table) == -1).all()
+            assert (np.asarray(leaf.length) == 0).all()
