@@ -5,7 +5,7 @@ PY ?= python
 export PYTHONPATH := src
 
 .PHONY: test collect lint smoke test-paged test-train test-property \
-    bench-smoke bench-train bench-check ci
+    test-blockchoice bench-smoke bench-train bench-check ci
 
 # Tier-1 command from ROADMAP.md
 test:
@@ -57,6 +57,22 @@ test-property:
 	fi
 	@rm -f .prop_report.txt
 
+# Block-choice MoSA suite (DESIGN §10): the sel_block_size=1 == token-choice
+# bitwise invariant (kernel/layer/LM fwd+bwd), block kernels vs oracle,
+# chunked-prefill/decode cache parity, the property layer, and EXACT paged
+# prefix hits through the Scheduler.  CPU-pinned (libtpu probe hangs).
+test-blockchoice:
+	JAX_PLATFORMS=cpu $(PY) -m pytest -q -rs tests/test_block_choice.py \
+	    > .blk_report.txt 2>&1 \
+	    || { cat .blk_report.txt; rm -f .blk_report.txt; exit 1; }
+	@cat .blk_report.txt
+	@if grep -qE "[0-9]+ skipped" .blk_report.txt; then \
+	    rm -f .blk_report.txt; \
+	    echo "FAIL: block-choice tests were SKIPPED"; \
+	    exit 1; \
+	fi
+	@rm -f .blk_report.txt
+
 # Decode-path perf trajectory: refreshes the TRACKED BENCH_serve.json
 # (fused vs per-token decode tok/s, MoSA vs dense KV bytes, and the paged
 # family: paged vs contiguous tok/s + capacity at fixed budget; CPU, tiny
@@ -80,5 +96,5 @@ bench-check:
 # bench-smoke/bench-train run BEFORE test: the suite validates the
 # regenerated artifacts, so what this ci run leaves behind is what passed;
 # bench-check then gates the refreshed trajectories.
-ci: lint collect test-paged test-train test-property bench-smoke \
-    bench-train bench-check test
+ci: lint collect test-paged test-train test-property test-blockchoice \
+    bench-smoke bench-train bench-check test

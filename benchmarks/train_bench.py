@@ -64,13 +64,19 @@ def _shrink(cfg, d_model: int):
     return dataclasses.replace(cfg, d_model=d_model, d_ff=2 * d_model, **kw)
 
 
-def _build_cfg(variant: str, seq: int, d_model: int, impl: str = "einsum"):
+def _build_cfg(variant: str, seq: int, d_model: int, impl: str = "einsum",
+               granularity: str = "token", sel_block_size: int = 16,
+               sparsity: int = 0):
     kw = dict(TABLE2_RECIPE) if variant == "mosa" else {}
+    if sparsity:
+        kw["sparsity"] = sparsity
     cfg = _shrink(get_config("mosa-paper", preset="smoke", variant=variant,
                              seq_len=seq, **kw), d_model)
     if cfg.mosa is not None:
         cfg = dataclasses.replace(
-            cfg, mosa=dataclasses.replace(cfg.mosa, impl=impl))
+            cfg, mosa=dataclasses.replace(
+                cfg.mosa, impl=impl, selection_granularity=granularity,
+                sel_block_size=sel_block_size))
     return cfg
 
 
@@ -138,11 +144,36 @@ def run_bench(batch: int = 4, seq: int = 64, d_model: int = 64,
     res["variants"]["microbatch2"] = time_step(
         _build_cfg("mosa", seq, d_model), batch, seq, steps, microbatches=2,
         calib0=calib0)
+    # Block-choice family (DESIGN §10): an exactly FLOP-matched pair — at
+    # sparsity 4 / seq 64, k_for = 16 tokens per head, and with
+    # sel_block_size 8 the block path selects kb = 2 blocks = the same 16
+    # rows — so tok/s is apples-to-apples and the post-step training loss
+    # is a perplexity proxy for routing granularity alone.
+    blk_bs, blk_rho = 8, 4
+    res["variants"]["mosa_tok_match"] = time_step(
+        _build_cfg("mosa", seq, d_model, sparsity=blk_rho), batch, seq,
+        steps, calib0=calib0)
+    res["variants"]["mosa_block"] = time_step(
+        _build_cfg("mosa", seq, d_model, granularity="block",
+                   sel_block_size=blk_bs, sparsity=blk_rho), batch, seq,
+        steps, calib0=calib0)
     ref = res["variants"]["mosa_ref"]
     res["fused_over_ref"] = round(
         res["variants"]["mosa_fused"]["tok_s"] / ref["tok_s"], 3)
     res["accum_overhead"] = round(
         ref["tok_s"] / res["variants"]["microbatch2"]["tok_s"], 3)
+    import math
+    tokm, blkm = res["variants"]["mosa_tok_match"], \
+        res["variants"]["mosa_block"]
+    res["block_family"] = {
+        "sel_block_size": blk_bs, "sparsity": blk_rho,
+        "rows_per_head": 16,
+        "block_over_token_tok_s": round(blkm["tok_s"] / tokm["tok_s"], 3),
+        "ppl_proxy_token": round(math.exp(min(tokm["loss"], 30.0)), 3),
+        "ppl_proxy_block": round(math.exp(min(blkm["loss"], 30.0)), 3),
+        "note": ("FLOP-matched: kb*sel_block_size == k_for(seq) rows per "
+                 "head; ppl proxy = exp(loss) after the timed steps from "
+                 "identical init/data")}
     return res
 
 
@@ -159,7 +190,8 @@ def _append_trajectory(res: dict, prev: dict) -> None:
 
 # Gated variants: compiled paths only — mosa_fused is interpreter-bound off
 # TPU and its CPU timing noise would make the gate flap (module docstring).
-GATED = ("dense", "mosa_ref")
+# The block-choice pair is compiled einsum and rides the same gate.
+GATED = ("dense", "mosa_ref", "mosa_tok_match", "mosa_block")
 
 
 def check_regression(path: str, tol: float = 0.10) -> int:

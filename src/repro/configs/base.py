@@ -65,6 +65,11 @@ class MoSAConfig:
     k_fixed: int = 0              # >0: constant k regardless of T (paper §3.4 long-seq)
     impl: str = "einsum"          # inner-attention impl: einsum | pallas
                                   # (pallas = fused fwd + custom-VJP bwd kernels)
+    selection_granularity: str = "token"  # token | block (expert choice over
+                                  # KV blocks; sel_block_size=1 == token mode)
+    sel_block_size: int = 16      # block-choice KV block size; defaults to the
+                                  # paged BlockPool block size (PagedConfig);
+                                  # power of two <= 128 (kernel tile constraint)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,7 +160,9 @@ class ModelConfig:
         return jnp.dtype(self.compute_dtype)
 
     def with_mosa(self, sparsity: int = 32, n_mosa_heads: int | None = None,
-                  local_window: int = 0, k_fixed: int = 0) -> "ModelConfig":
+                  local_window: int = 0, k_fixed: int = 0,
+                  selection_granularity: str = "token",
+                  sel_block_size: int = 16) -> "ModelConfig":
         """Return a MoSA-hybrid variant of this config (paper's technique).
 
         Replaces every softmax-attention mixer with a ``mosa`` hybrid mixer
@@ -171,7 +178,9 @@ class ModelConfig:
             n_mosa_heads = max(1, self.attention.n_heads - 4) * sparsity // 2
         mosa = MoSAConfig(n_mosa_heads=n_mosa_heads, sparsity=sparsity,
                           n_dense_heads=4, d_head=self.attention.d_head,
-                          local_window=local_window, k_fixed=k_fixed)
+                          local_window=local_window, k_fixed=k_fixed,
+                          selection_granularity=selection_granularity,
+                          sel_block_size=sel_block_size)
         new_pat = tuple(
             dataclasses.replace(b, mixer="mosa") if b.mixer in ("attn", "attn_local") else b
             for b in pat)

@@ -23,7 +23,9 @@ from repro.core.flops import PAPER_MODELS
 def paper_config(size: str = "tiny", variant: str = "dense",
                  sparsity: int = 32, seq_len: int = 1024,
                  n_mosa_heads: int | None = None,
-                 local_window: int = 0, dtype: str = "float32") -> ModelConfig:
+                 local_window: int = 0, dtype: str = "float32",
+                 selection_granularity: str = "token",
+                 sel_block_size: int = 16) -> ModelConfig:
     pm = PAPER_MODELS[size]
     base = dict(
         family="dense", n_layers=pm.n_layers, d_model=pm.h, d_ff=pm.d_ff,
@@ -43,7 +45,9 @@ def paper_config(size: str = "tiny", variant: str = "dense",
         n_dense = 4
     mosa = MoSAConfig(n_mosa_heads=max(n_sparse, 1), sparsity=sparsity,
                       n_dense_heads=n_dense, d_head=pm.hp,
-                      local_window=local_window)
+                      local_window=local_window,
+                      selection_granularity=selection_granularity,
+                      sel_block_size=sel_block_size)
     pattern = tuple(BlockSpec("mosa", "dense") for _ in range(pm.n_layers))
     name = f"mosa-paper-{size}-{variant}{sparsity}"
     sparse_variant = variant if variant in ("fixed", "routing") else "mosa"

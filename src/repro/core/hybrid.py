@@ -20,8 +20,10 @@ import jax.numpy as jnp
 from repro.configs.base import AttentionConfig, MoSAConfig
 from repro.core.attention import MultiHeadAttention
 from repro.core.baselines import FixedSparseAttention, RoutingAttention
-from repro.core.kv_cache import DenseKVCache, MoSAKVCache, WindowKVCache
+from repro.core.kv_cache import (DenseKVCache, MoSABlockKVCache, MoSAKVCache,
+                                 WindowKVCache)
 from repro.core.mosa import MoSAAttention
+from repro.nn.module import logical
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,32 +68,64 @@ class HybridAttention:
                                     compute_dtype=self.compute_dtype)
         raise ValueError(self.variant)
 
+    def _gated(self) -> bool:
+        """Gate-combined selected+window form (DESIGN §10): in BLOCK-choice
+        mode with a sliding-window dense side, the two branches are blended
+        with learned per-token sigmoid gates (the NSA g_slc/g_swa idiom)
+        instead of summed.  Token-choice and windowless configs keep the
+        paper's plain head-sum — the bit-exactness invariants depend on it.
+        """
+        c = self.cfg
+        return (self.variant == "mosa"
+                and c.selection_granularity == "block"
+                and c.local_window > 0 and c.n_dense_heads > 0)
+
     def init(self, key):
         kd, ks = jax.random.split(key)
         p = {"sparse": self._sparse().init(ks)}
         if self.cfg.n_dense_heads > 0:
             p["dense"] = self._dense().init(kd)
+        if self._gated():
+            # zero init: gates open at 0.5/0.5 — the summed form halved,
+            # so training starts from an equivalent loss surface.
+            p["gate"] = jnp.zeros((self.d_model, 2), self.param_dtype)
         return p
 
     def specs(self):
         s = {"sparse": self._sparse().specs()}
         if self.cfg.n_dense_heads > 0:
             s["dense"] = self._dense().specs()
+        if self._gated():
+            s["gate"] = logical("embed", None)
         return s
+
+    def _combine(self, params, x, ys, yd):
+        """Merge sparse and dense branch outputs: plain sum, or the learned
+        per-token gates when ``_gated()`` (block-choice + window)."""
+        if yd is None:
+            return ys
+        if self._gated():
+            g = jax.nn.sigmoid(jnp.einsum(
+                "bth,hg->btg", x.astype(jnp.float32),
+                params["gate"].astype(jnp.float32),
+                preferred_element_type=jnp.float32))
+            out = (ys.astype(jnp.float32) * g[..., 0:1]
+                   + yd.astype(jnp.float32) * g[..., 1:2])
+            return out.astype(ys.dtype)
+        return ys + yd
 
     def __call__(self, params, x, positions=None, segments=None):
         if segments is None:
             y = self._sparse()(params["sparse"], x, positions)
-            if self.cfg.n_dense_heads > 0:
-                y = y + self._dense()(params["dense"], x, positions)
-            return y
+            yd = (self._dense()(params["dense"], x, positions)
+                  if self.cfg.n_dense_heads > 0 else None)
+            return self._combine(params, x, y, yd)
         # packed rows (data/pipeline.py): both sides mask cross-document
         # attention; the baselines don't take segments (train-only variants).
         y = self._sparse()(params["sparse"], x, positions, segments=segments)
-        if self.cfg.n_dense_heads > 0:
-            y = y + self._dense()(params["dense"], x, positions,
-                                  segments=segments)
-        return y
+        yd = (self._dense()(params["dense"], x, positions, segments=segments)
+              if self.cfg.n_dense_heads > 0 else None)
+        return self._combine(params, x, y, yd)
 
     def router_health(self, params, x):
         """Expert-choice health of the sparse side (train-loop telemetry);
@@ -109,8 +143,14 @@ class HybridAttention:
         cache stays unpaged either way: it is already O(k) per head."""
         c = self.cfg
         k = self._sparse_k(max_len)
-        caches = {"sparse": MoSAKVCache.create(batch, c.n_mosa_heads,
-                                               min(k, max_len), c.d_head, dtype)}
+        if c.selection_granularity == "block":
+            bs = c.sel_block_size
+            cb = -(-min(k, max_len) // bs)     # capacity in BLOCKS
+            caches = {"sparse": MoSABlockKVCache.create(
+                batch, c.n_mosa_heads, cb, bs, c.d_head, dtype)}
+        else:
+            caches = {"sparse": MoSAKVCache.create(
+                batch, c.n_mosa_heads, min(k, max_len), c.d_head, dtype)}
         if c.n_dense_heads > 0:
             if c.local_window > 0:
                 if paged is not None:
@@ -150,12 +190,12 @@ class HybridAttention:
             y, sc = sparse.prefill(params["sparse"], x, caches["sparse"],
                                    positions, valid)
         out = dict(caches, sparse=sc)
+        yd = None
         if self.cfg.n_dense_heads > 0:
             yd, dc = self._dense().prefill(params["dense"], x, caches["dense"],
                                            positions, valid)
-            y = y + yd
             out["dense"] = dc
-        return y, out
+        return self._combine(params, x, y, yd), out
 
     def prefill_packed(self, params, x, caches, meta):
         """Packed multi-segment chunked prefill (DESIGN §9): the sparse side
@@ -165,24 +205,24 @@ class HybridAttention:
         y, sc = self._sparse().prefill_packed(params["sparse"], x,
                                               caches["sparse"], meta)
         out = dict(caches, sparse=sc)
+        yd = None
         if self.cfg.n_dense_heads > 0:
             yd, dc = self._dense().prefill_packed(params["dense"], x,
                                                   caches["dense"], meta)
-            y = y + yd
             out["dense"] = dc
-        return y, out
+        return self._combine(params, x, y, yd), out
 
     def decode_step(self, params, x, caches, positions=None):
         assert self.variant == "mosa"
         y, sc = self._sparse().decode_step(params["sparse"], x,
                                            caches["sparse"], positions)
         out = dict(caches, sparse=sc)
+        yd = None
         if self.cfg.n_dense_heads > 0:
             yd, dc = self._dense().decode_step(params["dense"], x,
                                                caches["dense"], positions)
-            y = y + yd
             out["dense"] = dc
-        return y, out
+        return self._combine(params, x, y, yd), out
 
     def kv_total(self, T: int) -> int:
         """Paper Table 2 metric: KV = T*H_dense + k*H_mosa (window caps dense)."""

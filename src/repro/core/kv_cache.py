@@ -35,6 +35,12 @@ fixed-size pool blocks addressed through per-row block tables, so memory
 scales with tokens actually held and shared prompt prefixes can share
 physical blocks (DESIGN §7).  ``MoSAKVCache`` intentionally has no paged
 counterpart — it is already O(k) per head, independent of context length.
+``MoSABlockKVCache`` is the block-choice variant (DESIGN §10): the head
+selects whole KV blocks of ``sel_block_size`` tokens, so its selection state
+is naturally block-granular and snapshots taken at block-aligned boundaries
+(the prefix-cache trie) capture it EXACTLY — paged MoSA prefix hits
+reproduce the cold path bit-for-bit, unlike token-choice's chunk-causal
+approximation.
 """
 
 from __future__ import annotations
@@ -187,3 +193,70 @@ class MoSAKVCache(NamedTuple):
     @property
     def kv_entries(self):
         return self.k.shape[1] * self.k.shape[2]  # H * k — the paper's KV metric
+
+
+class MoSABlockKVCache(NamedTuple):
+    """Streaming BLOCK-choice cache: one top-k set of KV *blocks* per
+    (batch, head), plus one dedicated slot for the current (partial) block.
+
+    Layout (``bs = sel_block_size``, ``CB`` candidate block slots):
+
+      * ``k``/``v``   — (B, H, (CB+1)*bs, d) FLAT token rows, block-major;
+        rows ``[s*bs, (s+1)*bs)`` belong to block slot ``s``.  Slot ``CB``
+        (the last) is the CURRENT block being streamed.
+      * ``pos``       — (B, H, (CB+1)*bs) int32 original token position per
+        row; ``-1`` = empty/pad row.  Attention masks to ``pos >= 0``, so a
+        ragged tail inside an otherwise-held block is never attended.  At
+        ``bs = 1`` this is exactly ``MoSAKVCache.idx``.
+      * ``bscore``    — (B, H, CB+1) fp32 per-block MEAN router score;
+        ``-inf`` = empty slot (fills first under evict-min, exactly the
+        token-cache sentinel).  Slot ``CB``'s entry is unused (-inf).
+      * ``bidx``      — (B, H, CB+1) int32 block index; ``-1`` = empty.
+        Candidate slots are kept sorted ascending with empties last (the
+        ``select_topk`` convention); slot ``CB`` holds the in-progress
+        block's index (or -1 before its first token).
+      * ``bsum``      — (B, H) fp32 running sum of the current block's token
+        scores — the only extra state streaming needs to finalize the mean.
+      * ``length``    — (B,) tokens seen.
+
+    Exactness invariant: only COMPLETED blocks (whose mean score is final
+    and immutable) ever enter the candidate set; the partial current block
+    rides in its dedicated slot verbatim.  Snapshots at block-aligned
+    boundaries therefore see an empty current slot and fully-determined
+    candidates — the basis of the paged prefix-hit bit-exactness (DESIGN
+    §10).  Eviction policy is ``streaming_topk_update`` over ``bscore``,
+    shared with the token cache.
+    """
+
+    k: jnp.ndarray        # (B, H, (CB+1)*bs, d)
+    v: jnp.ndarray        # (B, H, (CB+1)*bs, d)
+    pos: jnp.ndarray      # (B, H, (CB+1)*bs) int32; -1 = empty row
+    bscore: jnp.ndarray   # (B, H, CB+1) fp32; -inf = empty slot
+    bidx: jnp.ndarray     # (B, H, CB+1) int32; -1 = empty slot
+    bsum: jnp.ndarray     # (B, H) fp32 current-block running score sum
+    length: jnp.ndarray   # (B,) tokens seen
+
+    @classmethod
+    def create(cls, batch, n_heads, cb, block_size, d_head,
+               dtype=jnp.bfloat16):
+        rows = (cb + 1) * block_size
+        return cls(
+            jnp.zeros((batch, n_heads, rows, d_head), dtype),
+            jnp.zeros((batch, n_heads, rows, d_head), dtype),
+            jnp.full((batch, n_heads, rows), -1, jnp.int32),
+            jnp.full((batch, n_heads, cb + 1), -jnp.inf, jnp.float32),
+            jnp.full((batch, n_heads, cb + 1), -1, jnp.int32),
+            jnp.zeros((batch, n_heads), jnp.float32),
+            jnp.zeros((batch,), jnp.int32))
+
+    @property
+    def block_size(self):
+        return self.k.shape[2] // self.bidx.shape[2]
+
+    @property
+    def n_cand(self):
+        return self.bidx.shape[2] - 1  # CB — candidate slots, sans current
+
+    @property
+    def kv_entries(self):
+        return self.k.shape[1] * self.k.shape[2]  # H * (CB+1) * bs

@@ -107,6 +107,47 @@ def selection_mask(idx_q, idx_k):
     return idx_q[..., :, None] >= idx_k[..., None, :]
 
 
+def block_pool_scores(scores, block_size: int):
+    """Pool per-token router scores into per-block scores (block-choice MoSA).
+
+    scores: (B, H, T) fp32 -> (B, H, NB) with NB = ceil(T / block_size).
+
+    A block's score is the MEAN of its in-range token scores (the last block
+    may cover fewer than ``block_size`` positions when ``block_size`` does
+    not divide T; out-of-range slots are excluded from the mean).  At
+    ``block_size=1`` this is the bitwise identity — the maintained
+    token-choice equivalence (DESIGN §10) rests on it: sum over a size-1
+    window then division by 1.0 reproduces every score exactly.
+    """
+    B, H, T = scores.shape
+    bs = block_size
+    nb = -(-T // bs)
+    pad = nb * bs - T
+    s = jnp.pad(scores, ((0, 0), (0, 0), (0, pad)))
+    in_range = (jnp.arange(nb * bs) < T).reshape(nb, bs)            # (NB, bs)
+    ssum = jnp.sum(jnp.where(in_range, s.reshape(B, H, nb, bs), 0.0), axis=-1)
+    cnt = in_range.sum(-1).astype(scores.dtype)                     # (NB,) >= 1
+    return ssum / cnt
+
+
+def expand_block_index(bidx, block_size: int, T: int):
+    """Per-block indices -> per-token positions (block-choice expansion).
+
+    bidx: (..., NBsel) int32, -1 = empty slot.  Returns ``pos`` of shape
+    (..., NBsel*block_size): ``bidx*bs + offset`` for real slots, and -1 for
+    every token of an empty block or beyond ``T`` (the ragged tail of the
+    last block).  The -1 sentinel keeps the downstream masks (``pos >= 0``)
+    and scatters (positive sentinel + mode="drop") identical in shape to the
+    token-choice path.
+    """
+    bs = block_size
+    off = jnp.arange(bs, dtype=bidx.dtype)
+    pos = bidx[..., None] * bs + off                                # (...,NB,bs)
+    ok = (bidx[..., None] >= 0) & (pos < T)
+    pos = jnp.where(ok, pos, -1)
+    return pos.reshape(*bidx.shape[:-1], bidx.shape[-1] * bs)
+
+
 def streaming_topk_update(cache_scores, cache_idx, new_score, new_pos, is_forced):
     """One step of the autoregressive (serving-time) top-k approximation.
 

@@ -255,6 +255,15 @@ CACHE_AXES: Mapping[type, Mapping[str, tuple]] = {
         "idx": ("batch", "mosa_heads", None),
         "length": ("batch",),
     },
+    _kvc.MoSABlockKVCache: {
+        "k": ("batch", "mosa_heads", None, None),
+        "v": ("batch", "mosa_heads", None, None),
+        "pos": ("batch", "mosa_heads", None),
+        "bscore": ("batch", "mosa_heads", None),
+        "bidx": ("batch", "mosa_heads", None),
+        "bsum": ("batch", "mosa_heads"),
+        "length": ("batch",),
+    },
 }
 # The paged cache types of ``repro.serve.paged_kv`` register their entries
 # here at import time (``register_cache_axes``) — serve depends on dist,

@@ -14,8 +14,14 @@ _EXPORTS = {
     "mosa_attention_fwd_res": "mosa_attention",
     "mosa_attention_bwd_pallas": "mosa_backward",
     "mosa_attention_trainable": "mosa_vjp",
+    "mosa_block_attention": "ops",
+    "mosa_block_attention_pallas": "mosa_block",
+    "mosa_block_attention_fwd_res": "mosa_block",
+    "mosa_block_attention_bwd_pallas": "mosa_block",
+    "mosa_block_attention_trainable": "mosa_block",
     "flash_attention_pallas": "flash_attention",
     "mosa_attention_ref": "ref",
+    "mosa_block_attention_ref": "ref",
     "flash_attention_ref": "ref",
 }
 

@@ -1,0 +1,499 @@
+"""Pallas kernels for BLOCK-CHOICE MoSA attention (DESIGN §10).
+
+Token-choice MoSA (``mosa_attention.py``) carries one index per selected
+TOKEN, so the kernel's address stream is a scattered S-wide gather.  The
+block-choice variant selects contiguous KV blocks of ``sel_block_size``
+tokens (sized to the paged ``BlockPool`` block), so the kernels here take
+  * ``bidx``: (B, H, NB) int32 — one index per selected BLOCK (-1 = empty),
+  * ``rblk``: (B, H, NB) fp32 — one router score per block,
+and expand them to per-token positions IN-KERNEL (``pos = bidx*bs + off``).
+The index traffic shrinks by ``bs`` and the layer-side gather that fills
+q/k/v reads ``bs`` consecutive rows per index — the same memory motion as
+``serve/paged_attention.py``'s block-table DMA, instead of token gathering.
+
+Everything else — tiling, streaming-softmax order, mask structure, the
+residual (``o_pre``/``lse``) layout and the recompute-style backward — is
+kept OPERATION-FOR-OPERATION identical to the token kernels, because the
+maintained invariant (tests/test_block_choice.py) is that
+``sel_block_size=1`` reproduces token-choice BIT-EXACTLY: at bs=1 the
+expansion is the identity, the pair masks take the same boolean values for
+every surviving lane, and the float sequence is unchanged.
+
+Validity: a block slot is empty (``bidx < 0``, padding) or ragged (its tail
+positions ``>= T`` when ``bs`` does not divide the true length T).  Invalid
+KEYS are masked like token padding; invalid QUERY rows are zeroed in the
+outputs (and their cotangent is zeroed by the VJP wrapper) so the layer's
+clamped gather never leaks gradient into the clamp target.
+
+The ``custom_vjp`` mirrors ``mosa_vjp.py`` but its router cotangent is
+PER-BLOCK: the wrapper computes the per-token ``dr`` and sums it over each
+block (``dr_blk``), which the layer's mean-pool (``block_pool_scores``)
+then distributes back onto token scores — expert choice over blocks stays
+learnable end-to-end.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _expand_blocks(bidx_blk, bs: int, T: int):
+    """(nb,) block indices -> ((nb*bs,) positions, (nb*bs,) validity)."""
+    nb = bidx_blk.shape[0]
+    off = jax.lax.broadcasted_iota(jnp.int32, (nb, bs), 1)
+    pos = bidx_blk[:, None] * bs + off
+    ok = (bidx_blk[:, None] >= 0) & (pos < T)
+    return pos.reshape(nb * bs), ok.reshape(nb * bs)
+
+
+def _block_pair_mask(pos_q, pos_k, ok_k, seg_q, seg_k):
+    """Causal-by-original-position AND same-segment AND valid-key mask.
+
+    Identical truth table to ``mosa_attention._pair_mask`` on real lanes:
+    token padding there carries idx=+INT_MAX (killed by causality), block
+    padding here carries bidx=-1 (killed by ``ok_k``)."""
+    return ((seg_q[:, None] == seg_k[None, :])
+            & (pos_q[:, None] >= pos_k[None, :])
+            & ok_k[None, :])
+
+
+def _mosa_block_kernel(bidx_ref, seg_ref, rblk_ref, q_ref, k_ref, v_ref,
+                       o_ref, *, block_k: int, scale: float, bs: int, T: int):
+    """Grid: (BH, S // block_q).  Refs (VMEM blocks):
+
+    bidx_ref: (1, NB)      — selected block indices (whole row; NB = S/bs)
+    seg_ref:  (1, S)       — per-token segment ids (whole row)
+    rblk_ref: (1, NB)      — per-block router scores (whole row)
+    q_ref:    (1, block_q, d)
+    k_ref:    (1, S, d)    — all selected keys, block-major
+    v_ref:    (1, S, d)
+    o_ref:    (1, block_q, d)
+    """
+    block_q, d = q_ref.shape[1], q_ref.shape[2]
+    S = k_ref.shape[1]
+    n_kb = S // block_k
+    nbq, nbk = block_q // bs, block_k // bs
+
+    q = q_ref[0].astype(jnp.float32) * scale                  # (bq, d)
+    qi = pl.program_id(1)
+    bidx_q = jax.lax.dynamic_slice(bidx_ref[0], (qi * nbq,), (nbq,))
+    rblk_q = jax.lax.dynamic_slice(rblk_ref[0], (qi * nbq,), (nbq,))
+    seg_q = jax.lax.dynamic_slice(seg_ref[0], (qi * block_q,), (block_q,))
+    pos_q, ok_q = _expand_blocks(bidx_q, bs, T)
+    r_q = jnp.broadcast_to(rblk_q[:, None], (nbq, bs)).reshape(block_q)
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = jax.lax.dynamic_slice(
+            k_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice(
+            v_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
+        bidx_k = jax.lax.dynamic_slice(bidx_ref[0], (kb * nbk,), (nbk,))
+        seg_k = jax.lax.dynamic_slice(seg_ref[0], (kb * block_k,), (block_k,))
+        pos_k, ok_k = _expand_blocks(bidx_k, bs, T)
+
+        s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        mask = _block_pair_mask(pos_q, pos_k, ok_k, seg_q, seg_k)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1)
+        acc = acc * corr[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    out = out * r_q[:, None]                                   # router scaling
+    out = jnp.where(ok_q[:, None], out, 0.0)                   # ragged tails
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def _mosa_block_fwd_res_kernel(bidx_ref, seg_ref, rblk_ref, q_ref, k_ref,
+                               v_ref, o_ref, lse_ref, *, block_k: int,
+                               scale: float, bs: int, T: int):
+    """Training forward: emits ``o_pre`` (pre-scale, zeroed on invalid query
+    rows so the wrapper's ``o_pre * r`` never resurrects a ragged tail) and
+    ``lse = m + log(l)``.  ``rblk_ref`` rides along unused so both forward
+    kernels share one BlockSpec layout."""
+    del rblk_ref
+    block_q, d = q_ref.shape[1], q_ref.shape[2]
+    S = k_ref.shape[1]
+    n_kb = S // block_k
+    nbq, nbk = block_q // bs, block_k // bs
+
+    q = q_ref[0].astype(jnp.float32) * scale                  # (bq, d)
+    qi = pl.program_id(1)
+    bidx_q = jax.lax.dynamic_slice(bidx_ref[0], (qi * nbq,), (nbq,))
+    seg_q = jax.lax.dynamic_slice(seg_ref[0], (qi * block_q,), (block_q,))
+    pos_q, ok_q = _expand_blocks(bidx_q, bs, T)
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = jax.lax.dynamic_slice(
+            k_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice(
+            v_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
+        bidx_k = jax.lax.dynamic_slice(bidx_ref[0], (kb * nbk,), (nbk,))
+        seg_k = jax.lax.dynamic_slice(seg_ref[0], (kb * block_k,), (block_k,))
+        pos_k, ok_k = _expand_blocks(bidx_k, bs, T)
+
+        s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        mask = _block_pair_mask(pos_q, pos_k, ok_k, seg_q, seg_k)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1)
+        acc = acc * corr[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+
+    l_safe = jnp.maximum(l, 1e-30)
+    o_ref[0] = jnp.where(ok_q[:, None], acc / l_safe[:, None], 0.0)
+    lse_ref[0] = m + jnp.log(l_safe)
+
+
+def _mosa_block_bwd_dq_kernel(bidx_ref, seg_ref, q_ref, k_ref, v_ref, gt_ref,
+                              lse_ref, delta_ref, dq_ref, *, block_k: int,
+                              scale: float, bs: int, T: int):
+    """Grid (BH, S // block_q); same math as ``_mosa_bwd_dq_kernel`` with
+    in-kernel block expansion.  Invalid query rows arrive with gt == 0 and
+    delta == 0 (wrapper zeroes them), so their ds vanishes term-by-term."""
+    block_q, d = q_ref.shape[1], q_ref.shape[2]
+    S = k_ref.shape[1]
+    n_kb = S // block_k
+    nbq, nbk = block_q // bs, block_k // bs
+
+    q = q_ref[0].astype(jnp.float32)                           # (bq, d)
+    gt = gt_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+    qi = pl.program_id(1)
+    bidx_q = jax.lax.dynamic_slice(bidx_ref[0], (qi * nbq,), (nbq,))
+    seg_q = jax.lax.dynamic_slice(seg_ref[0], (qi * block_q,), (block_q,))
+    pos_q, _ = _expand_blocks(bidx_q, bs, T)
+
+    def body(kb, acc):
+        k_blk = jax.lax.dynamic_slice(
+            k_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice(
+            v_ref[0], (kb * block_k, 0), (block_k, d)).astype(jnp.float32)
+        bidx_k = jax.lax.dynamic_slice(bidx_ref[0], (kb * nbk,), (nbk,))
+        seg_k = jax.lax.dynamic_slice(seg_ref[0], (kb * block_k,), (block_k,))
+        pos_k, ok_k = _expand_blocks(bidx_k, bs, T)
+
+        s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = _block_pair_mask(pos_q, pos_k, ok_k, seg_q, seg_k)
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)    # (bq, bk)
+        dp = jax.lax.dot_general(gt, v_blk, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None])
+        return acc + jax.lax.dot_general(
+            ds, k_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    dq = jax.lax.fori_loop(0, n_kb, body, acc0) * scale
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+
+
+def _mosa_block_bwd_dkv_kernel(bidx_ref, seg_ref, q_ref, k_ref, v_ref,
+                               gt_ref, lse_ref, delta_ref, dk_ref, dv_ref, *,
+                               block_q: int, scale: float, bs: int, T: int):
+    """Grid (BH, S // block_k); block-expanded ``_mosa_bwd_dkv_kernel``."""
+    block_k, d = k_ref.shape[1], k_ref.shape[2]
+    S = q_ref.shape[1]
+    n_qb = S // block_q
+    nbq, nbk = block_q // bs, block_k // bs
+
+    k = k_ref[0].astype(jnp.float32)                           # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    ki = pl.program_id(1)
+    bidx_k = jax.lax.dynamic_slice(bidx_ref[0], (ki * nbk,), (nbk,))
+    seg_k = jax.lax.dynamic_slice(seg_ref[0], (ki * block_k,), (block_k,))
+    pos_k, ok_k = _expand_blocks(bidx_k, bs, T)
+
+    def body(qb, carry):
+        dk_acc, dv_acc = carry
+        q_blk = jax.lax.dynamic_slice(
+            q_ref[0], (qb * block_q, 0), (block_q, d)).astype(jnp.float32)
+        gt_blk = jax.lax.dynamic_slice(
+            gt_ref[0], (qb * block_q, 0), (block_q, d)).astype(jnp.float32)
+        lse_blk = jax.lax.dynamic_slice(lse_ref[0], (qb * block_q,),
+                                        (block_q,))
+        delta_blk = jax.lax.dynamic_slice(delta_ref[0], (qb * block_q,),
+                                          (block_q,))
+        bidx_q = jax.lax.dynamic_slice(bidx_ref[0], (qb * nbq,), (nbq,))
+        seg_q = jax.lax.dynamic_slice(seg_ref[0], (qb * block_q,), (block_q,))
+        pos_q, _ = _expand_blocks(bidx_q, bs, T)
+
+        s = jax.lax.dot_general(q_blk, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = _block_pair_mask(pos_q, pos_k, ok_k, seg_q, seg_k)
+        p = jnp.where(mask, jnp.exp(s - lse_blk[:, None]), 0.0)  # (bq, bk)
+        dv_acc = dv_acc + jax.lax.dot_general(
+            p, gt_blk, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(gt_blk, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_blk[:, None])
+        dk_acc = dk_acc + jax.lax.dot_general(
+            ds, q_blk, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return dk_acc, dv_acc
+
+    z = jnp.zeros((block_k, d), jnp.float32)
+    dk, dv = jax.lax.fori_loop(0, n_qb, body, (z, z))
+    dk_ref[0] = (dk * scale).astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _specs(S, NB, block_q, block_k, d, fwd: bool):
+    row = lambda b, i: (b, 0)
+    blk1 = lambda b, i: (b, i)
+    rowd = lambda b, i: (b, 0, 0)
+    blkd = lambda b, i: (b, i, 0)
+    if fwd:
+        return [
+            pl.BlockSpec((1, NB), row),                # bidx
+            pl.BlockSpec((1, S), row),                 # seg
+            pl.BlockSpec((1, NB), row),                # rblk
+            pl.BlockSpec((1, block_q, d), blkd),       # q
+            pl.BlockSpec((1, S, d), rowd),             # k
+            pl.BlockSpec((1, S, d), rowd),             # v
+        ]
+    return row, blk1, rowd, blkd
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
+                                             "bs", "T", "interpret"))
+def mosa_block_attention_pallas(q, k, v, bidx, seg, rblk, *,
+                                block_q: int = 128, block_k: int = 128,
+                                scale: float | None = None, bs: int = 16,
+                                T: int = 0, interpret: bool = False):
+    """q, k, v: (B, H, S, d) block-major selected tokens (S = NB*bs);
+    bidx, rblk: (B, H, NB); seg: (B, H, S) int32.  ``T`` is the true
+    sequence length (positions >= T in the last block are masked).
+
+    Preconditions (ops.py guarantees them): S % block_q == 0,
+    S % block_k == 0, bs divides both block sizes, d padded to 128 lanes.
+    """
+    B, H, S, d = q.shape
+    NB = S // bs
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    assert block_q % bs == 0 and block_k % bs == 0, (block_q, block_k, bs)
+    scale = scale if scale is not None else d ** -0.5
+    BH = B * H
+    qf, kf, vf = (x.reshape(BH, S, d) for x in (q, k, v))
+    bidxf = bidx.reshape(BH, NB)
+    segf = seg.reshape(BH, S)
+    rf = rblk.reshape(BH, NB).astype(jnp.float32)
+
+    kernel = functools.partial(_mosa_block_kernel, block_k=block_k,
+                               scale=scale, bs=bs, T=T)
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, S // block_q),
+        in_specs=_specs(S, NB, block_q, block_k, d, fwd=True),
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        interpret=interpret,
+    )(bidxf, segf, rf, qf, kf, vf)
+    return out.reshape(B, H, S, d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
+                                             "bs", "T", "interpret"))
+def mosa_block_attention_fwd_res(q, k, v, bidx, seg, rblk, *,
+                                 block_q: int = 128, block_k: int = 128,
+                                 scale: float | None = None, bs: int = 16,
+                                 T: int = 0, interpret: bool = False):
+    """Training-path forward; returns ``(o_pre, lse)`` like
+    ``mosa_attention_fwd_res`` (o_pre zeroed on invalid query rows)."""
+    B, H, S, d = q.shape
+    NB = S // bs
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    scale = scale if scale is not None else d ** -0.5
+    BH = B * H
+    qf, kf, vf = (x.reshape(BH, S, d) for x in (q, k, v))
+    bidxf = bidx.reshape(BH, NB)
+    segf = seg.reshape(BH, S)
+    rf = rblk.reshape(BH, NB).astype(jnp.float32)
+
+    kernel = functools.partial(_mosa_block_fwd_res_kernel, block_k=block_k,
+                               scale=scale, bs=bs, T=T)
+    o_pre, lse = pl.pallas_call(
+        kernel,
+        grid=(BH, S // block_q),
+        in_specs=_specs(S, NB, block_q, block_k, d, fwd=True),
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, d), jnp.float32),
+            jax.ShapeDtypeStruct((BH, S), jnp.float32),
+        ],
+        interpret=interpret,
+    )(bidxf, segf, rf, qf, kf, vf)
+    return o_pre.reshape(B, H, S, d), lse.reshape(B, H, S)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
+                                             "bs", "T", "interpret"))
+def mosa_block_attention_bwd_pallas(q, k, v, bidx, seg, gt, lse, delta, *,
+                                    block_q: int = 128, block_k: int = 128,
+                                    scale: float | None = None, bs: int = 16,
+                                    T: int = 0, interpret: bool = False):
+    """Backward dispatch: dq kernel blocked over queries, dk/dv over keys."""
+    B, H, S, d = q.shape
+    NB = S // bs
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    scale = scale if scale is not None else d ** -0.5
+    BH = B * H
+    qf, kf, vf = (x.reshape(BH, S, d) for x in (q, k, v))
+    gtf = gt.reshape(BH, S, d).astype(jnp.float32)
+    bidxf = bidx.reshape(BH, NB)
+    segf = seg.reshape(BH, S)
+    lsef = lse.reshape(BH, S)
+    deltaf = delta.reshape(BH, S)
+
+    row, blk1, rowd, blkd = _specs(S, NB, block_q, block_k, d, fwd=False)
+
+    dq = pl.pallas_call(
+        functools.partial(_mosa_block_bwd_dq_kernel, block_k=block_k,
+                          scale=scale, bs=bs, T=T),
+        grid=(BH, S // block_q),
+        in_specs=[
+            pl.BlockSpec((1, NB), row),                # bidx
+            pl.BlockSpec((1, S), row),                 # seg
+            pl.BlockSpec((1, block_q, d), blkd),       # q
+            pl.BlockSpec((1, S, d), rowd),             # k
+            pl.BlockSpec((1, S, d), rowd),             # v
+            pl.BlockSpec((1, block_q, d), blkd),       # gt
+            pl.BlockSpec((1, block_q), blk1),          # lse
+            pl.BlockSpec((1, block_q), blk1),          # delta
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), blkd),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        interpret=interpret,
+    )(bidxf, segf, qf, kf, vf, gtf, lsef, deltaf)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_mosa_block_bwd_dkv_kernel, block_q=block_q,
+                          scale=scale, bs=bs, T=T),
+        grid=(BH, S // block_k),
+        in_specs=[
+            pl.BlockSpec((1, NB), row),                # bidx
+            pl.BlockSpec((1, S), row),                 # seg
+            pl.BlockSpec((1, S, d), rowd),             # q
+            pl.BlockSpec((1, block_k, d), blkd),       # k
+            pl.BlockSpec((1, block_k, d), blkd),       # v
+            pl.BlockSpec((1, S, d), rowd),             # gt
+            pl.BlockSpec((1, S), row),                 # lse
+            pl.BlockSpec((1, S), row),                 # delta
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, d), blkd),
+            pl.BlockSpec((1, block_k, d), blkd),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, d), k.dtype),
+            jax.ShapeDtypeStruct((BH, S, d), v.dtype),
+        ],
+        interpret=interpret,
+    )(bidxf, segf, qf, kf, vf, gtf, lsef, deltaf)
+
+    return (dq.reshape(B, H, S, d), dk.reshape(B, H, S, d),
+            dv.reshape(B, H, S, d))
+
+
+@functools.lru_cache(maxsize=None)
+def _build(block_q: int, block_k: int, scale: float, bs: int, T: int,
+           interpret: bool):
+    @jax.custom_vjp
+    def fused(q, k, v, bidx, seg, rblk):
+        return mosa_block_attention_pallas(
+            q, k, v, bidx, seg, rblk, block_q=block_q, block_k=block_k,
+            scale=scale, bs=bs, T=T, interpret=interpret)
+
+    def fwd(q, k, v, bidx, seg, rblk):
+        o_pre, lse = mosa_block_attention_fwd_res(
+            q, k, v, bidx, seg, rblk, block_q=block_q, block_k=block_k,
+            scale=scale, bs=bs, T=T, interpret=interpret)
+        rf = rblk.astype(jnp.float32)
+        B, H, NB = rf.shape
+        r_tok = jnp.broadcast_to(rf[..., None],
+                                 (B, H, NB, bs)).reshape(B, H, NB * bs)
+        out = (o_pre * r_tok[..., None]).astype(q.dtype)
+        return out, (q, k, v, bidx, seg, rf, o_pre, lse)
+
+    def bwd(res, g):
+        q, k, v, bidx, seg, rf, o_pre, lse = res
+        B, H, NB = rf.shape
+        g32 = g.astype(jnp.float32)
+        r_tok = jnp.broadcast_to(rf[..., None],
+                                 (B, H, NB, bs)).reshape(B, H, NB * bs)
+        # token validity from the block table: invalid rows carry zero
+        # cotangent so no gradient flows toward the layer's clamped gather
+        off = jnp.arange(bs, dtype=jnp.int32)
+        pos = bidx[..., None] * bs + off
+        ok = ((bidx[..., None] >= 0) & (pos < T)).reshape(B, H, NB * bs)
+        gt = jnp.where(ok[..., None], g32 * r_tok[..., None], 0.0)
+        dr_tok = jnp.sum(g32 * o_pre, axis=-1)         # (B,H,S) fp32
+        delta = jnp.sum(gt * o_pre, axis=-1)
+        dq, dk, dv = mosa_block_attention_bwd_pallas(
+            q, k, v, bidx, seg, gt, lse, delta, block_q=block_q,
+            block_k=block_k, scale=scale, bs=bs, T=T, interpret=interpret)
+        # block-score cotangent: per-token dr summed over each block (the
+        # layer's mean-pool VJP then spreads it back onto token scores)
+        dr_blk = dr_tok.reshape(B, H, NB, bs).sum(-1)
+        dbidx = np.zeros(bidx.shape, jax.dtypes.float0)  # int input: no grad
+        dseg = np.zeros(seg.shape, jax.dtypes.float0)
+        return dq, dk, dv, dbidx, dseg, dr_blk.astype(jnp.float32)
+
+    fused.defvjp(fwd, bwd)
+    return fused
+
+
+def mosa_block_attention_trainable(q, k, v, bidx, rblk, *, seg=None,
+                                   block_q: int = 128, block_k: int = 128,
+                                   scale: float | None = None, bs: int = 16,
+                                   T: int = 0, interpret: bool = False):
+    """Differentiable fused block-choice MoSA attention.  Same contract as
+    ``mosa_block_attention_pallas``; additionally supports ``jax.grad``
+    w.r.t. q, k, v and the PER-BLOCK router scores ``rblk``."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if seg is None:
+        seg = jnp.zeros(q.shape[:3], jnp.int32)
+    return _build(block_q, block_k, float(scale), int(bs), int(T),
+                  bool(interpret))(q, k, v, bidx, seg,
+                                   rblk.astype(jnp.float32))

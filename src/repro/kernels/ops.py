@@ -75,6 +75,50 @@ def mosa_attention(q, k, v, idx, r, *, seg=None, block_q: int = 128,
     return out[:, :, :S, :d]
 
 
+def mosa_block_attention(q, k, v, bidx, rblk, *, sel_block_size: int,
+                         T: int, seg=None, block_q: int = 128,
+                         block_k: int = 128, interpret: bool | None = None):
+    """Block-choice MoSA inner attention (see kernels/mosa_block.py).
+
+    q,k,v: (B,H,S,d) block-major selected tokens, S = NB * sel_block_size;
+    bidx: (B,H,NB) selected block indices sorted ascending (-1 = empty);
+    rblk: (B,H,NB) fp32 per-block router scores; ``T`` the true sequence
+    length (ragged tail of the last block is masked in-kernel).  ``seg``:
+    optional per-token (B,H,S) segment ids.  Returns (B,H,S,d) in q.dtype.
+
+    Differentiable via the ``jax.custom_vjp`` in ``mosa_block.py`` — the
+    router cotangent comes back PER BLOCK.  At ``sel_block_size=1`` this
+    reproduces ``mosa_attention`` bit-for-bit (the maintained invariant:
+    identical tile sizes, identical mask truth table — token padding's
+    idx=+INT_MAX and block padding's bidx=-1 kill the same lanes).
+    """
+    from repro.kernels.mosa_block import mosa_block_attention_trainable
+
+    interpret = _interpret_default() if interpret is None else interpret
+    bs = sel_block_size
+    assert bs >= 1 and (bs & (bs - 1)) == 0 and bs <= LANE, (
+        f"sel_block_size must be a power of two <= {LANE}, got {bs}")
+    B, H, S, d = q.shape
+    assert S % bs == 0, (S, bs)
+    bq = min(block_q, max(8, 1 << (S - 1).bit_length()))
+    bk = min(block_k, bq)
+    # bs is a pow2 <= 128 and bq is a pow2 in [max(8, bs), 128]: bs | bq | bk
+    scale = d ** -0.5  # scale on the TRUE head dim, before padding
+
+    qp = _pad_to(_pad_to(q, 3, LANE), 2, bq)
+    kp = _pad_to(_pad_to(k, 3, LANE), 2, bk)
+    vp = _pad_to(_pad_to(v, 3, LANE), 2, bk)
+    # padded block slots: bidx = -1 (mask kills them), rblk = 0 (zero output)
+    bidxp = _pad_to(bidx, 2, bq // bs, value=-1)
+    rblkp = _pad_to(rblk, 2, bq // bs, value=0.0)
+    segp = None if seg is None else _pad_to(seg, 2, bq, value=-1)
+
+    out = mosa_block_attention_trainable(qp, kp, vp, bidxp, rblkp, seg=segp,
+                                         block_q=bq, block_k=bk, scale=scale,
+                                         bs=bs, T=T, interpret=interpret)
+    return out[:, :, :S, :d]
+
+
 def segments_from_cu_seqlens(cu_seqlens, total: int):
     """(seg, pos) per packed token from cumulative offsets.
 

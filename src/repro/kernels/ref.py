@@ -35,6 +35,44 @@ def mosa_attention_ref(q, k, v, idx, r, scale=None, seg=None):
     return (att * r[..., None]).astype(q.dtype)
 
 
+def mosa_block_attention_ref(q, k, v, bidx, rblk, bs: int, T: int,
+                             scale=None, seg=None):
+    """Block-choice MoSA inner attention oracle (DESIGN §10).
+
+    q, k, v: (B, H, S, d) — S = NB*bs block-major selected tokens
+    bidx:    (B, H, NB) int32 selected block indices (ascending); -1 = empty
+    rblk:    (B, H, NB) fp32 per-block router scores
+    T:       true sequence length (tail positions >= T are invalid)
+    seg:     optional (B, H, S) per-token segment ids
+
+    Expands block indices to per-token positions and applies the identical
+    mask family as the fused kernels: same-segment AND causal-by-position
+    AND valid-key; invalid query rows produce exact zeros.
+    """
+    B, H, NB = bidx.shape
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    off = jnp.arange(bs, dtype=jnp.int32)
+    pos = (bidx[..., None] * bs + off)
+    ok = ((bidx[..., None] >= 0) & (pos < T)).reshape(B, H, NB * bs)
+    pos = pos.reshape(B, H, NB * bs)
+    r_tok = jnp.broadcast_to(rblk[..., None].astype(jnp.float32),
+                             (B, H, NB, bs)).reshape(B, H, NB * bs)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = (pos[..., :, None] >= pos[..., None, :]) & ok[..., None, :]
+    if seg is not None:
+        mask &= seg[..., :, None] == seg[..., None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    att = jnp.einsum("bhqk,bhkd->bhqd", p / denom, v.astype(jnp.float32))
+    att = att * r_tok[..., None] * ok[..., None]
+    return att.astype(q.dtype)
+
+
 def flash_attention_ref(q, k, v, scale=None, window: int = 0, k_len=None):
     """Causal (optionally sliding-window) GQA attention.
 

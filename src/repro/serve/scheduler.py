@@ -37,11 +37,15 @@ dense block chain one block at a time as decode proceeds:
     selection of ``MoSAAttention.prefill_past``).  On a miss the prefill is
     split at the shareable boundary so the inserted snapshot is a function
     of the prefix tokens alone — the causality prefix reuse requires.
-    Chunk-causal note: for models with MoSA layers this split is the same
+    Chunk-causal note: for TOKEN-choice MoSA layers this split is the same
     approximation family as streaming decode (training-style expert choice
     is non-causal and therefore CANNOT be prefix-cached); for dense/window
-    models the split is exact.  ``prefix_cache=False`` restores one-shot
-    training-style prefill.
+    models the split is exact.  BLOCK-choice MoSA (DESIGN §10) closes the
+    gap: snapshots land on ``sel_block_size`` boundaries, where the
+    ``MoSABlockKVCache`` holds only completed-block means — a pure function
+    of the prefix tokens — so a prefix hit reproduces the cold path
+    exactly.  ``prefix_cache=False`` restores one-shot training-style
+    prefill.
 
   * **Chunked packed prefill** (DESIGN §9) — prompts are streamed through
     ``Server.prefill_packed`` in fixed ``chunk_tokens``-sized packed
@@ -74,7 +78,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kv_cache import MoSAKVCache
+from repro.core.kv_cache import MoSABlockKVCache, MoSAKVCache
 from repro.dist import hints
 from repro.serve.paged_kv import (BlockPool, PagedDenseKVCache,
                                   PagedWindowKVCache)
@@ -91,7 +95,8 @@ class _Request:
 
 def _cache_leaves(caches):
     is_leaf = (lambda x: isinstance(x, (PagedDenseKVCache,
-                                        PagedWindowKVCache, MoSAKVCache)))
+                                        PagedWindowKVCache, MoSAKVCache,
+                                        MoSABlockKVCache)))
     return jax.tree_util.tree_leaves(caches, is_leaf=is_leaf)
 
 

@@ -1,0 +1,628 @@
+"""Block-choice MoSA (DESIGN §10), locked down.
+
+Two contracts, two standards of proof:
+
+* ``sel_block_size=1`` ≡ token-choice is maintained BITWISE on same-shaped
+  graphs — kernel, layer ``__call__``, LM loss, fwd AND bwd, fp32 and bf16,
+  einsum and pallas.  ``==``, not allclose.
+* Serving paths (different graph shapes, where XLA's shape-dependent GEMM
+  codegen makes float bit-equality the wrong contract) use the repo's
+  established standard: integer selection state ``assert_array_equal``,
+  floats to tight tolerances, scheduler-emitted token ids
+  ``assert_array_equal``.
+
+Plus the property layer (random k-schedules, random pool op sequences) via
+``_property_harness`` — real hypothesis when installed, vendored fallback
+otherwise; these never skip.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _property_harness import given, settings, st  # noqa: E402
+
+from repro.configs.base import BlockSpec, MoSAConfig, get_config
+from repro.core.kv_cache import MoSABlockKVCache, MoSAKVCache
+from repro.core.mosa import MoSAAttention
+from repro.core.router import (block_pool_scores, expand_block_index,
+                               select_topk, streaming_topk_update)
+from repro.kernels import ops, ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def tok_blk_pair(impl="einsum", dtype=jnp.float32, bs=1, d_model=32,
+                 n_heads=2, d_head=8, sparsity=4, window=0, dense=0):
+    """A token-choice / block-choice MoSAAttention pair sharing params
+    (the param tree is granularity-independent)."""
+    base = dict(n_mosa_heads=n_heads, n_dense_heads=dense, d_head=d_head,
+                sparsity=sparsity, local_window=window, impl=impl)
+    ct = MoSAConfig(selection_granularity="token", **base)
+    cb = MoSAConfig(selection_granularity="block", sel_block_size=bs, **base)
+    mt = MoSAAttention(d_model, ct, compute_dtype=dtype, impl=impl)
+    mb = MoSAAttention(d_model, cb, compute_dtype=dtype, impl=impl)
+    p = mt.init(jax.random.PRNGKey(0))
+    return mt, mb, p
+
+
+def assert_trees_bitwise(a, b, msg=""):
+    for pa, pb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        assert (np.asarray(pa) == np.asarray(pb)).all(), msg
+
+
+# ---------------------------------------------------- bs=1 bitwise invariant
+@pytest.mark.parametrize("impl", ["einsum", "pallas"])
+def test_bs1_kernel_bitwise_equals_token_kernel(impl):
+    """ops.mosa_block_attention at sel_block_size=1 IS ops.mosa_attention,
+    bit for bit — identical block index/score inputs, identical output."""
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 5)
+    B, H, S, d, T = 2, 3, 8, 16, 32
+    q = jax.random.normal(ks[0], (B, H, S, d))
+    k = jax.random.normal(ks[1], (B, H, S, d))
+    v = jax.random.normal(ks[2], (B, H, S, d))
+    idx = jnp.sort(jnp.stack([
+        jnp.stack([jax.random.permutation(
+            jax.random.fold_in(ks[3], b * H + h), T)[:S]
+            for h in range(H)]) for b in range(B)]), -1).astype(jnp.int32)
+    r = jax.nn.sigmoid(jax.random.normal(ks[4], (B, H, S)))
+    if impl == "pallas":
+        tok = ops.mosa_attention(q, k, v, idx, r)
+        blk = ops.mosa_block_attention(q, k, v, idx, r,
+                                       sel_block_size=1, T=T)
+    else:
+        tok = ref.mosa_attention_ref(q, k, v, idx, r)
+        blk = ref.mosa_block_attention_ref(q, k, v, idx, r, 1, T)
+    assert (np.asarray(tok) == np.asarray(blk)).all()
+
+
+@pytest.mark.parametrize("impl,dtype", [
+    ("einsum", jnp.float32), ("einsum", jnp.bfloat16),
+    ("pallas", jnp.float32), ("pallas", jnp.bfloat16)])
+def test_bs1_layer_bitwise_fwd_bwd(impl, dtype):
+    """The maintained invariant at the layer level: block-choice with
+    one-token blocks reproduces token-choice __call__ bit-for-bit — output
+    AND every parameter gradient — plain, right-padded, and packed rows."""
+    mt, mb, p = tok_blk_pair(impl=impl, dtype=dtype)
+    B, T = 2, 16
+    x = (jax.random.normal(jax.random.PRNGKey(2), (B, T, 32)) * 0.5
+         ).astype(dtype)
+
+    def loss(m):
+        return lambda p_, **kw: jnp.sum(m(p_, x, **kw).astype(jnp.float32)
+                                        ** 2)
+
+    # plain
+    assert (np.asarray(mt(p, x)) == np.asarray(mb(p, x))).all()
+    gt = jax.grad(loss(mt))(p)
+    gb = jax.grad(loss(mb))(p)
+    assert_trees_bitwise(gt, gb, f"plain grad {impl}/{dtype}")
+
+    # right-padded (bucketed serving prefill)
+    valid = jnp.broadcast_to(jnp.arange(T)[None] < 11, (B, T))
+    assert (np.asarray(mt(p, x, valid=valid))
+            == np.asarray(mb(p, x, valid=valid))).all()
+
+    # packed rows: two documents back to back, per-doc positions
+    segs = jnp.broadcast_to((jnp.arange(T) >= 10).astype(jnp.int32), (B, T))
+    pos = jnp.broadcast_to(jnp.where(jnp.arange(T) < 10, jnp.arange(T),
+                                     jnp.arange(T) - 10), (B, T))
+    yt = mt(p, x, positions=pos, segments=segs)
+    yb = mb(p, x, positions=pos, segments=segs)
+    assert (np.asarray(yt) == np.asarray(yb)).all()
+    gt = jax.grad(lambda p_: jnp.sum(
+        mt(p_, x, positions=pos, segments=segs).astype(jnp.float32) ** 2))(p)
+    gb = jax.grad(lambda p_: jnp.sum(
+        mb(p_, x, positions=pos, segments=segs).astype(jnp.float32) ** 2))(p)
+    assert_trees_bitwise(gt, gb, f"packed grad {impl}/{dtype}")
+
+
+def test_bs1_lm_loss_bitwise():
+    """End to end: the LM loss and its full gradient tree are bitwise
+    identical between token-choice and block-choice(bs=1) configs."""
+    from repro.nn.transformer import TransformerLM
+    cfgs = {}
+    for gran in ("token", "block"):
+        cfg = get_config("mosa-paper", preset="smoke", variant="mosa",
+                         sparsity=4, selection_granularity=gran,
+                         sel_block_size=1)
+        cfgs[gran] = dataclasses.replace(cfg, n_layers=2)
+    mt, mb = TransformerLM(cfgs["token"]), TransformerLM(cfgs["block"])
+    params = mt.init(jax.random.PRNGKey(3))
+    B, T = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, T + 1), 2,
+                              cfgs["token"].vocab)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    lt = mt.loss(params, batch)[0]
+    gt = jax.grad(lambda p: mt.loss(p, batch)[0])(params)
+    lb = mb.loss(params, batch)[0]
+    gb = jax.grad(lambda p: mb.loss(p, batch)[0])(params)
+    assert float(lt) == float(lb)
+    assert_trees_bitwise(gt, gb, "LM grads")
+
+
+def test_block_gated_hybrid_form():
+    """Block-choice + sliding-window dense side blends the branches with
+    learned sigmoid gates (zero-init -> exactly the halved sum); token
+    configs keep the plain head-sum with no gate parameter, and windowless
+    block configs stay ungated (bitwise invariant preserved)."""
+    from repro.core.hybrid import HybridAttention
+    D = 32
+    base = dict(n_mosa_heads=2, n_dense_heads=2, d_head=8, sparsity=4,
+                min_k=4)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 12, D)) * 0.3
+
+    cb = MoSAConfig(selection_granularity="block", sel_block_size=4,
+                    local_window=8, **base)
+    hb = HybridAttention(D, cb)
+    p = hb.init(jax.random.PRNGKey(0))
+    assert "gate" in p and p["gate"].shape == (D, 2)
+    y = hb(p, x)
+    ys = hb._sparse()(p["sparse"], x, None)
+    yd = hb._dense()(p["dense"], x, None)
+    np.testing.assert_allclose(np.asarray(y),
+                               0.5 * (np.asarray(ys) + np.asarray(yd)),
+                               atol=1e-6)
+
+    ct = MoSAConfig(selection_granularity="token", local_window=8, **base)
+    assert "gate" not in HybridAttention(D, ct).init(jax.random.PRNGKey(0))
+
+    # windowless block config: ungated, bitwise == token at bs=1
+    cb1 = MoSAConfig(selection_granularity="block", sel_block_size=1, **base)
+    ct1 = MoSAConfig(selection_granularity="token", **base)
+    hb1, ht1 = HybridAttention(D, cb1), HybridAttention(D, ct1)
+    pb1 = hb1.init(jax.random.PRNGKey(0))
+    assert "gate" not in pb1
+    assert (np.asarray(hb1(pb1, x))
+            == np.asarray(ht1(ht1.init(jax.random.PRNGKey(0)), x))).all()
+
+
+# ------------------------------------------------- block kernels vs oracle
+def _block_inputs(key, B, H, kb, bs, T, two_docs=False):
+    ks = jax.random.split(key, 5)
+    S = kb * bs
+    NB = T // bs
+    q = jax.random.normal(ks[0], (B, H, S, 16))
+    k = jax.random.normal(ks[1], (B, H, S, 16))
+    v = jax.random.normal(ks[2], (B, H, S, 16))
+    bidx = jnp.sort(jnp.stack([
+        jnp.stack([jax.random.permutation(
+            jax.random.fold_in(ks[3], b * H + h), NB)[:kb]
+            for h in range(H)]) for b in range(B)]), -1).astype(jnp.int32)
+    rblk = jax.nn.sigmoid(jax.random.normal(ks[4], (B, H, kb)))
+    seg = None
+    if two_docs:
+        pos = expand_block_index(bidx, bs, T)
+        seg = jnp.where(jnp.clip(pos, 0) < T // 2, 0, 1).astype(jnp.int32)
+    return q, k, v, bidx, rblk, seg
+
+
+@pytest.mark.parametrize("bs,kb", [(4, 5), (16, 2)])
+def test_block_kernel_matches_oracle(bs, kb):
+    B, H, T = 2, 2, 16 * max(bs // 4, 1) * 4
+    for two_docs in (False, True):
+        q, k, v, bidx, rblk, seg = _block_inputs(
+            jax.random.PRNGKey(6 + bs), B, H, kb, bs, T, two_docs)
+        got = ops.mosa_block_attention(q, k, v, bidx, rblk,
+                                       sel_block_size=bs, T=T, seg=seg)
+        want = ref.mosa_block_attention_ref(q, k, v, bidx, rblk, bs, T,
+                                            seg=seg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5,
+                                   err_msg=f"bs={bs} two_docs={two_docs}")
+
+
+@pytest.mark.parametrize("bs", [4, 16])
+def test_block_layer_pallas_matches_einsum(bs):
+    """Layer-level fwd + full-grad agreement between the fused Pallas path
+    and the einsum reference at real block sizes, incl. packed segments."""
+    cfg = MoSAConfig(n_mosa_heads=2, n_dense_heads=0, d_head=8, sparsity=2,
+                     selection_granularity="block", sel_block_size=bs)
+    me = MoSAAttention(32, cfg, impl="einsum")
+    mp = MoSAAttention(32, cfg, impl="pallas")
+    p = me.init(jax.random.PRNGKey(7))
+    B, T = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(8), (B, T, 32)) * 0.5
+    segs = jnp.broadcast_to((jnp.arange(T) >= 20).astype(jnp.int32), (B, T))
+    pos = jnp.broadcast_to(jnp.where(jnp.arange(T) < 20, jnp.arange(T),
+                                     jnp.arange(T) - 20), (B, T))
+    for kw in ({}, {"positions": pos, "segments": segs}):
+        np.testing.assert_allclose(
+            np.asarray(me(p, x, **kw)), np.asarray(mp(p, x, **kw)),
+            atol=3e-5, rtol=3e-5)
+        ge = jax.grad(lambda p_: jnp.sum(me(p_, x, **kw) ** 2))(p)
+        gp = jax.grad(lambda p_: jnp.sum(mp(p_, x, **kw) ** 2))(p)
+        for a, b in zip(jax.tree_util.tree_leaves(ge),
+                        jax.tree_util.tree_leaves(gp)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=3e-4, rtol=3e-4)
+
+
+# ---------------------------------------------------- serving consistency
+def test_bs1_decode_matches_token_decode():
+    """Streaming block decode with one-token blocks follows token-choice
+    decode: identical selection state (integer), tight-allclose outputs
+    (the candidate layouts differ in shape — see the module docstring)."""
+    key = jax.random.PRNGKey(9)
+    B, T, D, H, kcap = 1, 12, 32, 2, 6
+    mt, mb, p = tok_blk_pair()
+    x = jax.random.normal(key, (B, T + 6, D)) * 0.5
+    ct = MoSAKVCache.create(B, H, kcap, 8, jnp.float32)
+    cb = MoSABlockKVCache.create(B, H, kcap, 1, 8, jnp.float32)
+    yt, ct = mt.prefill(p, x[:, :T], ct)
+    yb, cb = mb.prefill(p, x[:, :T], cb)
+    assert (np.asarray(yt) == np.asarray(yb)).all()   # same-shape graph
+    for t in range(6):
+        xt = x[:, T + t:T + t + 1]
+        ot, ct = mt.decode_step(p, xt, ct)
+        ob, cb = mb.decode_step(p, xt, cb)
+        np.testing.assert_allclose(np.asarray(ot), np.asarray(ob),
+                                   atol=2e-5, rtol=2e-5, err_msg=f"t={t}")
+        got = np.sort(np.asarray(cb.bidx)[..., :kcap], -1)
+        want = np.sort(np.asarray(ct.idx), -1)
+        np.testing.assert_array_equal(got, want, err_msg=f"t={t}")
+    np.testing.assert_allclose(
+        np.sort(np.asarray(cb.bscore)[..., :kcap], -1),
+        np.sort(np.asarray(ct.scores), -1), atol=1e-6)
+
+
+@pytest.mark.parametrize("bs", [2, 4])
+def test_block_decode_candidates_match_exact_topk(bs):
+    """After streaming a whole sequence through decode, the candidate set
+    equals the EXACT top-CB over completed-block mean scores — the
+    streaming policy loses nothing.  (force_first_token off: streaming
+    forcing is insertion-only — block 0 enters when it completes but can
+    be evicted later, exactly like token-choice streaming.)"""
+    key = jax.random.PRNGKey(10)
+    B, T, D, H, CB = 1, 22, 32, 2, 3
+    cfg = MoSAConfig(n_mosa_heads=H, n_dense_heads=0, d_head=8, sparsity=4,
+                     force_first_token=False,
+                     selection_granularity="block", sel_block_size=bs)
+    m = MoSAAttention(D, cfg)
+    p = m.init(key)
+    x = jax.random.normal(key, (B, T, D)) * 0.5
+    cache = MoSABlockKVCache.create(B, H, CB, bs, 8, jnp.float32)
+    for t in range(T):
+        _, cache = m.decode_step(p, x[:, t:t + 1], cache)
+    assert int(cache.length[0]) == T
+
+    scores = np.asarray(m.router.scores(p["router"], x))      # (B,H,T)
+    ncb = T // bs
+    means = scores[..., :ncb * bs].reshape(B, H, ncb, bs).mean(-1)
+    for b in range(B):
+        for h in range(H):
+            want = set(np.argsort(means[b, h])[::-1][:CB].tolist())
+            got = set(int(i) for i in np.asarray(cache.bidx)[b, h, :CB]
+                      if i >= 0)
+            assert got == want, (b, h, got, want)
+    # partial current block: T % bs tokens, running score sum
+    rem = T % bs
+    cur = np.asarray(cache.pos)[..., CB * bs:]
+    assert ((cur >= 0).sum(-1) == rem).all()
+    if rem:
+        np.testing.assert_allclose(
+            np.asarray(cache.bsum), scores[..., ncb * bs:].sum(-1),
+            atol=1e-6)
+
+
+def test_block_prefill_then_decode_matches_one_shot_prefill():
+    """Decode-vs-prefill cache parity: prefill(T1) + n decode steps lands on
+    the SAME cache as one-shot prefill(T1+n) — integer selection state
+    bit-equal, scores/rows tight-allclose.  This is the state a preempted
+    block-choice row recomputes into.  (force off: streaming forcing is
+    insertion-only, training-style forcing is permanent — only the
+    unforced policies coincide, as in token-choice.)"""
+    key = jax.random.PRNGKey(11)
+    B, D, H, CB, bs = 2, 32, 2, 3, 4
+    T1, n = 12, 8                                   # T1+n = 20, block-aligned
+    cfg = MoSAConfig(n_mosa_heads=H, n_dense_heads=0, d_head=8, sparsity=4,
+                     force_first_token=False,
+                     selection_granularity="block", sel_block_size=bs)
+    m = MoSAAttention(D, cfg)
+    p = m.init(key)
+    x = jax.random.normal(key, (B, T1 + n, D)) * 0.5
+
+    c1 = MoSABlockKVCache.create(B, H, CB, bs, 8, jnp.float32)
+    _, c1 = m.prefill(p, x, c1)
+
+    c2 = MoSABlockKVCache.create(B, H, CB, bs, 8, jnp.float32)
+    _, c2 = m.prefill(p, x[:, :T1], c2)
+    for t in range(n):
+        _, c2 = m.decode_step(p, x[:, T1 + t:T1 + t + 1], c2)
+
+    np.testing.assert_array_equal(np.asarray(c1.bidx), np.asarray(c2.bidx))
+    np.testing.assert_array_equal(np.asarray(c1.length),
+                                  np.asarray(c2.length))
+    np.testing.assert_allclose(np.asarray(c1.bscore), np.asarray(c2.bscore),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c1.bsum), np.asarray(c2.bsum),
+                               atol=1e-6)
+    ok = (np.asarray(c1.pos) >= 0)
+    np.testing.assert_array_equal(np.asarray(c1.pos) * ok,
+                                  np.asarray(c2.pos) * ok)
+    np.testing.assert_allclose(np.asarray(c1.k) * ok[..., None],
+                               np.asarray(c2.k) * ok[..., None],
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("splits", [(8, 13), (12, 9), (10, 5, 6)])
+def test_block_prefill_past_chunked_matches_one_shot(splits):
+    """Chunked prefill (incl. block-UNALIGNED and three-way splits) lands on
+    the one-shot prefill's exact cache — the property the scheduler's
+    chunked packed prefill and exact prefix hits stand on."""
+    key = jax.random.PRNGKey(12)
+    B, D, H, CB, bs = 2, 32, 2, 4, 4
+    T = sum(splits)
+    cfg = MoSAConfig(n_mosa_heads=H, n_dense_heads=0, d_head=8, sparsity=4,
+                     selection_granularity="block", sel_block_size=bs)
+    m = MoSAAttention(D, cfg)
+    p = m.init(key)
+    x = jax.random.normal(key, (B, T, D)) * 0.5
+
+    c1 = MoSABlockKVCache.create(B, H, CB, bs, 8, jnp.float32)
+    y1, c1 = m.prefill(p, x, c1)
+
+    c2 = MoSABlockKVCache.create(B, H, CB, bs, 8, jnp.float32)
+    off = splits[0]
+    _, c2 = m.prefill(p, x[:, :off], c2)
+    ylast = None
+    for w in splits[1:]:
+        ylast, c2 = m.prefill_past(p, x[:, off:off + w], c2)
+        off += w
+
+    np.testing.assert_array_equal(np.asarray(c1.bidx), np.asarray(c2.bidx))
+    np.testing.assert_allclose(np.asarray(c1.bscore), np.asarray(c2.bscore),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c1.bsum), np.asarray(c2.bsum),
+                               atol=1e-6)
+    ok = (np.asarray(c1.pos) >= 0)
+    np.testing.assert_array_equal(np.asarray(c1.pos) * ok,
+                                  np.asarray(c2.pos) * ok)
+    np.testing.assert_allclose(np.asarray(c1.k) * ok[..., None],
+                               np.asarray(c2.k) * ok[..., None],
+                               atol=1e-5, rtol=1e-5)
+    w = splits[-1]
+    np.testing.assert_allclose(np.asarray(y1[:, T - w:]), np.asarray(ylast),
+                               atol=1e-4, rtol=1e-4)
+
+
+# --------------------------------------------------------- property layer
+@given(T=st.integers(2, 48), bs=st.sampled_from([1, 2, 4, 8]),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_block_pool_scores_is_masked_mean(T, bs, seed):
+    scores = jax.random.uniform(jax.random.PRNGKey(seed), (2, 3, T))
+    pooled = np.asarray(block_pool_scores(scores, bs))
+    nb = -(-T // bs)
+    s = np.asarray(scores)
+    for j in range(nb):
+        lo, hi = j * bs, min((j + 1) * bs, T)
+        np.testing.assert_allclose(pooled[..., j],
+                                   s[..., lo:hi].mean(-1), atol=1e-6)
+    if bs == 1:                                   # bitwise identity
+        assert (pooled == s).all()
+
+
+@given(T=st.integers(4, 64), bs=st.sampled_from([1, 2, 4, 8]),
+       k_frac=st.floats(0.1, 1.0), seed=st.integers(0, 2**16),
+       force=st.booleans())
+@settings(**SETTINGS)
+def test_block_router_selection_invariants(T, bs, k_frac, seed, force):
+    """Random k-schedules: selected block sets are sorted/unique/in-range,
+    never exceed capacity, expand to in-block token positions only, and
+    honor the forced first block."""
+    k = max(1, int(T * k_frac))
+    nb = -(-T // bs)
+    kb = min(-(-k // bs), nb)
+    scores = jax.random.uniform(jax.random.PRNGKey(seed), (2, 3, T))
+    bsc = block_pool_scores(scores, bs)
+    if kb < 2 and force:
+        force = False                     # select_topk force needs k >= 2
+    rblk, bidx = select_topk(bsc, kb, force_first=force)
+    bi = np.asarray(bidx)
+    assert bi.shape[-1] == kb and kb * bs <= (-(-T // bs)) * bs
+    assert (np.diff(bi, axis=-1) > 0).all()       # sorted unique
+    assert bi.min() >= 0 and bi.max() < nb
+    if force:
+        assert (bi[..., 0] == 0).all()
+    pos = np.asarray(expand_block_index(bidx, bs, T))
+    ok = pos >= 0
+    assert pos[ok].max() < T
+    # every valid expanded position sits inside its selected block
+    rep = np.repeat(bi, bs, axis=-1)
+    assert (pos[ok] // bs == rep[ok]).all()
+    # -1 only for the ragged tail of the LAST block
+    assert (rep[~ok] == nb - 1).all() if (~ok).any() else True
+    # per-segment: pooling two concatenated docs == pooling each alone
+    if T % (2 * bs) == 0:
+        half = T // 2
+        a = block_pool_scores(scores[..., :half], bs)
+        b = block_pool_scores(scores[..., half:], bs)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate([a, b], -1)), np.asarray(bsc),
+            atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**16), CB=st.integers(2, 5),
+       bs=st.sampled_from([1, 2, 4]))
+@settings(**SETTINGS)
+def test_streaming_block_topk_matches_exact(seed, CB, bs):
+    """Blockwise streaming evict-min == exact top-CB over completed-block
+    means — candidates only ever hold COMPLETED blocks (the causality the
+    exact prefix cache stands on)."""
+    rng = np.random.default_rng(seed)
+    T = 8 * bs + rng.integers(0, bs)              # 8 completed + partial
+    scores = rng.random(T).astype(np.float32)
+    nbc = T // bs
+    cs = jnp.full((1, CB), -jnp.inf)
+    ci = jnp.full((1, CB), -1, jnp.int32)
+    for j in range(nbc):                          # stream completed blocks
+        mean = scores[j * bs:(j + 1) * bs].mean()
+        _, _, cs, ci = streaming_topk_update(
+            cs, ci, jnp.asarray([mean]), j, jnp.asarray(False))
+    got = set(i for i in np.asarray(ci[0]).tolist() if i >= 0)
+    means = scores[:nbc * bs].reshape(nbc, bs).mean(-1)
+    want = set(np.argsort(means)[-min(CB, nbc):].tolist())
+    assert got == want
+    assert all(i < nbc for i in got)              # completed blocks only
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=15, deadline=None)
+def test_blockpool_random_ops_refcount_invariants(seed):
+    """Random alloc/incref/decref/CoW sequences against a pure-python
+    mirror: free+live partition holds, refcounts match, a freed block never
+    reappears while live, and ensure_owned returns a private copy exactly
+    when shared."""
+    from repro.serve.paged_kv import BlockPool
+    rng = np.random.default_rng(seed)
+    N = int(rng.integers(4, 12))
+    pool = BlockPool(N, 8)
+    ref_cnt = {}                                   # live id -> refcount
+    for _ in range(60):
+        op = rng.choice(["alloc", "incref", "decref", "cow"])
+        if op == "alloc":
+            n = int(rng.integers(0, 4))
+            free_before = pool.free_blocks
+            ids = pool.alloc(n)
+            if ids is None:
+                assert n > free_before             # all-or-nothing
+            else:
+                assert len(ids) == n
+                for b in ids:
+                    assert b not in ref_cnt        # was genuinely free
+                    ref_cnt[b] = 1
+        elif op == "incref" and ref_cnt:
+            b = int(rng.choice(list(ref_cnt)))
+            pool.incref([b])
+            ref_cnt[b] += 1
+        elif op == "decref" and ref_cnt:
+            b = int(rng.choice(list(ref_cnt)))
+            pool.decref([b])
+            ref_cnt[b] -= 1
+            if ref_cnt[b] == 0:
+                del ref_cnt[b]
+        elif op == "cow" and ref_cnt:
+            b = int(rng.choice(list(ref_cnt)))
+            shared = ref_cnt[b] > 1
+            got = pool.ensure_owned(b)
+            if got is None:
+                assert shared and pool.free_blocks == 0
+            else:
+                nb_, copied = got
+                assert copied == shared
+                if shared:
+                    assert nb_ != b and nb_ not in ref_cnt
+                    ref_cnt[b] -= 1
+                    ref_cnt[nb_] = 1
+                else:
+                    assert nb_ == b
+        # invariants after every op
+        assert pool.free_blocks + pool.live_blocks == N
+        assert pool.live_blocks == len(ref_cnt)
+        for b, c in ref_cnt.items():
+            assert pool.refcount(b) == c
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_block_selection_state_snapshot_restore_roundtrip(seed):
+    """launch.serve.row_snapshot / row_restore carry the FULL block-choice
+    selection state (candidate ids, scores, partial-block sum) bitwise —
+    the preempt/pause-resume primitive."""
+    from repro.launch.serve import row_restore, row_snapshot
+    key = jax.random.PRNGKey(seed)
+    B, H, CB, bs, d = 3, 2, 3, 4, 8
+    ks = jax.random.split(key, 4)
+    cache = MoSABlockKVCache(
+        jax.random.normal(ks[0], (B, H, (CB + 1) * bs, d)),
+        jax.random.normal(ks[1], (B, H, (CB + 1) * bs, d)),
+        jax.random.randint(ks[2], (B, H, (CB + 1) * bs), -1, 64),
+        jax.random.normal(ks[3], (B, H, CB + 1)),
+        jax.random.randint(ks[2], (B, H, CB + 1), -1, 16),
+        jax.random.normal(ks[0], (B, H)),
+        jnp.arange(B, dtype=jnp.int32) + 5)
+    b = int(jax.random.randint(ks[1], (), 0, B))
+    snap = jax.device_get(row_snapshot({"sparse": cache}, b))
+    # clobber the row, then restore
+    zeros = jax.tree.map(jnp.zeros_like, cache)
+    restored = row_restore({"sparse": zeros}, snap, b)["sparse"]
+    for name in cache._fields:
+        a = np.asarray(getattr(cache, name))[b]
+        g = np.asarray(getattr(restored, name))[b]
+        assert (a == g).all(), name
+
+
+# --------------------------------------------- paged scheduler exactness
+def block_hybrid_cfg(bs=8, window=16):
+    cfg = get_config("mosa-paper", preset="smoke", variant="mosa",
+                     sparsity=4, selection_granularity="block",
+                     sel_block_size=bs)
+    return dataclasses.replace(
+        cfg, n_layers=3,
+        attention=dataclasses.replace(cfg.attention, window=window),
+        pattern=(BlockSpec("attn", "dense"), BlockSpec("attn_local", "dense"),
+                 BlockSpec("mosa", "dense")))
+
+
+def test_scheduler_block_choice_prefix_hit_exact():
+    """THE paged-exactness acceptance: with block-choice MoSA in the stack,
+    a prefix-cache hit emits exactly the no-prefix-cache tokens — the
+    snapshot at a block boundary holds only completed-block state, a pure
+    function of the prefix (token-choice MoSA can only ever be
+    chunk-causal here; cf. test_scheduler_prefix_hit_exact_and_no_recompute
+    which must use a dense+window model for exact parity)."""
+    from repro.launch.serve import Scheduler, Server
+    from repro.serve.paged_kv import PagedConfig
+    cfg = block_hybrid_cfg()
+    B = 2
+    paged = PagedConfig(block_size=8, num_blocks=32, num_window_blocks=2 * B)
+    server = Server(cfg, batch=B, max_len=64, paged=paged)
+    shared = jax.random.randint(jax.random.PRNGKey(13), (17,), 2, cfg.vocab)
+    sufs = [jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(14), i),
+                               (3,), 2, cfg.vocab) for i in range(3)]
+
+    on = Scheduler(server, chunk=4, prefix_cache=True)
+    assert on.need_snapshot                   # block caches ride snapshots
+    for s in sufs:
+        on.submit(jnp.concatenate([shared, s]), max_new=5)
+    got = on.run()
+    assert on.stats["prefix_hits"] >= 2
+    assert on.stats["prefix_hit_tokens"] >= 2 * 16
+
+    server2 = Server(cfg, batch=B, max_len=64, paged=paged,
+                     params=server.params)
+    off = Scheduler(server2, chunk=4, prefix_cache=False)
+    for s in sufs:
+        off.submit(jnp.concatenate([shared, s]), max_new=5)
+    want = off.run()
+    for rid in want:
+        np.testing.assert_array_equal(np.asarray(got[rid]),
+                                      np.asarray(want[rid]),
+                                      err_msg=f"request {rid}")
+
+
+def test_scheduler_block_choice_preempt_restore_completes():
+    """Preempt-to-recompute round-trips the block-selection state: a run
+    forced through preemption still completes every request at full
+    max_new and returns every block to the pools."""
+    from repro.launch.serve import Scheduler, Server
+    from repro.serve.paged_kv import PagedConfig
+    cfg = block_hybrid_cfg()
+    B = 2
+    server = Server(cfg, batch=B, max_len=64,
+                    paged=PagedConfig(block_size=8, num_blocks=5,
+                                      num_window_blocks=2 * B))
+    sched = Scheduler(server, chunk=4, prefix_cache=False)
+    for i in range(2):
+        sched.submit(jax.random.randint(jax.random.fold_in(
+            jax.random.PRNGKey(15), i), (10,), 2, cfg.vocab), max_new=12)
+    out = sched.run()
+    assert {k: len(v) for k, v in out.items()} == {0: 12, 1: 12}
+    assert sched.stats["preemptions"] >= 1
+    assert sched.dense_pool.free_blocks == sched.dense_pool.num_blocks
