@@ -5,7 +5,7 @@ PY ?= python
 export PYTHONPATH := src
 
 .PHONY: test collect lint smoke test-paged test-train test-property \
-    test-blockchoice bench-smoke bench-train bench-check ci
+    test-blockchoice test-obs bench-smoke bench-train bench-check ci
 
 # Tier-1 command from ROADMAP.md
 test:
@@ -73,6 +73,24 @@ test-blockchoice:
 	fi
 	@rm -f .blk_report.txt
 
+# Observability suite (DESIGN §11): registry/histogram quantile units,
+# tracer + Chrome-trace validity, the scheduler counter-consistency drain
+# property, device-metrics parity under jit + donated buffers, the
+# obs-off zero-write guarantee, and the Scheduler/Trainer artifact dump
+# paths.  0-skip gated like test-property.  CPU-pinned (libtpu probe
+# hangs).
+test-obs:
+	JAX_PLATFORMS=cpu $(PY) -m pytest -q -rs tests/test_obs.py \
+	    > .obs_report.txt 2>&1 \
+	    || { cat .obs_report.txt; rm -f .obs_report.txt; exit 1; }
+	@cat .obs_report.txt
+	@if grep -qE "[0-9]+ skipped" .obs_report.txt; then \
+	    rm -f .obs_report.txt; \
+	    echo "FAIL: observability tests were SKIPPED"; \
+	    exit 1; \
+	fi
+	@rm -f .obs_report.txt
+
 # Decode-path perf trajectory: refreshes the TRACKED BENCH_serve.json
 # (fused vs per-token decode tok/s, MoSA vs dense KV bytes, and the paged
 # family: paged vs contiguous tok/s + capacity at fixed budget; CPU, tiny
@@ -88,7 +106,9 @@ bench-train:
 
 # Fails if the newest trajectory entry regresses throughput by >10%
 # against the previous entry (serve: fused decode variants; train: the
-# compiled dense / mosa_ref step paths).
+# compiled dense / mosa_ref step paths), if packed prefill efficiency
+# drops under its floor, or if obs_overhead exceeds the 2% ceiling
+# (DESIGN §11).
 bench-check:
 	$(PY) -m benchmarks.serve_bench --check --out BENCH_serve.json
 	$(PY) -m benchmarks.train_bench --check --out BENCH_train.json
@@ -97,4 +117,4 @@ bench-check:
 # regenerated artifacts, so what this ci run leaves behind is what passed;
 # bench-check then gates the refreshed trajectories.
 ci: lint collect test-paged test-train test-property test-blockchoice \
-    bench-smoke bench-train bench-check test
+    test-obs bench-smoke bench-train bench-check test

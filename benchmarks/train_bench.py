@@ -23,7 +23,9 @@ host the same script lowers the kernels natively and the ratio becomes the
 paper-relevant number (the "no optimized kernel" caveat, closed).
 
 Writes ``BENCH_train.json`` (tracked; ``make bench-train`` refreshes it,
-``trajectory`` grows one entry per refresh, ``make bench-check`` gates).
+``trajectory`` grows one entry per refresh, ``make bench-check`` gates)
+plus an untracked ``BENCH_train.trace.json`` Chrome trace — one span per
+timed step on the "bench" track, labeled by variant (DESIGN §11).
 
     PYTHONPATH=src python -m benchmarks.train_bench --steps 3
 """
@@ -39,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.calib import CALIB_VERSION, calibrate_ms, check_gate
+from repro import obs
 from repro.configs.base import get_config
 from repro.nn.transformer import TransformerLM
 from repro.optim import schedules
@@ -81,11 +84,14 @@ def _build_cfg(variant: str, seq: int, d_model: int, impl: str = "einsum",
 
 
 def time_step(cfg, batch: int, seq: int, steps: int = 5,
-              microbatches: int = 1, calib0: float = 0.0) -> dict:
+              microbatches: int = 1, calib0: float = 0.0,
+              label: str = "step") -> dict:
     """Best-of-``steps`` full-train-step time (jit-warmed) and tokens/s.
     Min-time (transient box load only adds time) and, when ``calib0`` is
     given, rescaled by a calibration sampled at this timed region — both
-    noise defenses documented in ``serve_bench.time_decode``."""
+    noise defenses documented in ``serve_bench.time_decode``.  Every timed
+    step is recorded as a tracer span (track "bench") so a refresh leaves
+    a Chrome-trace artifact of the whole variant sweep (DESIGN §11)."""
     model = TransformerLM(cfg)
     optimizer = adamw(schedules.linear_warmup(1e-3, 10), clip_norm=1.0)
     params = model.init(jax.random.PRNGKey(0))
@@ -101,9 +107,11 @@ def time_step(cfg, batch: int, seq: int, steps: int = 5,
     local = 0.0
     for it in range(steps + 1):                 # iteration 0 warms compile
         t0 = time.perf_counter()
-        params, opt_state, step, metrics = fn(params, opt_state, step,
-                                              batch_d)
-        jax.block_until_ready(metrics["loss"])
+        with obs.tracer().span(label, track="bench", it=it,
+                               warm=(it == 0)):
+            params, opt_state, step, metrics = fn(params, opt_state, step,
+                                                  batch_d)
+            jax.block_until_ready(metrics["loss"])
         if it:
             ts.append(time.perf_counter() - t0)
         else:                                   # machine speed at timing
@@ -117,7 +125,9 @@ def time_step(cfg, batch: int, seq: int, steps: int = 5,
 
 
 def run_bench(batch: int = 4, seq: int = 64, d_model: int = 64,
-              steps: int = 5) -> dict:
+              steps: int = 5,
+              trace_path: str = "BENCH_train.trace.json") -> dict:
+    obs.tracer().reset()                 # trace holds exactly this sweep
     res = {
         "benchmark": "train_step",
         "config": {"arch": "mosa-paper", "preset": "smoke", "batch": batch,
@@ -134,16 +144,17 @@ def run_bench(batch: int = 4, seq: int = 64, d_model: int = 64,
     }
     calib0 = res["calib_ms"]
     res["variants"]["dense"] = time_step(
-        _build_cfg("dense", seq, d_model), batch, seq, steps, calib0=calib0)
+        _build_cfg("dense", seq, d_model), batch, seq, steps, calib0=calib0,
+        label="dense")
     res["variants"]["mosa_ref"] = time_step(
         _build_cfg("mosa", seq, d_model, impl="einsum"), batch, seq, steps,
-        calib0=calib0)
+        calib0=calib0, label="mosa_ref")
     res["variants"]["mosa_fused"] = time_step(
         _build_cfg("mosa", seq, d_model, impl="pallas"), batch, seq, steps,
-        calib0=calib0)
+        calib0=calib0, label="mosa_fused")
     res["variants"]["microbatch2"] = time_step(
         _build_cfg("mosa", seq, d_model), batch, seq, steps, microbatches=2,
-        calib0=calib0)
+        calib0=calib0, label="microbatch2")
     # Block-choice family (DESIGN §10): an exactly FLOP-matched pair — at
     # sparsity 4 / seq 64, k_for = 16 tokens per head, and with
     # sel_block_size 8 the block path selects kb = 2 blocks = the same 16
@@ -152,11 +163,11 @@ def run_bench(batch: int = 4, seq: int = 64, d_model: int = 64,
     blk_bs, blk_rho = 8, 4
     res["variants"]["mosa_tok_match"] = time_step(
         _build_cfg("mosa", seq, d_model, sparsity=blk_rho), batch, seq,
-        steps, calib0=calib0)
+        steps, calib0=calib0, label="mosa_tok_match")
     res["variants"]["mosa_block"] = time_step(
         _build_cfg("mosa", seq, d_model, granularity="block",
                    sel_block_size=blk_bs, sparsity=blk_rho), batch, seq,
-        steps, calib0=calib0)
+        steps, calib0=calib0, label="mosa_block")
     ref = res["variants"]["mosa_ref"]
     res["fused_over_ref"] = round(
         res["variants"]["mosa_fused"]["tok_s"] / ref["tok_s"], 3)
@@ -174,6 +185,9 @@ def run_bench(batch: int = 4, seq: int = 64, d_model: int = 64,
         "note": ("FLOP-matched: kb*sel_block_size == k_for(seq) rows per "
                  "head; ppl proxy = exp(loss) after the timed steps from "
                  "identical init/data")}
+    if trace_path:
+        obs.tracer().export_chrome(trace_path)
+        res["trace_path"] = trace_path
     return res
 
 
@@ -225,7 +239,10 @@ def main(argv=None):
             prev = json.load(f)
     except (FileNotFoundError, json.JSONDecodeError):
         prev = {}
-    res = run_bench(args.batch, args.seq, args.d_model, args.steps)
+    base = args.out[:-len(".json")] if args.out.endswith(".json") else \
+        args.out
+    res = run_bench(args.batch, args.seq, args.d_model, args.steps,
+                    trace_path=f"{base}.trace.json")
     _append_trajectory(res, prev)
     print("name,us_per_call,derived")
     for v, r in res["variants"].items():

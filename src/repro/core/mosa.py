@@ -316,12 +316,25 @@ class MoSAAttention:
     def router_health(self, params, x):
         """Per-step router health for the train loop (see
         ``repro.core.router.router_health_stats``): selection entropy,
-        token-drop rate, head utilization."""
-        from repro.core.router import router_health_stats
+        token-drop rate, head utilization.
+
+        Granularity-aware: block-choice layers (DESIGN §10) are scored in
+        BLOCK space — the units the router actually ranks — so drop_rate is
+        the fraction of pooled blocks no head selects and entropy is
+        normalized by ``log NB``; token-space stats would report a spurious
+        ``1 - 1/bs`` floor of "dropped" tokens inside selected blocks."""
+        from repro.core.router import (block_pool_scores,
+                                       router_health_stats)
         B, T, _ = x.shape
-        k = self.k_for(T)
         scores = self.router.scores(params["router"], x)
-        r, idx = select_topk(scores, k, self.cfg.force_first_token)
+        if self.cfg.selection_granularity == "block":
+            bs = self.cfg.sel_block_size
+            bsc = block_pool_scores(scores, bs)
+            r, bidx = select_topk(bsc, self.kb_for(T),
+                                  self.cfg.force_first_token)
+            return router_health_stats(r, bidx, bsc.shape[-1])
+        r, idx = select_topk(scores, self.k_for(T),
+                             self.cfg.force_first_token)
         return router_health_stats(r, idx, T)
 
     # ---------------------------------------------------------------- serving

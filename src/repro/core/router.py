@@ -94,7 +94,7 @@ def router_health_stats(r, idx, T: int):
     drop_rate = (counts == 0).astype(jnp.float32).mean()
     p = sel.sum((0, 1)) / (B * H * k)                              # (T,)
     ent = -jnp.sum(jnp.where(p > 0, p * jnp.log(jnp.maximum(p, 1e-20)), 0.0))
-    return {"sel_entropy": ent / jnp.log(float(T)),
+    return {"sel_entropy": ent / jnp.log(float(max(T, 2))),
             "drop_rate": drop_rate,
             "head_util": r.mean()}
 

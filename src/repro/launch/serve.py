@@ -39,6 +39,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import get_config
 from repro.dist import sharding as shd
 from repro.dist import hints
@@ -255,6 +256,11 @@ class Server:
 
         def decode_many(params, tok, caches, key, n, temperature=0.0,
                         top_k=0):
+            reg = obs.registry()
+            if reg.enabled:       # dispatch counters only — no device sync
+                reg.inc("server.decode_dispatches")
+                reg.inc("server.decode_steps", n)
+                reg.set("server.decode_batch", tok.shape[0])
             return self._decode_many(params, tok, caches, key, n,
                                      jnp.float32(temperature), top_k, False)
         self.decode_many = decode_many
@@ -312,11 +318,20 @@ class Server:
             return self.model.prefill_packed(params, tokens, caches, cu,
                                              rows, past_lens)
 
-        self.prefill_packed = jax.jit(
+        _prefill_packed_jit = jax.jit(
             _prefill_packed,
             in_shardings=(self.param_sh, None, self.cache_sh, None, None,
                           None),
             out_shardings=(None, self.cache_sh), donate_argnums=(2,))
+
+        def prefill_packed(params, tokens, caches, cu, rows, past_lens):
+            reg = obs.registry()
+            if reg.enabled:
+                reg.inc("server.prefill_dispatches")
+                reg.set("server.prefill_tokens", tokens.shape[-1])
+            return _prefill_packed_jit(params, tokens, caches, cu, rows,
+                                       past_lens)
+        self.prefill_packed = prefill_packed
         self.snapshot_row = jax.jit(row_snapshot)
         self.restore_row = jax.jit(row_restore, donate_argnums=(0,),
                                    out_shardings=self.cache_sh)
@@ -576,6 +591,11 @@ def main(argv=None):
     p.add_argument("--stepwise", action="store_true",
                    help="use the legacy per-token loop instead of the "
                         "fused chunk decoder")
+    p.add_argument("--metrics-path", default=None,
+                   help="write an obs metrics snapshot here on exit "
+                        "(.jsonl appends; DESIGN §11)")
+    p.add_argument("--trace-path", default=None,
+                   help="write a Chrome-trace JSON of the run here on exit")
     args = p.parse_args(argv)
 
     akw = {"variant": args.variant} if args.variant else {}
@@ -604,6 +624,7 @@ def main(argv=None):
         print(f"KV entries per MoSA layer: {hy.kv_total(args.max_len)} "
               f"(dense equivalent: "
               f"{args.max_len * (cfg.mosa.n_dense_heads + cfg.mosa.n_mosa_heads)})")
+    obs.dump(args.metrics_path, args.trace_path, tag="serve-cli")
 
 
 if __name__ == "__main__":

@@ -53,6 +53,14 @@ def main(argv=None):
     p.add_argument("--isoflop", action="store_true",
                    help="run the FLOP-matched dense-vs-MoSA sweep instead "
                         "of a single config")
+    p.add_argument("--metrics-path", default=None,
+                   help="write an obs metrics snapshot here on exit "
+                        "(.jsonl appends; DESIGN §11)")
+    p.add_argument("--trace-path", default=None,
+                   help="write a Chrome-trace JSON of the run here on exit")
+    p.add_argument("--no-health-in-step", action="store_true",
+                   help="router health via a standalone forward at log "
+                        "time instead of in-step aux outputs")
     args = p.parse_args(argv)
 
     if args.isoflop:
@@ -83,7 +91,10 @@ def main(argv=None):
                       ckpt_every=args.ckpt_every, rule_set=args.rule_set,
                       log_every=args.log_every, arch_kwargs=akw,
                       microbatch=args.microbatch, compute=args.compute,
-                      remat=args.remat, mosa_impl=args.mosa_impl)
+                      remat=args.remat, mosa_impl=args.mosa_impl,
+                      health_in_step=not args.no_health_in_step,
+                      metrics_path=args.metrics_path,
+                      trace_path=args.trace_path)
     trainer = Trainer(cfg)
     _, _, history = trainer.run()
     print(json.dumps({"final": history[-1] if history else None,

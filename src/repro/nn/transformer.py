@@ -406,129 +406,121 @@ class TransformerLM:
                     "mosa_gather", "mosa_router"))
         return fn
 
-    def backbone(self, params, x, positions=None, segments=None):
+    _HEALTH_KEYS = ("sel_entropy", "drop_rate", "head_util")
+
+    def _is_routed(self, block) -> bool:
+        """Static (spec + variant decide it): does this block's mixer carry
+        a learned sparse router with health telemetry?"""
+        if block.spec.mixer != "mosa":
+            return False
+        m = block.mixer_module()
+        return hasattr(m, "router_health") and \
+            hasattr(m._sparse(), "router_health")
+
+    def _block_health(self, block, bp, x):
+        """Router health of one block given its REAL input ``x`` (the
+        pre-norm residual stream), stop-gradiented: telemetry must never
+        feed the loss or widen the remat save set."""
+        xin = block._norm()(bp["norm1"], x)
+        s = block.mixer_module().router_health(bp["mixer"], xin)
+        return {k: jax.lax.stop_gradient(s[k]) for k in self._HEALTH_KEYS}
+
+    def backbone(self, params, x, positions=None, segments=None,
+                 collect_health: bool = False):
         """(B, T, h) -> (B, T, h) hidden states + aux loss.
 
         ``segments``: optional (B, T) int32 document ids for packed rows —
         threaded to every attention mixer so no probability mass crosses a
         document boundary (data/pipeline.py packed mode).
 
-        NOTE: ``router_health`` below mirrors this head/scan/tail walk
-        (it must read each layer's REAL input without perturbing the
-        remat'd hot path here) — keep param addressing and scan structure
-        changes in sync with it."""
+        ``collect_health=True`` (a STATIC flag) additionally returns the
+        expert-choice router health averaged over every MoSA layer
+        (``repro.core.router.router_health_stats`` keys), computed from
+        each routed layer's real input as the walk passes it — the extra
+        cost is one router scores+top_k per MoSA layer, riding the SAME
+        forward instead of a second one (DESIGN §11 device-metrics
+        pattern).  Scanned super-blocks accumulate stop-gradiented totals
+        through the scan carry.  Returns ``(x, aux)`` normally,
+        ``(x, aux, health_dict_or_empty)`` when collecting."""
         head, p, units, tail_start, pattern = self._layout()
         blocks = self._blocks()
         aux_total = jnp.zeros((), jnp.float32)
+        KEYS = self._HEALTH_KEYS
+        totals = ({k: jnp.zeros((), jnp.float32) for k in KEYS}
+                  if collect_health else {})
+        n_routed = 0
+
+        def add(tot, s):
+            return {k: tot[k] + s[k] for k in KEYS}
 
         for i in range(head):
+            bp = params["layers"]["tail"][f"layer{i}"]
+            if collect_health and self._is_routed(blocks[i]):
+                totals = add(totals, self._block_health(blocks[i], bp, x))
+                n_routed += 1
             blk = self._maybe_remat(blocks[i].__call__)
-            x, a = blk(params["layers"]["tail"][f"layer{i}"], x, positions,
-                       segments)
+            x, a = blk(bp, x, positions, segments)
             x = self._constrain(x)
             aux_total = aux_total + a
 
         if units:
             unit_blocks = blocks[head:head + p]
+            mosa_pos = [j for j in range(p)
+                        if collect_health and self._is_routed(unit_blocks[j])]
 
             def superblock(x, unit_params):
                 aux = jnp.zeros((), jnp.float32)
+                tot = ({k: jnp.zeros((), jnp.float32) for k in KEYS}
+                       if mosa_pos else {})
                 for j in range(p):
+                    if j in mosa_pos:
+                        tot = add(tot, self._block_health(
+                            unit_blocks[j], unit_params[f"pos{j}"], x))
                     x, a = unit_blocks[j](unit_params[f"pos{j}"], x, positions,
                                           segments)
                     x = self._constrain(x)
                     aux = aux + a
-                return x, aux
+                return x, aux, tot
 
             superblock = self._maybe_remat(superblock)
 
             def scan_body(carry, unit_params):
-                x, aux = carry
-                x, a = superblock(x, unit_params)
-                return (x, aux + a), None
+                x, aux, tot = carry
+                x, a, t = superblock(x, unit_params)
+                if mosa_pos:
+                    tot = add(tot, t)
+                return (x, aux + a, tot), None
 
-            (x, aux_total), _ = jax.lax.scan(
-                scan_body, (x, aux_total), params["layers"]["scan"])
+            (x, aux_total, totals), _ = jax.lax.scan(
+                scan_body, (x, aux_total, totals), params["layers"]["scan"])
+            n_routed += units * len(mosa_pos)
 
         for i in range(tail_start, len(pattern)):
+            bp = params["layers"]["tail"][f"layer{i}"]
+            if collect_health and self._is_routed(blocks[i]):
+                totals = add(totals, self._block_health(blocks[i], bp, x))
+                n_routed += 1
             blk = self._maybe_remat(blocks[i].__call__)
-            x, a = blk(params["layers"]["tail"][f"layer{i}"], x, positions,
-                       segments)
+            x, a = blk(bp, x, positions, segments)
             x = self._constrain(x)
             aux_total = aux_total + a
-        return x, aux_total
+
+        if not collect_health:
+            return x, aux_total
+        health = ({k: v / n_routed for k, v in totals.items()}
+                  if n_routed else {})
+        return x, aux_total, health
 
     def router_health(self, params, tokens=None, positions=None,
                       inputs_embeds=None):
-        """Expert-choice router health averaged over every MoSA layer
-        (selection entropy, token-drop rate, head utilization — see
-        ``repro.core.router.router_health_stats``).  Walks the backbone with
-        the REAL layer inputs (each layer's health reflects the activations
-        it actually routes), collecting stats from each hybrid mixer's
-        sparse side; scanned super-blocks accumulate through the carry.
-        Returns {} for models with no learned sparse router.
-
-        Mirrors ``backbone``'s head/scan/tail traversal (see the note
-        there); a hook inside ``backbone`` itself would drag telemetry
-        into the remat'd training graph.
-        """
-        head, p, units, tail_start, pattern = self._layout()
-        blocks = self._blocks()
+        """Expert-choice router health averaged over every MoSA layer —
+        the standalone-forward face of ``backbone(collect_health=True)``
+        (one walk, no duplicated traversal to keep in sync).  Returns {}
+        for models with no learned sparse router."""
         x = self._embed_tokens(params, tokens, inputs_embeds)
-        KEYS = ("sel_entropy", "drop_rate", "head_util")
-
-        def is_routed(block):      # static: spec + variant decide it
-            if block.spec.mixer != "mosa":
-                return False
-            m = block.mixer_module()
-            return hasattr(m, "router_health") and \
-                hasattr(m._sparse(), "router_health")
-
-        def block_stats(block, bp, x):
-            xin = block._norm()(bp["norm1"], x)
-            return block.mixer_module().router_health(bp["mixer"], xin)
-
-        totals = {k: jnp.zeros((), jnp.float32) for k in KEYS}
-        n_layers = 0
-
-        for i in range(head):
-            bp = params["layers"]["tail"][f"layer{i}"]
-            if is_routed(blocks[i]):
-                s = block_stats(blocks[i], bp, x)
-                totals = {k: totals[k] + s[k] for k in KEYS}
-                n_layers += 1
-            x, _ = blocks[i](bp, x, positions)
-
-        if units:
-            unit_blocks = blocks[head:head + p]
-            mosa_pos = [j for j in range(p) if is_routed(unit_blocks[j])]
-
-            def scan_body(carry, unit_params):
-                x, tot = carry
-                for j in range(p):
-                    if j in mosa_pos:
-                        s = block_stats(unit_blocks[j],
-                                        unit_params[f"pos{j}"], x)
-                        tot = {k: tot[k] + s[k] for k in KEYS}
-                    x, _ = unit_blocks[j](unit_params[f"pos{j}"], x,
-                                          positions)
-                return (x, tot), None
-
-            (x, totals), _ = jax.lax.scan(
-                scan_body, (x, totals), params["layers"]["scan"])
-            n_layers += units * len(mosa_pos)
-
-        for i in range(tail_start, len(pattern)):
-            bp = params["layers"]["tail"][f"layer{i}"]
-            if is_routed(blocks[i]):
-                s = block_stats(blocks[i], bp, x)
-                totals = {k: totals[k] + s[k] for k in KEYS}
-                n_layers += 1
-            x, _ = blocks[i](bp, x, positions)
-
-        if not n_layers:
-            return {}
-        return {k: v / n_layers for k, v in totals.items()}
+        _, _, health = self.backbone(params, x, positions,
+                                     collect_health=True)
+        return health
 
     def _embed_tokens(self, params, tokens=None, inputs_embeds=None):
         c = self.cfg
@@ -539,12 +531,17 @@ class TransformerLM:
             x = x * jnp.asarray(c.d_model ** 0.5, x.dtype)  # gemma convention
         return x
 
-    def __call__(self, params, tokens=None, positions=None, inputs_embeds=None,
-                 segments=None):
-        """Returns (logits fp32 (B, T, vocab), aux_loss scalar)."""
+    def _forward(self, params, tokens=None, positions=None,
+                 inputs_embeds=None, segments=None,
+                 collect_health: bool = False):
         c = self.cfg
         x = self._embed_tokens(params, tokens, inputs_embeds)
-        x, aux = self.backbone(params, x, positions, segments)
+        if collect_health:
+            x, aux, health = self.backbone(params, x, positions, segments,
+                                           collect_health=True)
+        else:
+            x, aux = self.backbone(params, x, positions, segments)
+            health = {}
         x = self._final_norm()(params["final_norm"], x)
         if c.tie_embeddings:
             logits = self._embed().attend(params["embed"], x)
@@ -552,21 +549,35 @@ class TransformerLM:
             w = params["unembed"]["w"].astype(c.cdtype)
             logits = jnp.dot(x.astype(c.cdtype), w,
                              preferred_element_type=jnp.float32)
+        return logits, aux, health
+
+    def __call__(self, params, tokens=None, positions=None, inputs_embeds=None,
+                 segments=None):
+        """Returns (logits fp32 (B, T, vocab), aux_loss scalar)."""
+        logits, aux, _ = self._forward(params, tokens, positions,
+                                       inputs_embeds, segments)
         return logits, aux
 
-    def loss(self, params, batch):
+    def loss(self, params, batch, with_health: bool = False):
         """batch: {"tokens" (B,T) or "embeds" (B,T,h), "labels" (B,T)}.
         labels < 0 are masked.  Packed batches (data/pipeline.py) add
         "segments" (B,T) int32 doc ids and per-doc "positions"; attention is
         then segment-masked so packed documents never see each other.
-        Returns (loss, metrics)."""
+        Returns (loss, metrics).
+
+        ``with_health=True`` (static) folds the router-health stats of
+        ``backbone(collect_health=True)`` into the metrics dict — the
+        in-step telemetry path (DESIGN §11) that replaces the train loop's
+        former second full forward per log interval."""
         tokens = batch.get("tokens")
         embeds = batch.get("embeds")
         labels = batch["labels"]
         positions = batch.get("positions")
         segments = batch.get("segments")
-        logits, aux = self(params, tokens, positions, inputs_embeds=embeds,
-                           segments=segments)
+        logits, aux, health = self._forward(params, tokens, positions,
+                                            inputs_embeds=embeds,
+                                            segments=segments,
+                                            collect_health=with_health)
         logits = logits.astype(jnp.float32)
         V = logits.shape[-1]
         mask = (labels >= 0).astype(jnp.float32)
@@ -583,8 +594,11 @@ class TransformerLM:
         denom = jnp.maximum(mask.sum(), 1.0)
         ce = nll.sum() / denom
         loss = ce + aux
-        return loss, {"ce": ce, "aux": aux, "ppl": jnp.exp(ce),
-                      "tokens": denom}
+        metrics = {"ce": ce, "aux": aux, "ppl": jnp.exp(ce),
+                   "tokens": denom}
+        if with_health:
+            metrics.update(health)
+        return loss, metrics
 
     # ---------------------------------------------------------------- serving
     def init_cache(self, batch, max_len, dtype=None, paged=None):

@@ -1,0 +1,41 @@
+"""repro.obs — unified observability: metrics, tracing, exporters
+(DESIGN §11).
+
+Pure-Python, jax-free at import time (jax is only touched inside the
+optional profiler passthrough), so any module — including repro.core,
+which must never pull Pallas — can import it.
+
+    from repro import obs
+    obs.registry().observe("serve.ttft_s", dt)
+    with obs.tracer().span("prefill_chunk", track="sched", segs=3):
+        ...
+    obs.dump(metrics_path="m.jsonl", trace_path="trace.json")
+    obs.set_enabled(False)      # all of the above become no-ops
+"""
+
+from repro.obs.export import (dump, prometheus_text, write_metrics_json,
+                              write_metrics_jsonl, write_prometheus)
+from repro.obs.metrics import (DEFAULT_BOUNDS, UNIT_BOUNDS, Counter, Gauge,
+                               Histogram, Registry, publish, registry)
+from repro.obs.tracing import (Span, Tracer, start_profiler, stop_profiler,
+                               tracer)
+
+
+def set_enabled(flag: bool) -> None:
+    """Toggle the global registry AND tracer in one call — the single
+    switch Scheduler/Trainer/bench obs flags map onto."""
+    registry().enabled = flag
+    tracer().enabled = flag
+
+
+def enabled() -> bool:
+    return registry().enabled
+
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "Span", "Tracer",
+    "DEFAULT_BOUNDS", "UNIT_BOUNDS",
+    "dump", "enabled", "prometheus_text", "publish", "registry",
+    "set_enabled", "start_profiler", "stop_profiler", "tracer",
+    "write_metrics_json", "write_metrics_jsonl", "write_prometheus",
+]

@@ -1,0 +1,99 @@
+"""Exporters: metrics snapshots to JSON/JSONL and Prometheus text, plus a
+one-call ``dump()`` used by Scheduler/Trainer shutdown paths (DESIGN §11).
+
+Formats:
+  * JSON / JSONL — ``Registry.snapshot()`` verbatim; the JSONL writer
+    APPENDS one snapshot object per call so a long run leaves a time
+    series (each line stamped with wall time and an optional caller tag).
+  * Prometheus exposition text — counters as ``# TYPE c counter``, gauges
+    as gauges, histograms as the conventional ``_bucket{le=...}`` /
+    ``_sum`` / ``_count`` triplet with cumulative bucket counts, so the
+    artifact can be diffed against any promtool-era tooling.  Metric
+    names sanitize ``.``/``-`` to ``_`` (dots namespace the registry,
+    underscores namespace Prometheus).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Optional
+
+from repro.obs.metrics import Counter, Gauge, Registry, registry
+from repro.obs.tracing import Tracer, tracer
+
+
+def _prom_name(name: str) -> str:
+    return name.replace(".", "_").replace("-", "_")
+
+
+def prometheus_text(reg: Optional[Registry] = None) -> str:
+    """Render the registry in Prometheus exposition format."""
+    reg = reg if reg is not None else registry()
+    lines = []
+    for name, m in sorted(reg._metrics.items()):
+        pn = _prom_name(name)
+        if isinstance(m, Counter):
+            lines += [f"# TYPE {pn} counter", f"{pn} {m.value:g}"]
+        elif isinstance(m, Gauge):
+            lines += [f"# TYPE {pn} gauge", f"{pn} {m.value:g}"]
+        else:                                   # Histogram
+            lines.append(f"# TYPE {pn} histogram")
+            cum = 0
+            for edge, c in zip(m.bounds, m.counts):
+                cum += c
+                lines.append(f'{pn}_bucket{{le="{edge:g}"}} {cum}')
+            lines.append(f'{pn}_bucket{{le="+Inf"}} {m.count}')
+            lines.append(f"{pn}_sum {m.sum:g}")
+            lines.append(f"{pn}_count {m.count}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def write_prometheus(path: str, reg: Optional[Registry] = None) -> None:
+    with open(path, "w") as f:
+        f.write(prometheus_text(reg))
+
+
+def write_metrics_json(path: str, reg: Optional[Registry] = None,
+                       extra: Optional[dict] = None) -> None:
+    reg = reg if reg is not None else registry()
+    snap = reg.snapshot()
+    if extra:
+        snap["extra"] = dict(extra)
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def write_metrics_jsonl(path: str, reg: Optional[Registry] = None,
+                        tag: str = "", extra: Optional[dict] = None) -> None:
+    """Append one snapshot line — repeated calls build a time series."""
+    reg = reg if reg is not None else registry()
+    line = {"time": round(time.time(), 3), **reg.snapshot()}
+    if tag:
+        line["tag"] = tag
+    if extra:
+        line["extra"] = dict(extra)
+    with open(path, "a") as f:
+        f.write(json.dumps(line, sort_keys=True) + "\n")
+
+
+def dump(metrics_path: Optional[str] = None,
+         trace_path: Optional[str] = None,
+         prom_path: Optional[str] = None,
+         reg: Optional[Registry] = None,
+         tr: Optional[Tracer] = None,
+         tag: str = "") -> None:
+    """Write whichever artifacts were configured.  ``metrics_path`` ending
+    in ``.jsonl`` appends a snapshot line (time series); any other suffix
+    overwrites with a pretty JSON snapshot.  ``trace_path`` gets the
+    Chrome-trace JSON."""
+    if metrics_path:
+        if metrics_path.endswith(".jsonl"):
+            write_metrics_jsonl(metrics_path, reg, tag=tag)
+        else:
+            write_metrics_json(metrics_path, reg)
+    if trace_path:
+        (tr if tr is not None else tracer()).export_chrome(trace_path)
+    if prom_path:
+        write_prometheus(prom_path, reg)

@@ -1,0 +1,283 @@
+"""Process-local metrics registry: counters, gauges, histograms (DESIGN §11).
+
+The serving and training paths both report through one ``Registry`` of named
+metrics so the paper's systems claims (TTFT/TPOT, tokens/s, block-pool
+pressure, router health) are measured in one place instead of scattered
+ad-hoc dicts.  Three deliberate constraints shape the design:
+
+  * **Pure-Python hot path** — recording is a dict lookup plus a float op;
+    no numpy, no jax, no locks on the observe path.  The modules that
+    instrument per-block allocator operations (``repro.serve.paged_kv``)
+    and per-chunk scheduling (``repro.serve.scheduler``) call into this on
+    every event, and the bench gate holds obs-enabled serving within 2% of
+    obs-disabled (``BENCH_serve.json: obs_overhead``).
+  * **Zero writes when disabled** — ``Registry.enabled = False`` makes
+    every convenience call (``inc``/``set``/``observe``) return before
+    touching any state, and the factory methods hand back a shared no-op
+    metric that is never stored.  ``tests/test_obs.py`` asserts the
+    snapshot stays empty.
+  * **Fixed-bucket streaming quantiles** — histograms keep a bounded
+    vector of bucket counts (no sample retention), and p50/p90/p99 are
+    interpolated within the covering bucket, clamped to the observed
+    min/max.  Memory is O(buckets) regardless of request count — the fix
+    for the ``Scheduler.ttft`` dict that grew per request forever.
+
+Device-metrics pattern (the jit half): values produced INSIDE jitted code
+(train-step loss/grad-norm, in-step router health) must not force an extra
+device→host transfer.  The pattern is: the jitted function returns them as
+extra outputs (aux metrics riding the existing step outputs), the caller
+host-syncs them where it already syncs (the ``float(v)`` conversion after
+the step), and then calls ``publish`` with the resulting floats.
+``publish`` itself only calls ``float()`` — on an already-fetched numpy
+scalar that is free; on a device array it would BE the transfer, so keep
+feeding it from the existing sync point (``repro.train.loop`` is the
+reference user; parity under jit + donated buffers is tested).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence
+
+
+def _geometric_bounds(lo: float, hi: float, per_decade: int = 4) -> tuple:
+    """Geometric bucket bounds from ``lo`` to ``hi`` (inclusive-ish)."""
+    import math
+    n = int(math.ceil((math.log10(hi) - math.log10(lo)) * per_decade))
+    return tuple(lo * (10.0 ** (i / per_decade)) for i in range(n + 1))
+
+
+# Default bounds cover microseconds..minutes in seconds AND dimensionless
+# ratios (packing efficiency, entropy in [0, 1]) with ~78%-wide buckets.
+DEFAULT_BOUNDS = _geometric_bounds(1e-6, 1e3)
+
+# Linear [0, 1] bounds for ratio-valued histograms (efficiency, drop rate,
+# normalized entropy) where geometric spacing would waste resolution.
+UNIT_BOUNDS = tuple(i / 20.0 for i in range(21))
+
+
+class Counter:
+    """Monotone float counter."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        self.value += v
+
+
+class Gauge:
+    """Last-value gauge; ``set_max`` keeps a high-water mark instead."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+
+    def set_max(self, v: float) -> None:
+        if v > self.value:
+            self.value = v
+
+
+class Histogram:
+    """Fixed-bucket streaming histogram with interpolated quantiles.
+
+    ``bounds`` are the bucket upper edges; values land in the first bucket
+    whose edge is >= v, with one overflow bucket past the last edge.
+    ``quantile(q)`` walks the cumulative counts to the covering bucket and
+    interpolates linearly inside it, clamping to the observed min/max — so
+    a single observation reports itself exactly and bucket-width error is
+    bounded by the bucket, never by the sample count.
+    """
+
+    __slots__ = ("name", "bounds", "counts", "count", "sum", "min", "max")
+
+    def __init__(self, name: str, bounds: Optional[Sequence[float]] = None):
+        self.name = name
+        self.bounds = tuple(bounds) if bounds is not None else DEFAULT_BOUNDS
+        assert all(a < b for a, b in zip(self.bounds, self.bounds[1:])), (
+            "histogram bounds must be strictly increasing")
+        self.counts = [0] * (len(self.bounds) + 1)   # +1 overflow bucket
+        self.count = 0
+        self.sum = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        lo, hi = 0, len(self.bounds)                 # bisect, inlined: the
+        while lo < hi:                               # hot path stays free of
+            mid = (lo + hi) // 2                     # module lookups
+            if self.bounds[mid] < v:
+                lo = mid + 1
+            else:
+                hi = mid
+        self.counts[lo] += 1
+        self.count += 1
+        self.sum += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+    def quantile(self, q: float) -> float:
+        if self.count == 0:
+            return 0.0
+        target = q * self.count
+        cum = 0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if cum + c >= target:
+                b_lo = self.bounds[i - 1] if i > 0 else self.min
+                b_hi = self.bounds[i] if i < len(self.bounds) else self.max
+                b_lo = max(b_lo, self.min)
+                b_hi = min(b_hi, self.max)
+                if b_hi <= b_lo:
+                    return b_lo
+                frac = (target - cum) / c
+                return b_lo + frac * (b_hi - b_lo)
+            cum += c
+        return self.max
+
+    def percentiles(self) -> Dict[str, float]:
+        return {"p50": self.quantile(0.50), "p90": self.quantile(0.90),
+                "p99": self.quantile(0.99)}
+
+    def summary(self) -> dict:
+        out = {"count": self.count, "sum": self.sum}
+        if self.count:
+            out.update(min=self.min, max=self.max,
+                       mean=self.sum / self.count, **self.percentiles())
+        return out
+
+
+class _Null:
+    """Shared no-op metric handed out by a disabled registry (never stored)."""
+
+    name = "<disabled>"
+    value = 0.0
+
+    def inc(self, v: float = 1.0) -> None: pass
+    def set(self, v: float) -> None: pass
+    def set_max(self, v: float) -> None: pass
+    def observe(self, v: float) -> None: pass
+    def quantile(self, q: float) -> float: return 0.0
+    def percentiles(self) -> dict: return {}
+    def summary(self) -> dict: return {}
+
+
+_NULL = _Null()
+
+
+class Registry:
+    """Name -> metric map with a fast-exit ``enabled`` switch.
+
+    Creation is lock-guarded (instrumented code may run under the data
+    pipeline's prefetch thread); the record path is a plain attribute
+    update, safe under the GIL for the float ops used here.
+    """
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._metrics: Dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- factories
+    def _get(self, name: str, cls, *args):
+        if not self.enabled:
+            return _NULL
+        m = self._metrics.get(name)
+        if m is None:
+            with self._lock:
+                m = self._metrics.get(name)
+                if m is None:
+                    m = cls(name, *args)
+                    self._metrics[name] = m
+        assert isinstance(m, cls), (
+            f"metric {name!r} already registered as {type(m).__name__}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str,
+                  bounds: Optional[Sequence[float]] = None) -> Histogram:
+        return self._get(name, Histogram, bounds)
+
+    # ---------------------------------------------------------- convenience
+    def inc(self, name: str, v: float = 1.0) -> None:
+        if self.enabled:
+            self.counter(name).inc(v)
+
+    def set(self, name: str, v: float) -> None:
+        if self.enabled:
+            self.gauge(name).set(v)
+
+    def set_max(self, name: str, v: float) -> None:
+        if self.enabled:
+            self.gauge(name).set_max(v)
+
+    def observe(self, name: str, v: float,
+                bounds: Optional[Sequence[float]] = None) -> None:
+        if self.enabled:
+            self.histogram(name, bounds).observe(v)
+
+    # -------------------------------------------------------------- reading
+    def get(self, name: str):
+        return self._metrics.get(name)
+
+    def snapshot(self) -> dict:
+        """{"counters": {name: value}, "gauges": {...},
+        "histograms": {name: summary}} — JSON-ready."""
+        out: dict = {"counters": {}, "gauges": {}, "histograms": {}}
+        for name, m in sorted(self._metrics.items()):
+            if isinstance(m, Counter):
+                out["counters"][name] = m.value
+            elif isinstance(m, Gauge):
+                out["gauges"][name] = m.value
+            else:
+                out["histograms"][name] = m.summary()
+        return out
+
+    def reset(self) -> None:
+        with self._lock:
+            self._metrics.clear()
+
+
+# The process-global default registry every instrumented module reports to.
+REGISTRY = Registry()
+
+
+def registry() -> Registry:
+    return REGISTRY
+
+
+def publish(values: dict, prefix: str = "",
+            reg: Optional[Registry] = None, kind: str = "gauge") -> dict:
+    """Host half of the device-metrics pattern (module docstring): record a
+    dict of scalars under ``prefix``.  Call it with values you have ALREADY
+    host-synced (the step's existing ``float(v)`` point) — ``float()`` here
+    is then free; on a still-on-device array it would itself be the
+    transfer.  ``kind``: "gauge" (last value) or "histogram" (distribution).
+    Returns the recorded {name: float} map."""
+    reg = reg if reg is not None else REGISTRY
+    if not reg.enabled:
+        return {}
+    rec = reg.observe if kind == "histogram" else reg.set
+    out = {}
+    for k, v in values.items():
+        f = float(v)
+        rec(prefix + k, f)
+        out[prefix + k] = f
+    return out

@@ -41,6 +41,8 @@ from typing import List, NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import registry as _obs_registry
+
 
 @dataclasses.dataclass(frozen=True)
 class PagedConfig:
@@ -70,10 +72,12 @@ class BlockPool:
     flag telling it to copy the payload — whenever the block is shared.
     """
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int,
+                 name: str = "blocks"):
         assert num_blocks >= 0 and block_size > 0
         self.num_blocks = num_blocks
         self.block_size = block_size
+        self.name = name             # metrics namespace: pool.<name>.*
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._ref = [0] * num_blocks
 
@@ -88,19 +92,40 @@ class BlockPool:
     def refcount(self, bid: int) -> int:
         return self._ref[bid]
 
+    def _publish(self) -> None:
+        """Mirror occupancy into the obs registry (DESIGN §11): utilization
+        gauges plus a live-blocks high-water mark.  One enabled check, then
+        plain gauge sets — the allocator stays pure Python and untraced."""
+        reg = _obs_registry()
+        if not reg.enabled:
+            return
+        live = self.num_blocks - len(self._free)
+        reg.set(f"pool.{self.name}.free_blocks", len(self._free))
+        reg.set(f"pool.{self.name}.live_blocks", live)
+        reg.set_max(f"pool.{self.name}.live_high_water", live)
+
     def alloc(self, n: int) -> Optional[List[int]]:
         """``n`` fresh blocks at ref 1, or None (all-or-nothing)."""
         if n < 0 or n > len(self._free):
+            _obs_registry().inc(f"pool.{self.name}.alloc_failures")
             return None
         ids = [self._free.pop() for _ in range(n)]
         for b in ids:
             self._ref[b] = 1
+        _obs_registry().inc(f"pool.{self.name}.allocs", n)
+        self._publish()
         return ids
 
     def incref(self, ids: Sequence[int]) -> None:
+        hi = 0
         for b in ids:
             assert self._ref[b] > 0, f"incref of free block {b}"
             self._ref[b] += 1
+            if self._ref[b] > hi:
+                hi = self._ref[b]
+        if ids:
+            _obs_registry().set_max(
+                f"pool.{self.name}.refcount_high_water", hi)
 
     def decref(self, ids: Sequence[int]) -> None:
         for b in ids:
@@ -108,6 +133,8 @@ class BlockPool:
             self._ref[b] -= 1
             if self._ref[b] == 0:
                 self._free.append(b)
+        if ids:
+            self._publish()
 
     def ensure_owned(self, bid: int) -> Optional[tuple]:
         """(owned_id, needs_copy).  Copy-on-write: shared blocks come back as
@@ -121,6 +148,7 @@ class BlockPool:
         if got is None:
             return None
         self.decref([bid])
+        _obs_registry().inc(f"pool.{self.name}.cow_copies")
         return got[0], True
 
 

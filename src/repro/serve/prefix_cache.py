@@ -38,6 +38,8 @@ from __future__ import annotations
 import itertools
 from typing import List, Optional, Sequence, Tuple
 
+from repro.obs.metrics import registry as _obs_registry
+
 
 class _Node:
     __slots__ = ("parent", "tokens", "block_id", "children", "snapshot",
@@ -94,9 +96,13 @@ class PrefixCache:
                 best = child
         if best is None:
             self.misses += 1
+            _obs_registry().inc("prefix.misses")
             return None, 0
         self.hits += 1
         self.hit_tokens += best.depth
+        reg = _obs_registry()            # mirrors of the legacy attrs
+        reg.inc("prefix.hits")
+        reg.inc("prefix.hit_tokens", best.depth)
         for n in self._chain(best):
             n.last_used = now
         return best, best.depth
@@ -138,6 +144,10 @@ class PrefixCache:
             child.last_used = now
             chain.append(child.block_id)
             node = child
+        reg = _obs_registry()
+        if reg.enabled:
+            reg.inc("prefix.inserts")
+            reg.set("prefix.nodes", self.n_nodes)
         return chain, (None if node is self.root else node)
 
     def attach_snapshot(self, node: Optional[_Node], snapshot) -> None:
@@ -156,6 +166,10 @@ class PrefixCache:
         pool.decref([victim.block_id])
         victim.parent.children.pop(victim.tokens, None)
         victim.snapshot = None
+        reg = _obs_registry()
+        if reg.enabled:
+            reg.inc("prefix.evictions")
+            reg.set("prefix.nodes", self.n_nodes)
         return True
 
     def _iter_nodes(self):

@@ -72,17 +72,23 @@ from __future__ import annotations
 import copy
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.kv_cache import MoSABlockKVCache, MoSAKVCache
 from repro.dist import hints
 from repro.serve.paged_kv import (BlockPool, PagedDenseKVCache,
                                   PagedWindowKVCache)
 from repro.serve.prefix_cache import PrefixCache
+
+# Bounded retention for the deprecated per-rid TTFT map (DESIGN §11): the
+# histogram is the real record; this keeps only the most recent rids.
+TTFT_KEEP = 4096
 
 
 @dataclasses.dataclass
@@ -91,6 +97,7 @@ class _Request:
     prompt: jnp.ndarray
     max_new: int
     generated: list = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0        # tracer clock at submit/requeue
 
 
 def _cache_leaves(caches):
@@ -142,6 +149,76 @@ def _table_row(ids: List[int], width: int) -> np.ndarray:
     return row
 
 
+# ----------------------------------------------- serve-time router health
+def _selection_health(pos, wt, n_slots: int) -> dict:
+    """Host-side analog of ``repro.core.router.router_health_stats`` over a
+    flat list of selected slot indices ``pos`` with selection weights
+    ``wt``: entropy of the weight mass over ``n_slots`` (normalized by
+    ``log n_slots``), the fraction of slots selected by no head, and the
+    mean selection weight."""
+    n = max(int(n_slots), 2)
+    keep = (pos >= 0) & (pos < n)
+    pos, wt = pos[keep], wt[keep]
+    counts = np.bincount(pos, minlength=n)
+    mass = np.bincount(pos, weights=np.maximum(wt, 0.0), minlength=n)
+    tot = mass.sum()
+    p = (mass / tot) if tot > 0 else np.full(n, 1.0 / n)
+    ent = float(-(p * np.log(np.maximum(p, 1e-12))).sum() / np.log(n))
+    return {"sel_entropy": ent,
+            "drop_rate": float((counts == 0).mean()),
+            "head_util": float(wt.mean()) if wt.size else 0.0}
+
+
+def _router_health_from_snapshot(snap, P: int) -> dict:
+    """MoSA router health for one request, computed from the HOST row
+    snapshot its prefill just produced (DESIGN §11) — numpy on data already
+    fetched for snapshotting, no extra device work beyond the row gather.
+
+    Token-choice caches score ``min(capacity, P)`` kept tokens over the
+    ``P`` prompt positions; block-choice caches score their COMPLETED
+    blocks (slot CB, the partial block, excluded) over ``ceil(P / bs)``
+    pool blocks.  Stats are averaged across every routed layer instance
+    (stacked scan layers contribute one sample per layer)."""
+    samples: List[dict] = []
+
+    def walk(x):
+        if isinstance(x, MoSAKVCache):
+            s = np.asarray(x.scores, np.float64)
+            ix = np.asarray(x.idx, np.int64)
+            s2 = s.reshape(-1, s.shape[-2] * s.shape[-1])
+            i2 = ix.reshape(-1, ix.shape[-2] * ix.shape[-1])
+            for l in range(s2.shape[0]):
+                valid = np.isfinite(s2[l]) & (i2[l] >= 0)
+                samples.append(_selection_health(
+                    i2[l][valid], s2[l][valid], P))
+            return
+        if isinstance(x, MoSABlockKVCache):
+            bsc = np.asarray(x.bscore, np.float64)[..., :-1]
+            bix = np.asarray(x.bidx, np.int64)[..., :-1]
+            bs = x.k.shape[-2] // x.bscore.shape[-1]
+            nb = -(-int(P) // max(bs, 1))
+            cb = bsc.shape[-1]
+            s2 = bsc.reshape(-1, bsc.shape[-2] * cb)
+            i2 = bix.reshape(-1, bix.shape[-2] * cb)
+            for l in range(s2.shape[0]):
+                valid = np.isfinite(s2[l]) & (i2[l] >= 0)
+                samples.append(_selection_health(
+                    i2[l][valid], s2[l][valid], nb))
+            return
+        if isinstance(x, dict):
+            for v in x.values():
+                walk(v)
+        elif hasattr(x, "_fields"):
+            for v in x:
+                walk(v)
+
+    walk(snap)
+    if not samples:
+        return {}
+    return {k: float(np.mean([s[k] for s in samples]))
+            for k in ("sel_entropy", "drop_rate", "head_util")}
+
+
 class Scheduler:
     """Continuous batching with block-granular admission.
 
@@ -152,11 +229,22 @@ class Scheduler:
 
     def __init__(self, server, eos: int = -1, chunk: int = 8,
                  chunk_tokens: int = 64, max_prefill_segs: int = 4,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 metrics_path: Optional[str] = None,
+                 trace_path: Optional[str] = None,
+                 router_health_every: int = 4):
         """``chunk``: decode tokens per fused decode dispatch.
         ``chunk_tokens``: the packed prefill chunk budget C — every prefill
         dispatch processes exactly C token slots (ONE compiled program);
-        ``max_prefill_segs``: max pending rows packed per chunk (N)."""
+        ``max_prefill_segs``: max pending rows packed per chunk (N).
+
+        Observability (DESIGN §11): metrics/spans go to the global
+        ``repro.obs`` registry/tracer.  ``metrics_path`` (``.jsonl``
+        appends a snapshot line) and ``trace_path`` (Chrome-trace JSON)
+        are written when ``run()`` drains.  ``router_health_every``: every
+        Nth completed prompt on a MoSA model gets its router health
+        (sel_entropy / drop_rate / head_util) sampled from the prefill's
+        row snapshot — 0 disables the sampling."""
         paged = server.paged
         assert paged is not None and paged.num_blocks > 0, (
             "Scheduler needs Server(paged=PagedConfig(num_blocks=...)) with "
@@ -186,8 +274,9 @@ class Scheduler:
         self.need_snapshot = any(
             not isinstance(x, PagedDenseKVCache) for x in leaves)
 
-        self.dense_pool = BlockPool(paged.num_blocks, self.bs)
-        self.window_pool = (BlockPool(paged.num_window_blocks, self.bs)
+        self.dense_pool = BlockPool(paged.num_blocks, self.bs, name="dense")
+        self.window_pool = (BlockPool(paged.num_window_blocks, self.bs,
+                                      name="window")
                             if self.has_window else None)
         self.prefix = PrefixCache(self.bs) if prefix_cache else None
         self._empty_row = jax.device_get(server.snapshot_row(self.caches, 0))
@@ -198,21 +287,45 @@ class Scheduler:
                       "prefilled_tokens": 0, "prefill_chunks": 0,
                       "prefill_chunk_slots": 0, "preemptions": 0,
                       "max_concurrent": 0}
-        # rid -> seconds from run() start to the request's first sampled
-        # token (host-synced: the int() conversion below forces the value)
-        self.ttft: dict = {}
+        # rid -> TTFT seconds, bounded to the TTFT_KEEP newest rids; the
+        # obs histogram serve.ttft_s is the unbounded-safe record.
+        self._ttft: OrderedDict = OrderedDict()
         self._t0 = None
+        self.metrics_path = metrics_path
+        self.trace_path = trace_path
+        self.router_health_every = router_health_every
+        self._has_mosa = any(isinstance(x, (MoSAKVCache, MoSABlockKVCache))
+                             for x in leaves)
+        self._health_seen = 0
 
         B = server.batch
         self._slots: List[Optional[dict]] = [None] * B
         self._admit_seq = 0
+
+    @property
+    def ttft(self) -> OrderedDict:
+        """Deprecated: per-rid TTFT map, now bounded to the ``TTFT_KEEP``
+        most recent requests.  Read ``obs.registry()``'s ``serve.ttft_s``
+        histogram (p50/p90/p99) instead."""
+        return self._ttft
+
+    def _record_ttft(self, rid: int, dt: float) -> None:
+        self._ttft[rid] = dt
+        while len(self._ttft) > TTFT_KEEP:
+            self._ttft.popitem(last=False)
+        obs.registry().observe("serve.ttft_s", dt)
+
+    def _in_flight(self) -> int:
+        return sum(s is not None for s in self._slots)
 
     # ----------------------------------------------------------- interface
     def submit(self, prompt, max_new: int) -> int:
         rid = len(self.results) + len(self.queue) + \
             sum(s is not None for s in self._slots)
         self.queue.append(_Request(rid, jnp.asarray(prompt, jnp.int32),
-                                   max_new))
+                                   max_new, t_submit=obs.tracer().now()))
+        obs.registry().inc("serve.submitted")
+        obs.registry().set("serve.queue_depth", len(self.queue))
         return rid
 
     # ------------------------------------------------------------- helpers
@@ -251,9 +364,23 @@ class Scheduler:
             self.caches, copy.deepcopy(self._empty_row), jnp.int32(b))
 
     def _finish(self, b):
-        r = self._slots[b]["req"]
+        s = self._slots[b]
+        r = s["req"]
         self.results[r.rid] = jnp.asarray(r.generated, jnp.int32)
+        reg, tr = obs.registry(), obs.tracer()
+        now = tr.now()
+        if s.get("t_first") is not None:
+            tr.add("decode", s["t_first"], now, track=f"req{r.rid}",
+                   tokens=len(r.generated))
+            if len(r.generated) >= 2:
+                # per-token decode latency over the post-first-token run
+                reg.observe("serve.tpot_s",
+                            (now - s["t_first"]) / (len(r.generated) - 1))
+        tr.instant("finish", track=f"req{r.rid}", tokens=len(r.generated))
+        reg.inc("serve.finished")
+        reg.inc("serve.generated_tokens", len(r.generated))
         self._free_slot(b)
+        reg.set("serve.in_flight", self._in_flight())
 
     def _preempt(self, b):
         """Preempt-to-recompute: release every block, requeue with
@@ -263,9 +390,19 @@ class Scheduler:
         if r.generated:
             r.prompt = jnp.concatenate(
                 [r.prompt, jnp.asarray(r.generated, jnp.int32)])
+        reg, tr = obs.registry(), obs.tracer()
+        now = tr.now()
+        phase_t0 = s["t_first"] if s.get("t_first") is not None \
+            else s.get("t_admit", now)
+        tr.add(s["phase"], phase_t0, now, track=f"req{r.rid}",
+               preempted=True)
+        tr.instant("preempt", track=f"req{r.rid}")
         self._free_slot(b)
         self.queue.insert(0, r)
+        r.t_submit = now                 # requeue restarts the queue wait
         self.stats["preemptions"] += 1
+        reg.inc("serve.preempted")
+        reg.set("serve.in_flight", self._in_flight())
 
     def _pending_same_prefix(self, prompt_np, P) -> bool:
         """True when a live mid-prefill row will shortly trie-insert a
@@ -358,15 +495,25 @@ class Scheduler:
                              _table_row(window_ids, max(self.wb, 1)))
         self.caches = srv.restore_row(self.caches, snap, jnp.int32(b))
 
+        reg, tr = obs.registry(), obs.tracer()
+        now = tr.now()
+        tr.add("queued", r.t_submit, now, track=f"req{r.rid}")
+        reg.inc("serve.admitted")
+        if node is not None:
+            reg.observe("serve.prefix_hit_frac", depth / max(P, 1),
+                        bounds=obs.UNIT_BOUNDS)
         self._slots[b] = {"req": r, "dense_ids": dense_ids,
                           "window_ids": window_ids, "length": P,
                           "seq": self._admit_seq, "phase": "prefill",
                           "prompt_np": prompt_np, "done": depth,
-                          "insert_at": insert_at, "paused_snap": None}
+                          "insert_at": insert_at, "paused_snap": None,
+                          "t_admit": now, "t_first": None}
         self._admit_seq += 1
         self.stats["max_concurrent"] = max(
             self.stats["max_concurrent"],
             sum(s is not None for s in self._slots))
+        reg.set("serve.in_flight", self._in_flight())
+        reg.set_max("serve.max_concurrent", self._in_flight())
         return True
 
     # ------------------------------------------------------ chunked prefill
@@ -402,6 +549,7 @@ class Scheduler:
                 self.caches = srv.restore_row(self.caches, s["paused_snap"],
                                               jnp.int32(b))
                 s["paused_snap"] = None
+                obs.registry().inc("serve.resumes")
 
         N = self.max_segs
         buf = np.zeros((C,), np.int32)
@@ -417,12 +565,19 @@ class Scheduler:
             off += take
             cu[i + 1] = off
         cu[len(segs) + 1:] = off
-        logits, self.caches = srv.prefill_packed(
-            srv.params, jnp.asarray(buf)[None], self.caches,
-            jnp.asarray(cu), jnp.asarray(rows), jnp.asarray(past))
+        reg, tr = obs.registry(), obs.tracer()
+        with tr.span("prefill_chunk", track="sched", segs=len(segs),
+                     tokens=off):
+            logits, self.caches = srv.prefill_packed(
+                srv.params, jnp.asarray(buf)[None], self.caches,
+                jnp.asarray(cu), jnp.asarray(rows), jnp.asarray(past))
         self.stats["prefilled_tokens"] += off
         self.stats["prefill_chunks"] += 1
         self.stats["prefill_chunk_slots"] += C
+        reg.inc("serve.prefill_chunks")
+        reg.inc("serve.prefilled_tokens", off)
+        reg.observe("serve.chunk_packed_efficiency", off / C,
+                    bounds=obs.UNIT_BOUNDS)
 
         for i, (b, start, take) in enumerate(segs):
             s = self._slots[b]
@@ -436,12 +591,37 @@ class Scheduler:
                 tok0 = srv.sample(logits[i:i + 1], sub)
                 r = s["req"]
                 r.generated.append(int(tok0[0]))
-                if r.rid not in self.ttft and self._t0 is not None:
-                    self.ttft[r.rid] = time.monotonic() - self._t0
+                now = tr.now()
+                tr.add("prefill", s["t_admit"], now, track=f"req{r.rid}",
+                       prompt=len(s["prompt_np"]))
+                s["t_first"] = now
+                if r.rid not in self._ttft and self._t0 is not None:
+                    self._record_ttft(r.rid, time.monotonic() - self._t0)
+                self._sample_router_health(b)
                 cur = cur.at[b, 0].set(int(tok0[0]))
                 if len(r.generated) >= r.max_new or int(tok0[0]) == self.eos:
                     self._finish(b)
         return key, cur
+
+    def _sample_router_health(self, b) -> None:
+        """Every ``router_health_every``-th completed prompt on a MoSA
+        model: fetch the row snapshot its prefill just wrote and publish
+        sel_entropy / drop_rate / head_util into the registry — the serve-
+        side twin of the train loop's in-step router health (DESIGN §11)."""
+        if not self._has_mosa or not self.router_health_every:
+            return
+        reg = obs.registry()
+        if not reg.enabled:
+            return
+        self._health_seen += 1
+        if (self._health_seen - 1) % self.router_health_every:
+            return
+        s = self._slots[b]
+        snap = jax.device_get(
+            self.server.snapshot_row(self.caches, jnp.int32(b)))
+        stats = _router_health_from_snapshot(snap, len(s["prompt_np"]))
+        for k, v in stats.items():
+            reg.observe(f"serve.router.{k}", v, bounds=obs.UNIT_BOUNDS)
 
     def _insert_prefix(self, b):
         """Insert row ``b``'s shareable prefix into the trie.  Called when
@@ -476,6 +656,7 @@ class Scheduler:
                 self.caches = srv.restore_row(
                     self.caches, copy.deepcopy(self._empty_row),
                     jnp.int32(b))
+                obs.registry().inc("serve.pauses")
 
     # ------------------------------------------------------------- growth
     def _alloc_or_preempt(self, alloc_fn, n: int, b: int, live):
@@ -557,6 +738,8 @@ class Scheduler:
                         if self._admit(b, self.queue[0]) is None:
                             break               # blocks exhausted: wait
                         self.queue.pop(0)
+                        obs.registry().set("serve.queue_depth",
+                                           len(self.queue))
                 live_pre, live_dec = by_phase("prefill"), by_phase("decode")
                 if not live_pre and not live_dec:
                     if steps >= max_steps:
@@ -607,10 +790,16 @@ class Scheduler:
                     continue
 
                 key, sub = jax.random.split(key)
-                toks, self.caches = srv.decode_many(srv.params, cur,
-                                                    self.caches, sub, n)
-                steps += n
-                host = jax.device_get(toks)
+                reg, tr = obs.registry(), obs.tracer()
+                with tr.span("decode_chunk", track="sched",
+                             rows=len(live_dec), n=n):
+                    toks, self.caches = srv.decode_many(srv.params, cur,
+                                                        self.caches, sub, n)
+                    steps += n
+                    host = jax.device_get(toks)
+                reg.inc("serve.decode_chunks")
+                reg.inc("serve.decode_tokens", n * len(live_dec))
+                reg.observe("serve.decode_batch", len(live_dec))
                 cur = toks[:, -1:]
                 for b in live_dec:
                     s = self._slots[b]
@@ -624,4 +813,10 @@ class Scheduler:
                                 len(r.generated) >= r.max_new:
                             self._finish(b)
                             break
+        reg = obs.registry()
+        if reg.enabled:
+            dt = max(time.monotonic() - self._t0, 1e-9)
+            reg.set("serve.tokens_per_s",
+                    reg.counter("serve.generated_tokens").value / dt)
+        obs.dump(self.metrics_path, self.trace_path, tag="scheduler")
         return dict(self.results)

@@ -25,6 +25,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.checkpoint import checkpoint as ckpt_lib
 from repro.configs.base import ModelConfig, get_config
 from repro.data.pipeline import PackedLMDataset, Prefetcher, SyntheticCorpus
@@ -65,6 +66,10 @@ class TrainConfig:
     remat: Optional[str] = None          # none | full | dots_saveable | mosa
     mosa_impl: Optional[str] = None      # einsum | pallas (fused VJP kernels)
     router_health: bool = True           # log router telemetry at log_every
+    # --- observability (DESIGN §11) ---
+    health_in_step: bool = True          # health as train-step aux outputs
+    metrics_path: Optional[str] = None   # obs snapshot on run() exit
+    trace_path: Optional[str] = None     # Chrome-trace JSON on run() exit
 
 
 def _apply_overrides(model_cfg: ModelConfig, cfg: TrainConfig) -> ModelConfig:
@@ -104,8 +109,15 @@ class Trainer:
                                       self.optimizer, shapes)
         self.batch_sh = shd.batch_sharding(self.mesh, cfg.rule_set)
 
+        # In-step router health (DESIGN §11): the stats ride the jitted
+        # step's metrics instead of costing a second forward per log
+        # interval; ``health_in_step=False`` falls back to the standalone
+        # ``router_health`` forward at log time.
+        self._health_in_step = bool(cfg.router_health and
+                                    cfg.health_in_step and self._has_router)
         step_fn = make_train_step(self.model, self.optimizer,
-                                  microbatches=cfg.microbatch)
+                                  microbatches=cfg.microbatch,
+                                  health=self._health_in_step)
         self.train_step = jax.jit(
             step_fn,
             in_shardings=(self.param_sh, self.opt_sh, self.scalar_sh,
@@ -174,6 +186,26 @@ class Trainer:
                 for k, v in self._health_fn(params,
                                             batch["tokens"]).items()}
 
+    def _publish(self, i: int, dt: float, metrics: dict) -> None:
+        """Route step telemetry through the obs registry (DESIGN §11) —
+        the registry twin of the history/print logging, fed from the SAME
+        already-host-synced floats (device-metrics pattern: no extra
+        transfer)."""
+        reg = obs.registry()
+        if not reg.enabled:
+            return
+        reg.set("train.step", i)
+        reg.observe("train.step_time_s", dt)
+        reg.set("train.tokens_per_s",
+                metrics.get("tokens", 0.0) / max(dt, 1e-9))
+        for k in ("loss", "ce", "ppl", "aux", "grad_norm"):
+            if k in metrics:
+                reg.set(f"train.{k}", metrics[k])
+        for k in ("sel_entropy", "drop_rate", "head_util"):
+            if k in metrics:
+                reg.observe(f"train.router.{k}", metrics[k],
+                            bounds=obs.UNIT_BOUNDS)
+
     # ------------------------------------------------------------------ train
     def run(self, steps: Optional[int] = None, install_signals: bool = True):
         cfg = self.cfg
@@ -192,17 +224,23 @@ class Trainer:
                     data_step, batch = prefetch.next()
                     batch = {k: jnp.asarray(v) for k, v in batch.items()}
                     t0 = time.perf_counter()
-                    params, opt_state, step, metrics = self.train_step(
-                        params, opt_state, step, batch)
-                    metrics = {k: float(v) for k, v in metrics.items()}
+                    with obs.tracer().span("train_step", track="train",
+                                           step=i):
+                        params, opt_state, step, metrics = self.train_step(
+                            params, opt_state, step, batch)
+                        # the ONE host sync of the step — in-step health
+                        # stats ride it as extra metric keys (DESIGN §11)
+                        metrics = {k: float(v) for k, v in metrics.items()}
                     dt = time.perf_counter() - t0
                     straggler = self.monitor.record(i, dt)
                     if hb:
                         hb.beat(i)
                     if i % cfg.log_every == 0 or i == steps - 1:
-                        if cfg.router_health:
+                        if cfg.router_health and not self._health_in_step:
                             metrics.update(self.router_health(params, batch))
                         history.append({"step": i, "dt": dt, **metrics})
+                    self._publish(i, dt, metrics)
+                    if i % cfg.log_every == 0 or i == steps - 1:
                         health = (f" ent {metrics['sel_entropy']:.2f} "
                                   f"drop {metrics['drop_rate']:.2f}"
                                   if "sel_entropy" in metrics else "")
@@ -228,4 +266,5 @@ class Trainer:
                 checkpointer.wait()
             if self.preempt:
                 self.preempt.restore()
+            obs.dump(cfg.metrics_path, cfg.trace_path, tag="trainer")
         return params, opt_state, history

@@ -62,14 +62,20 @@ def microbatch_split(batch, microbatches: int):
     return jax.tree.map(one, batch)
 
 
-def make_train_step(model, optimizer, *, microbatches: int = 1):
+def make_train_step(model, optimizer, *, microbatches: int = 1,
+                    health: bool = False):
     """Build ``(params, opt_state, step, batch) -> (params, opt_state,
     step+1, metrics)``.  ``microbatches > 1`` accumulates gradients over
-    equal splits of the batch inside one compiled step."""
+    equal splits of the batch inside one compiled step.
+
+    ``health=True``: the loss runs ``with_health`` and the router-health
+    stats ride the step's metrics as extra aux outputs — fetched by the
+    caller's existing post-step host sync, never a second forward or an
+    extra device round-trip (DESIGN §11 device-metrics pattern)."""
     from repro.optim.optimizer import apply_updates
 
     def loss_fn(params, batch):
-        return model.loss(params, batch)
+        return model.loss(params, batch, with_health=health)
 
     def grads_of(params, batch):
         if microbatches == 1:
@@ -79,9 +85,12 @@ def make_train_step(model, optimizer, *, microbatches: int = 1):
 
         mb = microbatch_split(batch, microbatches)
         g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        m0 = {"ce": jnp.zeros((), jnp.float32),
-              "aux": jnp.zeros((), jnp.float32),
-              "tokens": jnp.zeros((), jnp.float32)}
+        # Accumulator structure follows whatever metrics the loss returns
+        # (ce/aux/ppl/tokens, plus router health under ``health``) — shapes
+        # come from eval_shape so new metric keys never touch this code.
+        mb1 = jax.tree.map(lambda v: v[0], mb)
+        m_shapes = jax.eval_shape(lambda p, b: loss_fn(p, b)[1], params, mb1)
+        m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m_shapes)
 
         def body(carry, mbatch):
             g_acc, l_acc, m_acc = carry
@@ -89,9 +98,7 @@ def make_train_step(model, optimizer, *, microbatches: int = 1):
                 loss_fn, has_aux=True)(params, mbatch)
             g_acc = jax.tree.map(
                 lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-            m_acc = {"ce": m_acc["ce"] + met["ce"],
-                     "aux": m_acc["aux"] + met["aux"],
-                     "tokens": m_acc["tokens"] + met["tokens"]}
+            m_acc = jax.tree.map(jnp.add, m_acc, met)
             return (g_acc, l_acc + l, m_acc), None
 
         (g_acc, l_acc, m_acc), _ = jax.lax.scan(
@@ -99,9 +106,11 @@ def make_train_step(model, optimizer, *, microbatches: int = 1):
         inv = 1.0 / microbatches
         grads = jax.tree.map(lambda g, p: (g * inv).astype(p.dtype),
                              g_acc, params)
-        ce = m_acc["ce"] * inv
-        metrics = {"ce": ce, "aux": m_acc["aux"] * inv,
-                   "ppl": jnp.exp(ce), "tokens": m_acc["tokens"]}
+        # Means over microbatches — except tokens (a count, summed) and ppl
+        # (recomputed from the mean ce: exp of mean, not mean of exp).
+        metrics = {k: (v if k == "tokens" else v * inv)
+                   for k, v in m_acc.items()}
+        metrics["ppl"] = jnp.exp(metrics["ce"])
         return grads, l_acc * inv, metrics
 
     def train_step(params, opt_state, step, batch):
