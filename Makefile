@@ -5,7 +5,7 @@ PY ?= python
 export PYTHONPATH := src
 
 .PHONY: test collect lint smoke test-paged test-train test-property \
-    test-blockchoice test-obs bench-smoke bench-train bench-check ci
+    test-blockchoice test-obs test-slo bench-smoke bench-train bench-check ci
 
 # Tier-1 command from ROADMAP.md
 test:
@@ -91,6 +91,24 @@ test-obs:
 	fi
 	@rm -f .obs_report.txt
 
+# SLO/load-harness suite (DESIGN §12): labeled series + snapshot merge
+# (incl. the K-process order-independence property), prometheus label
+# round-trip, tracer drop accounting, seeded load generators, the timed
+# Scheduler under open/closed-loop traffic, shedding, and the
+# Scheduler.records == records_from_spans parity.  0-skip gated like
+# test-obs.  CPU-pinned (libtpu probe hangs).
+test-slo:
+	JAX_PLATFORMS=cpu $(PY) -m pytest -q -rs tests/test_slo.py \
+	    > .slo_report.txt 2>&1 \
+	    || { cat .slo_report.txt; rm -f .slo_report.txt; exit 1; }
+	@cat .slo_report.txt
+	@if grep -qE "[0-9]+ skipped" .slo_report.txt; then \
+	    rm -f .slo_report.txt; \
+	    echo "FAIL: SLO/load-harness tests were SKIPPED"; \
+	    exit 1; \
+	fi
+	@rm -f .slo_report.txt
+
 # Decode-path perf trajectory: refreshes the TRACKED BENCH_serve.json
 # (fused vs per-token decode tok/s, MoSA vs dense KV bytes, and the paged
 # family: paged vs contiguous tok/s + capacity at fixed budget; CPU, tiny
@@ -107,8 +125,9 @@ bench-train:
 # Fails if the newest trajectory entry regresses throughput by >10%
 # against the previous entry (serve: fused decode variants; train: the
 # compiled dense / mosa_ref step paths), if packed prefill efficiency
-# drops under its floor, or if obs_overhead exceeds the 2% ceiling
-# (DESIGN §11).
+# drops under its floor, if obs_overhead exceeds the 2% ceiling
+# (DESIGN §11), or if the SLO overload sweep loses its graceful-
+# degradation shape (DESIGN §12).
 bench-check:
 	$(PY) -m benchmarks.serve_bench --check --out BENCH_serve.json
 	$(PY) -m benchmarks.train_bench --check --out BENCH_train.json
@@ -117,4 +136,4 @@ bench-check:
 # regenerated artifacts, so what this ci run leaves behind is what passed;
 # bench-check then gates the refreshed trajectories.
 ci: lint collect test-paged test-train test-property test-blockchoice \
-    test-obs bench-smoke bench-train bench-check test
+    test-obs test-slo bench-smoke bench-train bench-check test

@@ -24,10 +24,21 @@ registry+tracer on vs off, interleaved warm passes) and emits untracked
 ``BENCH_serve.metrics.jsonl`` (registry snapshot time series) artifacts,
 self-checked for full request lifecycle coverage.
 
+The SLO family (DESIGN §12) closes the loop on *service*, not capacity:
+a seeded closed-loop calibration measures the sustainable request rate,
+then an open-loop Poisson sweep offers 0.5x/1x/2x that rate (two-tenant
+mix, admission-controlled via ``max_queue``) through the timed Scheduler
+and records goodput + TTFT/TPOT tails per rate.  SLO thresholds are
+self-relative (3x the p90 of the uncontended pass), so — like the calib
+gate — machine drift cannot flip the verdict.  ``--check`` gates that
+overload degrades goodput *gracefully*: requests shed/preempt rather
+than every admitted request's TTFT collapsing together.
+
 ``BENCH_serve.json`` carries a ``trajectory`` list (one summary entry per
 refresh); ``--check`` compares the two most recent entries and exits
 nonzero on a >10% fused-throughput regression (``make bench-check``),
-a packed-efficiency floor, and the <=2% obs-overhead ceiling.
+a packed-efficiency floor, the <=2% obs-overhead ceiling, and the
+SLO-family overload gates.
 Entries carry a machine-speed calibration (``benchmarks.calib``) and the
 gate normalizes the baseline by it, so cross-refresh machine drift —
 measured at +-20% on this shared box, above the gate tolerance — cannot
@@ -307,11 +318,24 @@ def _check_obs_artifacts(metrics_path: str, trace_path: str, rids) -> None:
         f"no prefix-cache counters in {sorted(snap['counters'])}"
 
 
+def _paged_server(max_len: int, d_model: int, batch: int) -> Server:
+    """The paged Table-2 MoSA server the mixed and SLO families share —
+    ONE instance, so the second family rides the first's warm jit caches
+    instead of recompiling identical programs."""
+    cfg = _shrink(get_config("mosa-paper", preset="smoke", variant="mosa",
+                             **TABLE2_RECIPE), d_model)
+    nb = -(-max_len // 16)
+    return Server(cfg, batch=batch, max_len=max_len,
+                  paged=PagedConfig(block_size=16, num_blocks=batch * nb,
+                                    num_window_blocks=4 * batch))
+
+
 def bench_mixed(gen: int, max_len: int, d_model: int,
                 chunk_tokens: int = 32, batch: int = 8,
                 obs_iters: int = 6,
                 metrics_path: str = "BENCH_serve.metrics.jsonl",
-                trace_path: str = "BENCH_serve.trace.json") -> dict:
+                trace_path: str = "BENCH_serve.trace.json",
+                server: Server = None) -> dict:
     """Mixed-length family (ISSUE 6): the chunked packed-prefill scheduler
     over a length-skewed arrival mix.  Reports TTFT p50/p99 (seconds from
     run start to each request's first sampled token) and the packed-token
@@ -335,13 +359,10 @@ def bench_mixed(gen: int, max_len: int, d_model: int,
     from repro import obs
     from repro.serve.scheduler import Scheduler
 
-    cfg = _shrink(get_config("mosa-paper", preset="smoke", variant="mosa",
-                             **TABLE2_RECIPE), d_model)
-    nb = -(-max_len // 16)
-    server = Server(cfg, batch=batch, max_len=max_len,
-                    paged=PagedConfig(block_size=16,
-                                      num_blocks=batch * nb,
-                                      num_window_blocks=4 * batch))
+    if server is None:
+        server = _paged_server(max_len, d_model, batch)
+    cfg = server.model_cfg
+    batch = server.batch
     key = jax.random.PRNGKey(2)
     prompts = [jax.random.randint(jax.random.fold_in(key, i), (P,), 2,
                                   cfg.vocab)
@@ -411,6 +432,117 @@ def bench_mixed(gen: int, max_len: int, d_model: int,
     return out
 
 
+def bench_slo(server: Server, gen: int = 12, n_req: int = 24,
+              seed: int = 7, rates=(0.5, 1.0, 2.0), max_queue: int = 4,
+              chunk_tokens: int = 32) -> dict:
+    """SLO/goodput family (DESIGN §12): sweep arrival rate through
+    saturation and measure what fraction of OFFERED requests the
+    scheduler serves within SLO.
+
+    Three design choices make the numbers meaningful on a shared box:
+
+      * the sustainable rate is measured, not assumed — a closed-loop
+        pass at full concurrency (self-throttling, so it reads capacity,
+        never overload) calibrates the req/s the open-loop sweep is
+        scaled against, so "2x" is 2x THIS machine's saturation point;
+      * SLO thresholds are self-relative — 3x the p90 TTFT/TPOT of the
+        sweep's own uncontended (0.5x) pass — so machine drift between
+        refreshes rescales the thresholds along with the latencies;
+      * one workload seed across all rates — the rng draws interarrivals
+        before request bodies, so every rate offers the IDENTICAL request
+        population on a faster or slower clock.
+
+    ``max_queue`` bounds admission: overload sheds excess arrivals
+    (``outcome="shed"``, counted against goodput) instead of letting the
+    queue destroy every admitted request's TTFT — the graceful-
+    degradation shape ``check_regression`` gates."""
+    from repro import obs
+    from repro.obs.slo import SLOSpec, evaluate
+    from repro.serve.loadgen import (Arrival, ClosedLoopSource,
+                                     OpenLoopSource, TenantSpec,
+                                     poisson_workload)
+    from repro.serve.scheduler import Scheduler
+
+    vocab = server.model_cfg.vocab
+    batch = server.batch
+    tenants = (TenantSpec("gold", weight=1.0, prompt_len=(8, 24),
+                          max_new=(4, gen)),
+               TenantSpec("free", weight=2.0, prompt_len=(16, 48),
+                          max_new=(4, gen)))
+    obs.set_enabled(True)
+
+    def run_source(source, mq=None):
+        sched = Scheduler(server, chunk=8, chunk_tokens=chunk_tokens,
+                          max_prefill_segs=batch, prefix_cache=False,
+                          max_queue=mq)
+        t0 = time.perf_counter()
+        sched.run(max_steps=100_000, source=source)
+        return sched, time.perf_counter() - t0
+
+    # Calibration: closed loop holding ``batch`` requests outstanding,
+    # over the SWEEP'S OWN request population (arrival times ignored) —
+    # run twice, first pass discarded.  The warm pass retires every
+    # one-time prefill/decode-chunk compile this exact population
+    # triggers; without it those compiles land in the timed passes,
+    # inflating the calibration (so "2x" never saturates) or the 0.5x
+    # pass (queue backup -> sheds at HALF the sustainable rate, poisoning
+    # the SLO thresholds it defines).  Both failure shapes were observed.
+    wl = poisson_workload(1.0, n_req, seed + 1, vocab, tenants)
+    run_source(ClosedLoopSource(wl, batch))        # warm pass: discarded
+    cal, cal_dt = run_source(ClosedLoopSource(wl, batch))
+    n_fin = sum(1 for r in cal.records.values()
+                if r["outcome"] == "finished")
+    sustainable = n_fin / max(cal_dt, 1e-9)
+
+    # Open-loop Poisson sweep through saturation (arrivals keep coming no
+    # matter how far behind the server falls — the overload-honest mode).
+    # ``wl`` was drawn at rate 1.0 req/s; rescaling its clock offers the
+    # IDENTICAL request population at every rate.
+    passes = {}
+    for mult in rates:
+        rate = max(sustainable * mult, 1e-3)
+        arrivals = [Arrival(a.t / rate, a.tenant, a.prompt, a.max_new)
+                    for a in wl]
+        sched, dt = run_source(OpenLoopSource(arrivals), mq=max_queue)
+        passes[mult] = (list(sched.records.values()), dt,
+                        sched.stats["preemptions"])
+
+    lo = min(passes)
+    wide = evaluate(passes[lo][0], SLOSpec(ttft_s=float("inf")))
+    ttft_slo = max(3.0 * wide["ttft"].get("p90", 0.0), 1e-3)
+    tpot_slo = (3.0 * wide["tpot"]["p90"]
+                if wide["tpot"]["count"] else None)
+    spec = SLOSpec(ttft_s=ttft_slo, tpot_s=tpot_slo, name=f"3x-p90@{lo}x")
+
+    out = {"sustainable_req_s": round(sustainable, 3),
+           "n_requests": n_req, "seed": seed, "max_queue": max_queue,
+           "tenants": [t.name for t in tenants],
+           "spec": {"name": spec.name, "ttft_s": round(ttft_slo, 4),
+                    "tpot_s": (round(tpot_slo, 5)
+                               if tpot_slo is not None else None)},
+           "rates": {}}
+    for mult in sorted(passes):
+        recs, dt, npre = passes[mult]
+        ev = evaluate(recs, spec)
+        out["rates"][f"{mult}x"] = {
+            "offered_req_s": round(sustainable * mult, 3),
+            "duration_s": round(dt, 3),
+            "total": ev["total"], "finished": ev["finished"],
+            "shed": ev["shed"], "preempted": npre,
+            "goodput": round(ev["goodput"], 4),
+            "served_goodput": round(ev["served_goodput"], 4),
+            "ttft_p50": round(ev["ttft"].get("p50", 0.0), 4),
+            "ttft_p99": round(ev["ttft"].get("p99", 0.0), 4),
+            "tpot_p50": round(ev["tpot"].get("p50", 0.0), 5),
+            "tpot_p99": round(ev["tpot"].get("p99", 0.0), 5),
+            "per_tenant": {
+                t: {"total": s["total"], "shed": s["shed"],
+                    "goodput": round(s["goodput"], 4)}
+                for t, s in ev.get("per_tenant", {}).items()},
+        }
+    return out
+
+
 def run_bench(batch: int = 2, prompt_len: int = 16, gen: int = 64,
               max_len: int = 256, iters: int = 5,
               variants=("dense", "mosa"), d_model: int = 128,
@@ -440,9 +572,12 @@ def run_bench(batch: int = 2, prompt_len: int = 16, gen: int = 64,
     # packing), not decode throughput — the families above cover that.
     base = out_path[:-len(".json")] if out_path.endswith(".json") else \
         out_path
+    server = _paged_server(max_len, d_model, batch=8)
     res["mixed"] = bench_mixed(gen=8, max_len=max_len, d_model=d_model,
                                metrics_path=f"{base}.metrics.jsonl",
-                               trace_path=f"{base}.trace.json")
+                               trace_path=f"{base}.trace.json",
+                               server=server)
+    res["slo"] = bench_slo(server)
     return res
 
 
@@ -468,6 +603,18 @@ def _append_trajectory(res: dict, prev: dict) -> None:
         entry["packed_efficiency"] = res["mixed"]["packed_efficiency"]
         if "obs_overhead" in res["mixed"]:
             entry["obs_overhead"] = res["mixed"]["obs_overhead"]
+    if "slo" in res:
+        rt = res["slo"]["rates"]
+        keys = sorted(rt, key=lambda k: float(k[:-1]))
+        lo_k, hi_k = keys[0], keys[-1]
+        entry["slo"] = {
+            "rates": len(keys),
+            "goodput_low": rt[lo_k]["goodput"],
+            "goodput_high": rt[hi_k]["goodput"],
+            "shed_preempt_high": rt[hi_k]["shed"] + rt[hi_k]["preempted"],
+            "ttft_p99_high": rt[hi_k]["ttft_p99"],
+            "ttft_slo": res["slo"]["spec"]["ttft_s"],
+        }
     traj.append(entry)
     res["trajectory"] = traj[-12:]
 
@@ -509,6 +656,43 @@ def check_regression(path: str, tol: float = 0.10) -> int:
                   f"> 1.02 ceiling")
             return 1
         print(f"bench-check OK(serve): obs_overhead {ov} <= 1.02")
+    # SLO family (DESIGN §12): overload must degrade goodput GRACEFULLY —
+    # the sweep saturates (sheds/preempts appear), goodput at the
+    # uncontended rate stays high, and admitted work's TTFT is protected
+    # by admission control instead of collapsing with the queue.  All
+    # thresholds are self-relative to the same refresh's measurements, so
+    # machine drift cannot flip them.
+    if traj and "slo" in traj[-1]:
+        sl = traj[-1]["slo"]
+        fails = []
+        if sl["rates"] < 3:
+            fails.append(f"only {sl['rates']} arrival rates swept (< 3)")
+        if sl["goodput_low"] < 0.75:
+            fails.append(f"goodput {sl['goodput_low']} < 0.75 at the "
+                         f"uncontended (lowest) rate")
+        # Margin = one request quantum (goodput moves in 1/n_req ~ 0.04
+        # steps; a single TPOT outlier at the low rate shifts it that
+        # much): overload may not look BETTER than uncontended.
+        if sl["goodput_high"] > sl["goodput_low"] + 0.05:
+            fails.append(f"goodput at overload ({sl['goodput_high']}) "
+                         f"exceeds the uncontended rate "
+                         f"({sl['goodput_low']}) — the SLO thresholds "
+                         f"are not binding")
+        if sl["shed_preempt_high"] <= 0:
+            fails.append("overload produced no sheds or preemptions — "
+                         "the sweep never saturated the server")
+        if sl["ttft_p99_high"] > 10 * sl["ttft_slo"]:
+            fails.append(f"ttft_p99 {sl['ttft_p99_high']}s at overload "
+                         f"> 10x the SLO ({sl['ttft_slo']}s) — admission "
+                         f"control is not protecting admitted work")
+        if fails:
+            for msg in fails:
+                print(f"bench-check FAIL(serve/slo): {msg}")
+            return 1
+        print(f"bench-check OK(serve/slo): goodput {sl['goodput_low']} "
+              f"-> {sl['goodput_high']} across {sl['rates']} rates; "
+              f"overload shed+preempt={sl['shed_preempt_high']}; "
+              f"ttft_p99 {sl['ttft_p99_high']}s <= 10x slo")
     return check_gate(traj, _gated_values, tol, "serve")
 
 
@@ -566,6 +750,13 @@ def main(argv=None):
     print(f"obs/overhead,0.0,on_over_off={mx['obs_overhead']};"
           f"trace={mx['obs_artifacts']['trace']};"
           f"metrics={mx['obs_artifacts']['metrics']}")
+    sl = res["slo"]
+    rate_keys = sorted(sl["rates"], key=lambda k: float(k[:-1]))
+    print("slo/goodput,0.0," +
+          ";".join(f"{k}={sl['rates'][k]['goodput']}"
+                   for k in rate_keys) +
+          f";sustainable={sl['sustainable_req_s']}req/s;"
+          f"ttft_slo={sl['spec']['ttft_s']}s")
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2, sort_keys=True)
         f.write("\n")

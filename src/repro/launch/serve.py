@@ -577,6 +577,35 @@ class RequestPool:
         return results
 
 
+def _load_run(cfg, args):
+    """``--load-rate``: seeded open-loop traffic through the timed paged
+    Scheduler, SLO/goodput summary on stdout (DESIGN §12)."""
+    import json
+
+    from repro.obs.slo import SLOSpec, evaluate
+    from repro.serve.loadgen import (OpenLoopSource, bursty_workload,
+                                     poisson_workload)
+
+    nb = -(-args.max_len // 16)
+    server = Server(cfg, batch=args.batch, max_len=args.max_len,
+                    paged=PagedConfig(block_size=16,
+                                      num_blocks=args.batch * nb,
+                                      num_window_blocks=4 * args.batch))
+    build = bursty_workload if args.bursty else poisson_workload
+    wl = build(args.load_rate, args.load_n, args.load_seed, cfg.vocab)
+    sched = Scheduler(server, max_queue=args.max_queue or None,
+                      metrics_path=args.metrics_path,
+                      trace_path=args.trace_path)
+    t0 = time.perf_counter()
+    sched.run(max_steps=100_000, source=OpenLoopSource(wl))
+    dt = time.perf_counter() - t0
+    spec = SLOSpec(ttft_s=args.ttft_slo, tpot_s=args.tpot_slo or None)
+    ev = evaluate(list(sched.records.values()), spec)
+    ev["offered_req_s"] = args.load_rate
+    ev["duration_s"] = round(dt, 3)
+    print(json.dumps(ev, indent=2, sort_keys=True))
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="mosa-paper")
@@ -596,10 +625,29 @@ def main(argv=None):
                         "(.jsonl appends; DESIGN §11)")
     p.add_argument("--trace-path", default=None,
                    help="write a Chrome-trace JSON of the run here on exit")
+    p.add_argument("--load-rate", type=float, default=0.0,
+                   help="instead of one batch generate, drive the timed "
+                        "Scheduler with a seeded open-loop arrival stream "
+                        "at this rate (req/s) and print the SLO/goodput "
+                        "summary (DESIGN §12)")
+    p.add_argument("--load-n", type=int, default=32,
+                   help="requests in the load run")
+    p.add_argument("--load-seed", type=int, default=0)
+    p.add_argument("--bursty", action="store_true",
+                   help="Gamma (CV=3) interarrivals instead of Poisson")
+    p.add_argument("--max-queue", type=int, default=0,
+                   help="shed arrivals past this queue depth "
+                        "(0 = never shed)")
+    p.add_argument("--ttft-slo", type=float, default=0.5,
+                   help="TTFT SLO in seconds for the load-run goodput")
+    p.add_argument("--tpot-slo", type=float, default=0.0,
+                   help="TPOT SLO in seconds (0 = no TPOT obligation)")
     args = p.parse_args(argv)
 
     akw = {"variant": args.variant} if args.variant else {}
     cfg = get_config(args.arch, preset=args.preset, **akw)
+    if args.load_rate > 0:
+        return _load_run(cfg, args)
     server = Server(cfg, batch=args.batch, max_len=args.max_len)
     key = jax.random.PRNGKey(0)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 2,

@@ -1,5 +1,5 @@
-"""repro.obs — unified observability: metrics, tracing, exporters
-(DESIGN §11).
+"""repro.obs — unified observability: metrics, tracing, exporters, SLOs
+(DESIGN §11–12).
 
 Pure-Python, jax-free at import time (jax is only touched inside the
 optional profiler passthrough), so any module — including repro.core,
@@ -7,16 +7,24 @@ which must never pull Pallas — can import it.
 
     from repro import obs
     obs.registry().observe("serve.ttft_s", dt)
+    obs.registry().inc("serve.finished", tenant="a")   # labeled series
+    with obs.registry().timer("train.step_time_s") as t:
+        ...
     with obs.tracer().span("prefill_chunk", track="sched", segs=3):
         ...
     obs.dump(metrics_path="m.jsonl", trace_path="trace.json")
+    obs.merge_snapshot_files(["r0.jsonl", "r1.jsonl"])  # N replicas -> 1
     obs.set_enabled(False)      # all of the above become no-ops
 """
 
-from repro.obs.export import (dump, prometheus_text, write_metrics_json,
+from repro.obs.export import (dump, merge_snapshot_files, prometheus_text,
+                              read_last_snapshot, write_metrics_json,
                               write_metrics_jsonl, write_prometheus)
 from repro.obs.metrics import (DEFAULT_BOUNDS, UNIT_BOUNDS, Counter, Gauge,
-                               Histogram, Registry, publish, registry)
+                               Histogram, Registry, escape_label_value,
+                               merge_snapshots, publish, registry,
+                               series_key)
+from repro.obs.slo import SLOSpec, evaluate, records_from_spans
 from repro.obs.tracing import (Span, Tracer, start_profiler, stop_profiler,
                                tracer)
 
@@ -33,9 +41,11 @@ def enabled() -> bool:
 
 
 __all__ = [
-    "Counter", "Gauge", "Histogram", "Registry", "Span", "Tracer",
-    "DEFAULT_BOUNDS", "UNIT_BOUNDS",
-    "dump", "enabled", "prometheus_text", "publish", "registry",
+    "Counter", "Gauge", "Histogram", "Registry", "SLOSpec", "Span",
+    "Tracer", "DEFAULT_BOUNDS", "UNIT_BOUNDS",
+    "dump", "enabled", "escape_label_value", "evaluate",
+    "merge_snapshot_files", "merge_snapshots", "prometheus_text", "publish",
+    "read_last_snapshot", "records_from_spans", "registry", "series_key",
     "set_enabled", "start_profiler", "stop_profiler", "tracer",
     "write_metrics_json", "write_metrics_jsonl", "write_prometheus",
 ]

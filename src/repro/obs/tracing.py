@@ -54,6 +54,20 @@ class Tracer:
         self.annotate = False      # jax.profiler.TraceAnnotation passthrough
         self._epoch = time.perf_counter()
         self._spans: deque = deque(maxlen=capacity)
+        self._dropped = 0          # spans overwritten by the ring (§12)
+
+    def _push(self, span: "Span") -> None:
+        """Ring append with drop accounting: a full deque silently evicts
+        its oldest span, which used to be invisible — exporters now surface
+        the count (``dropped_spans``) so a truncated trace is never
+        mistaken for a complete one."""
+        if len(self._spans) == self._spans.maxlen:
+            self._dropped += 1
+        self._spans.append(span)
+
+    @property
+    def dropped_spans(self) -> int:
+        return self._dropped
 
     # ------------------------------------------------------------ recording
     def now(self) -> float:
@@ -72,7 +86,7 @@ class Tracer:
         try:
             yield
         finally:
-            self._spans.append(Span(name, t0, self.now() - t0, track, args))
+            self._push(Span(name, t0, self.now() - t0, track, args))
             if ann is not None:
                 ann.__exit__(None, None, None)
 
@@ -80,12 +94,12 @@ class Tracer:
             track: str = "main", **args) -> None:
         """Record a completed interval from saved ``now()`` timestamps."""
         if self.enabled:
-            self._spans.append(Span(name, t0, max(t1 - t0, 0.0), track, args))
+            self._push(Span(name, t0, max(t1 - t0, 0.0), track, args))
 
     def instant(self, name: str, track: str = "main", **args) -> None:
         """Zero-duration marker (finish, preempt, evict...)."""
         if self.enabled:
-            self._spans.append(Span(name, self.now(), 0.0, track, args))
+            self._push(Span(name, self.now(), 0.0, track, args))
 
     def _annotation(self, name: str):
         if not self.annotate:
@@ -105,6 +119,7 @@ class Tracer:
 
     def reset(self) -> None:
         self._spans.clear()
+        self._dropped = 0
         self._epoch = time.perf_counter()
 
     # ------------------------------------------------------------ exporters
@@ -122,7 +137,8 @@ class Tracer:
             events.append(ev)
         meta = [{"name": "thread_name", "ph": "M", "pid": 0, "tid": tid,
                  "args": {"name": track}} for track, tid in tids.items()]
-        return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+        return {"traceEvents": meta + events, "displayTimeUnit": "ms",
+                "otherData": {"dropped_spans": self._dropped}}
 
     def export_chrome(self, path: str) -> None:
         with open(path, "w") as f:

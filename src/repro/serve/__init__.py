@@ -14,7 +14,10 @@ Layered like the serving stacks of production attention engines:
   * ``prefix_cache``   — hash-trie over prompt token blocks mapping shared
                          prefixes to shared physical blocks;
   * ``scheduler``      — block-granular admission / preempt-to-recompute
-                         continuous batching over a paged ``Server``.
+                         continuous batching over a paged ``Server``;
+  * ``loadgen``        — seeded open-loop (Poisson/bursty) and closed-loop
+                         arrival streams for the scheduler's timed mode
+                         (DESIGN §12).
 
 Layering: nothing in this package imports ``repro.launch`` (the scheduler
 takes the server as a duck-typed argument), so ``repro.launch.serve`` can
@@ -32,6 +35,13 @@ _EXPORTS = {
     "paged_attention_decode": "paged_attention",
     "PrefixCache": "prefix_cache",
     "Scheduler": "scheduler",
+    "Arrival": "loadgen",
+    "TenantSpec": "loadgen",
+    "OpenLoopSource": "loadgen",
+    "ClosedLoopSource": "loadgen",
+    "poisson_workload": "loadgen",
+    "bursty_workload": "loadgen",
+    "closed_workload": "loadgen",
 }
 
 __all__ = list(_EXPORTS)

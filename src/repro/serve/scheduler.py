@@ -90,6 +90,10 @@ from repro.serve.prefix_cache import PrefixCache
 # histogram is the real record; this keeps only the most recent rids.
 TTFT_KEEP = 4096
 
+# Bounded retention for per-request SLO records (DESIGN §12): goodput is
+# computed over a load run's worth of requests, not unbounded history.
+RECORDS_KEEP = 8192
+
 
 @dataclasses.dataclass
 class _Request:
@@ -98,6 +102,9 @@ class _Request:
     max_new: int
     generated: list = dataclasses.field(default_factory=list)
     t_submit: float = 0.0        # tracer clock at submit/requeue
+    t_arrival: float = 0.0       # tracer clock at ORIGINAL submit — unlike
+    tenant: str = ""             # t_submit it survives preemption, so TTFT
+    ttft: Optional[float] = None  # stays arrival-based (§12)
 
 
 def _cache_leaves(caches):
@@ -232,7 +239,8 @@ class Scheduler:
                  prefix_cache: bool = True,
                  metrics_path: Optional[str] = None,
                  trace_path: Optional[str] = None,
-                 router_health_every: int = 4):
+                 router_health_every: int = 4,
+                 max_queue: Optional[int] = None):
         """``chunk``: decode tokens per fused decode dispatch.
         ``chunk_tokens``: the packed prefill chunk budget C — every prefill
         dispatch processes exactly C token slots (ONE compiled program);
@@ -244,7 +252,14 @@ class Scheduler:
         are written when ``run()`` drains.  ``router_health_every``: every
         Nth completed prompt on a MoSA model gets its router health
         (sel_entropy / drop_rate / head_util) sampled from the prefill's
-        row snapshot — 0 disables the sampling."""
+        row snapshot — 0 disables the sampling.
+
+        ``max_queue`` (DESIGN §12): admission-control depth — a submit
+        arriving with ``max_queue`` requests already waiting is SHED
+        (empty result, ``serve.shed`` counter, ``outcome="shed"`` record)
+        instead of queued.  Shedding is what keeps goodput for admitted
+        work through overload: without it every queued request's TTFT
+        degrades together.  ``None`` (default) never sheds."""
         paged = server.paged
         assert paged is not None and paged.num_blocks > 0, (
             "Scheduler needs Server(paged=PagedConfig(num_blocks=...)) with "
@@ -290,7 +305,10 @@ class Scheduler:
         # rid -> TTFT seconds, bounded to the TTFT_KEEP newest rids; the
         # obs histogram serve.ttft_s is the unbounded-safe record.
         self._ttft: OrderedDict = OrderedDict()
-        self._t0 = None
+        # rid -> per-request SLO record (obs.slo schema), bounded; written
+        # at finish/shed time, consumed by obs.slo.evaluate.
+        self.records: OrderedDict = OrderedDict()
+        self.max_queue = max_queue
         self.metrics_path = metrics_path
         self.trace_path = trace_path
         self.router_health_every = router_health_every
@@ -309,23 +327,57 @@ class Scheduler:
         histogram (p50/p90/p99) instead."""
         return self._ttft
 
-    def _record_ttft(self, rid: int, dt: float) -> None:
-        self._ttft[rid] = dt
+    def _record_ttft(self, r: _Request, dt: float) -> None:
+        r.ttft = dt
+        self._ttft[r.rid] = dt
         while len(self._ttft) > TTFT_KEEP:
             self._ttft.popitem(last=False)
-        obs.registry().observe("serve.ttft_s", dt)
+        reg = obs.registry()
+        reg.observe("serve.ttft_s", dt)
+        if r.tenant:
+            reg.observe("serve.ttft_s", dt, tenant=r.tenant)
+
+    def _record(self, r: _Request, outcome: str,
+                queue_delay: float = 0.0, tpot=None) -> None:
+        """Append ``r``'s SLO record (obs.slo schema — parity with
+        ``records_from_spans`` is tested)."""
+        self.records[r.rid] = {
+            "rid": r.rid, "tenant": r.tenant, "outcome": outcome,
+            "t_arrival": r.t_arrival, "queue_delay_s": queue_delay,
+            "ttft_s": r.ttft, "tpot_s": tpot,
+            "new_tokens": len(r.generated)}
+        while len(self.records) > RECORDS_KEEP:
+            self.records.popitem(last=False)
 
     def _in_flight(self) -> int:
         return sum(s is not None for s in self._slots)
 
     # ----------------------------------------------------------- interface
-    def submit(self, prompt, max_new: int) -> int:
+    def submit(self, prompt, max_new: int, tenant: str = "") -> int:
         rid = len(self.results) + len(self.queue) + \
             sum(s is not None for s in self._slots)
+        now = obs.tracer().now()
+        reg = obs.registry()
+        reg.inc("serve.submitted")
+        if tenant:
+            reg.inc("serve.submitted", tenant=tenant)
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            # Admission control: shed rather than queue past the depth cap
+            # (the queued request's TTFT would already be forfeit — see
+            # __init__ docstring).  The caller still gets a result (empty).
+            r = _Request(rid, jnp.zeros((0,), jnp.int32), 0,
+                         t_submit=now, t_arrival=now, tenant=tenant)
+            self.results[rid] = jnp.zeros((0,), jnp.int32)
+            self._record(r, "shed")
+            reg.inc("serve.shed")
+            if tenant:
+                reg.inc("serve.shed", tenant=tenant)
+            obs.tracer().instant("shed", track=f"req{rid}", tenant=tenant)
+            return rid
         self.queue.append(_Request(rid, jnp.asarray(prompt, jnp.int32),
-                                   max_new, t_submit=obs.tracer().now()))
-        obs.registry().inc("serve.submitted")
-        obs.registry().set("serve.queue_depth", len(self.queue))
+                                   max_new, t_submit=now, t_arrival=now,
+                                   tenant=tenant))
+        reg.set("serve.queue_depth", len(self.queue))
         return rid
 
     # ------------------------------------------------------------- helpers
@@ -369,16 +421,24 @@ class Scheduler:
         self.results[r.rid] = jnp.asarray(r.generated, jnp.int32)
         reg, tr = obs.registry(), obs.tracer()
         now = tr.now()
+        tpot = None
         if s.get("t_first") is not None:
             tr.add("decode", s["t_first"], now, track=f"req{r.rid}",
                    tokens=len(r.generated))
             if len(r.generated) >= 2:
                 # per-token decode latency over the post-first-token run
-                reg.observe("serve.tpot_s",
-                            (now - s["t_first"]) / (len(r.generated) - 1))
-        tr.instant("finish", track=f"req{r.rid}", tokens=len(r.generated))
+                tpot = (now - s["t_first"]) / (len(r.generated) - 1)
+                reg.observe("serve.tpot_s", tpot)
+                if r.tenant:
+                    reg.observe("serve.tpot_s", tpot, tenant=r.tenant)
+        tr.instant("finish", track=f"req{r.rid}", tokens=len(r.generated),
+                   tenant=r.tenant)
         reg.inc("serve.finished")
+        if r.tenant:
+            reg.inc("serve.finished", tenant=r.tenant)
         reg.inc("serve.generated_tokens", len(r.generated))
+        self._record(r, "finished", queue_delay=s.get("queue_delay", 0.0),
+                     tpot=tpot)
         self._free_slot(b)
         reg.set("serve.in_flight", self._in_flight())
 
@@ -402,6 +462,8 @@ class Scheduler:
         r.t_submit = now                 # requeue restarts the queue wait
         self.stats["preemptions"] += 1
         reg.inc("serve.preempted")
+        if r.tenant:
+            reg.inc("serve.preempted", tenant=r.tenant)
         reg.set("serve.in_flight", self._in_flight())
 
     def _pending_same_prefix(self, prompt_np, P) -> bool:
@@ -499,6 +561,12 @@ class Scheduler:
         now = tr.now()
         tr.add("queued", r.t_submit, now, track=f"req{r.rid}")
         reg.inc("serve.admitted")
+        # Queue delay of THIS admission (t_submit restarts on requeue) —
+        # the wait component §12 separates from service time.
+        queue_delay = now - r.t_submit
+        reg.observe("serve.queue_delay_s", queue_delay)
+        if r.tenant:
+            reg.observe("serve.queue_delay_s", queue_delay, tenant=r.tenant)
         if node is not None:
             reg.observe("serve.prefix_hit_frac", depth / max(P, 1),
                         bounds=obs.UNIT_BOUNDS)
@@ -507,7 +575,8 @@ class Scheduler:
                           "seq": self._admit_seq, "phase": "prefill",
                           "prompt_np": prompt_np, "done": depth,
                           "insert_at": insert_at, "paused_snap": None,
-                          "t_admit": now, "t_first": None}
+                          "t_admit": now, "t_first": None,
+                          "queue_delay": queue_delay}
         self._admit_seq += 1
         self.stats["max_concurrent"] = max(
             self.stats["max_concurrent"],
@@ -592,11 +661,18 @@ class Scheduler:
                 r = s["req"]
                 r.generated.append(int(tok0[0]))
                 now = tr.now()
+                # resumed=True marks a post-preemption re-prefill (the
+                # request already produced its first token in an earlier
+                # life) — records_from_spans must not read TTFT off it.
                 tr.add("prefill", s["t_admit"], now, track=f"req{r.rid}",
-                       prompt=len(s["prompt_np"]))
+                       prompt=len(s["prompt_np"]),
+                       resumed=r.ttft is not None)
                 s["t_first"] = now
-                if r.rid not in self._ttft and self._t0 is not None:
-                    self._record_ttft(r.rid, time.monotonic() - self._t0)
+                if r.ttft is None:
+                    # Arrival-based TTFT (§12): first token minus submit
+                    # time, queue wait included — under load the queue IS
+                    # the latency.  Survives preemption via t_arrival.
+                    self._record_ttft(r, now - r.t_arrival)
                 self._sample_router_health(b)
                 cur = cur.at[b, 0].set(int(tok0[0]))
                 if len(r.generated) >= r.max_new or int(tok0[0]) == self.eos:
@@ -715,23 +791,48 @@ class Scheduler:
         return True
 
     # ---------------------------------------------------------------- run
-    def run(self, max_steps: int = 1000):
+    def run(self, max_steps: int = 1000, source=None):
         """Serve every queued request; returns {rid: generated tokens}.
         Semantics mirror ``RequestPool.run`` (EOS, per-request ``max_new``,
-        global ``max_steps`` decode budget)."""
+        global ``max_steps`` decode budget).
+
+        **Timed mode** (DESIGN §12): ``source`` is a duck-typed arrival
+        stream (``repro.serve.loadgen`` builds them) that SUBMITS requests
+        at their arrival times instead of the caller pre-queueing
+        everything — the closed-loop/open-loop traffic the SLO bench
+        drives.  Protocol: ``pump(sched, now)`` submits every request due
+        by ``now`` (seconds since ``run()`` started), ``exhausted()`` says
+        no more arrivals will ever come, ``next_arrival_in(now)`` is the
+        wait until the next one (None for "when in-flight work completes").
+        The loop runs until the source is exhausted AND the system drains;
+        while idle between arrivals it sleeps (≤50 ms slices) rather than
+        spinning."""
         srv = self.server
         B = srv.batch
         cur = jnp.zeros((B, 1), jnp.int32)
         key = jax.random.PRNGKey(0)
         steps = 0
-        self._t0 = time.monotonic()
+        timer = obs.registry().timer("serve.run_s")
+        timer.__enter__()
+        t_run0 = obs.tracer().now()
 
         def by_phase(phase):
             return [b for b in range(B) if self._slots[b] is not None
                     and self._slots[b]["phase"] == phase]
 
         with srv.mesh, hints.sharding_hints(mesh=srv.mesh):
-            while self.queue or any(s is not None for s in self._slots):
+            while True:
+                if source is not None:
+                    source.pump(self, obs.tracer().now() - t_run0)
+                if not self.queue and \
+                        all(s is None for s in self._slots):
+                    if source is None or source.exhausted():
+                        break
+                    wait = source.next_arrival_in(
+                        obs.tracer().now() - t_run0)
+                    if wait is not None and wait > 0:
+                        time.sleep(min(wait, 0.05))
+                    continue
                 for b in range(B):
                     if self._slots[b] is None and self.queue \
                             and steps < max_steps:
@@ -813,10 +914,13 @@ class Scheduler:
                                 len(r.generated) >= r.max_new:
                             self._finish(b)
                             break
+        timer.__exit__(None, None, None)
         reg = obs.registry()
         if reg.enabled:
-            dt = max(time.monotonic() - self._t0, 1e-9)
+            # timer.dt is measured even with obs off (only the histogram
+            # write is gated) — the registry.timer contract.
             reg.set("serve.tokens_per_s",
-                    reg.counter("serve.generated_tokens").value / dt)
+                    reg.counter("serve.generated_tokens").value /
+                    max(timer.dt, 1e-9))
         obs.dump(self.metrics_path, self.trace_path, tag="scheduler")
         return dict(self.results)

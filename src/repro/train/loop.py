@@ -19,7 +19,6 @@ checkpoint, and the step counter rides in the manifest.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 import jax
@@ -195,7 +194,8 @@ class Trainer:
         if not reg.enabled:
             return
         reg.set("train.step", i)
-        reg.observe("train.step_time_s", dt)
+        # train.step_time_s is observed by the step's registry.timer scope;
+        # recording it here too would double-count.
         reg.set("train.tokens_per_s",
                 metrics.get("tokens", 0.0) / max(dt, 1e-9))
         for k in ("loss", "ce", "ppl", "aux", "grad_norm"):
@@ -223,15 +223,18 @@ class Trainer:
                 for i in range(start, steps):
                     data_step, batch = prefetch.next()
                     batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                    t0 = time.perf_counter()
-                    with obs.tracer().span("train_step", track="train",
-                                           step=i):
+                    # timer.dt keeps feeding the straggler monitor and the
+                    # log line even with obs off (only the histogram write
+                    # is gated — the registry.timer contract).
+                    with obs.registry().timer("train.step_time_s") as tm, \
+                            obs.tracer().span("train_step", track="train",
+                                              step=i):
                         params, opt_state, step, metrics = self.train_step(
                             params, opt_state, step, batch)
                         # the ONE host sync of the step — in-step health
                         # stats ride it as extra metric keys (DESIGN §11)
                         metrics = {k: float(v) for k, v in metrics.items()}
-                    dt = time.perf_counter() - t0
+                    dt = tm.dt
                     straggler = self.monitor.record(i, dt)
                     if hb:
                         hb.beat(i)

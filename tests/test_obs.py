@@ -70,9 +70,17 @@ def test_registry_disabled_zero_writes():
     h = reg.histogram("d")
     h.observe(1.0)
     assert h.summary() == {}
-    assert reg.snapshot() == {"counters": {}, "gauges": {}, "histograms": {}}
+    assert reg.snapshot() == {"counters": {}, "gauges": {},
+                              "gauges_meta": {}, "histograms": {}}
     assert reg._metrics == {}
     assert publish({"x": 1.0}, "p.", reg=reg) == {}
+    # labeled calls are just as write-free
+    reg.inc("a", tenant="x")
+    reg.observe("c", 0.5, tenant="x")
+    with reg.timer("t", tenant="x") as t:
+        pass
+    assert t.dt >= 0.0                      # the clock still ran
+    assert reg._metrics == {}
 
 
 # --------------------------------------------------------------- histogram
@@ -296,7 +304,7 @@ def test_scheduler_obs_off_noop():
     obs.set_enabled(False)
     sched, rids = _run_mix(server, [5, 9], 3)
     assert obs.registry().snapshot() == \
-        {"counters": {}, "gauges": {}, "histograms": {}}
+        {"counters": {}, "gauges": {}, "gauges_meta": {}, "histograms": {}}
     assert len(obs.tracer()) == 0
     assert all(r in sched.ttft for r in rids)     # ttft survives obs-off
 
